@@ -1,0 +1,122 @@
+"""Shared benchmark machinery.
+
+Every figure benchmark emits CSV rows  `name,us_per_call,derived`  where
+`derived` carries the figure's metric (NAG etc.) and us_per_call the mean
+wall time per request for the policy.  Sizes are reduced by default so the
+whole suite runs on CPU in minutes; pass --full for paper-scale runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core import oma, policy, trace
+from repro.core.costs import calibrate_fetch_cost, pairwise_dissimilarity
+
+
+@dataclass
+class BenchSetup:
+    name: str
+    catalog: np.ndarray
+    requests: np.ndarray
+    ids: np.ndarray
+    cat_j: jnp.ndarray
+    oracle: B.ServerOracle
+    cf_table: dict  # i-th neighbour -> avg distance
+
+
+def _cf_table(cat_j, kths=(2, 10, 50, 100, 500, 1000)):
+    out = {}
+    for i in kths:
+        if i < cat_j.shape[0]:
+            out[i] = float(calibrate_fetch_cost(cat_j, kth=i, sample=256))
+    return out
+
+
+@lru_cache(maxsize=4)
+def get_setup(kind: str, n: int, t: int, d: int = 32, kmax: int = 128) -> BenchSetup:
+    gen = trace.sift_like if kind == "sift" else trace.amazon_like
+    catalog, reqs, ids = gen(n=n, d=d, t=t)
+    cat_j = jnp.array(catalog)
+    oracle = B.ServerOracle(catalog, reqs, kmax=kmax)
+    return BenchSetup(kind, catalog, reqs, ids, cat_j, oracle, _cf_table(cat_j))
+
+
+def run_acai(setup: BenchSetup, *, h, k, c_f, eta=None, mirror="negentropy",
+             rounding="coupled", round_every=1, c_remote=64, c_local=16,
+             candidate_fn=None, requests=None):
+    """Returns (metrics dict, seconds_per_request)."""
+    reqs = setup.requests if requests is None else requests
+    eta = eta if eta is not None else 0.05 / c_f
+    cfg = policy.AcaiConfig(
+        h=h, k=k, c_f=c_f, c_remote=c_remote, c_local=c_local,
+        oma=oma.OMAConfig(eta=eta, mirror=mirror, rounding=rounding,
+                          round_every=round_every),
+    )
+    fn = candidate_fn or policy.exact_candidate_fn(setup.cat_j, c_remote, c_local)
+    replay = policy.make_replay(cfg, fn)
+    state = policy.init_state(setup.cat_j.shape[0], cfg)
+    t0 = time.time()
+    state, m = replay(state, jnp.array(reqs))
+    m.gain_int.block_until_ready()
+    dt = (time.time() - t0) / reqs.shape[0]
+    return {
+        "gain": np.array(m.gain_int), "gain_frac": np.array(m.gain_frac),
+        "fetched": np.array(m.fetched), "occupancy": np.array(m.occupancy),
+        "served_local": np.array(m.served_local), "state": state,
+    }, dt
+
+
+def run_baseline(setup: BenchSetup, name: str, *, h, k, c_f, k_prime=None,
+                 c_theta=None, augmented=False, requests=None, seed=0):
+    reqs = setup.requests if requests is None else requests
+    cls = B.POLICIES[name]
+    kwargs = dict(h=h, k=k, c_f=c_f, augmented=augmented, seed=seed)
+    if name in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
+        kwargs.update(k_prime=k_prime or 2 * k, c_theta=c_theta or 1.5 * c_f)
+    p = cls(setup.catalog, setup.oracle, **kwargs)
+    t0 = time.time()
+    m = B.run_policy(p, reqs)
+    dt = (time.time() - t0) / reqs.shape[0]
+    return m, dt
+
+
+def tune_baseline(setup, name, *, h, k, c_f, requests=None):
+    """Paper protocol: grid-search (k', C_theta) and keep the best NAG."""
+    if name not in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
+        m, dt = run_baseline(setup, name, h=h, k=k, c_f=c_f, requests=requests)
+        return B.nag(m["gain"], k, c_f)[-1], m, dt
+    best = (-np.inf, None, None)
+    for kp in {k, 2 * k, min(4 * k, h)}:
+        for ct in (1.0 * c_f, 1.5 * c_f, 2.0 * c_f):
+            m, dt = run_baseline(setup, name, h=h, k=k, c_f=c_f,
+                                 k_prime=kp, c_theta=ct, requests=requests)
+            v = B.nag(m["gain"], k, c_f)[-1]
+            if v > best[0]:
+                best = (v, m, dt)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def std_args(desc: str):
+    p = argparse.ArgumentParser(description=desc)
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale sizes (slow on CPU)")
+    p.add_argument("--trace", default="sift", choices=["sift", "amazon"])
+    return p
+
+
+def sizes(full: bool):
+    return dict(n=20000, t=30000) if full else dict(n=4000, t=4000)

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: µs/call for the distance/ADC paths.
+
+On CPU the Pallas kernels run in interpret mode (a correctness harness, not
+a perf path), so the XLA-fused implementations are the CPU-meaningful
+numbers; the Pallas timings are emitted for completeness and marked as
+interpreted.  On TPU the same call sites dispatch to the compiled kernels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(
+        *args
+    ).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def main(full: bool = False, kind: str = "sift") -> None:
+    rng = np.random.default_rng(0)
+    q_n, db_n, d = (256, 100_000, 128) if full else (64, 20_000, 64)
+    q = jnp.array(rng.normal(size=(q_n, d)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(db_n, d)).astype(np.float32))
+
+    us = _time(ops.pairwise_l2_xla, q, x)
+    flops = 2 * q_n * db_n * d
+    common.emit("kernel/pairwise_l2/xla", us, f"GFLOPs={flops / us / 1e3:.1f}")
+
+    us = _time(lambda a, b: ops.topk_l2(a, b, 16, interpret=True)[0], q[:8], x[:2048])
+    common.emit("kernel/l2_topk/pallas-interpret(8x2048)", us, "correctness-path")
+
+    m, c = 16, 256
+    lut = jnp.array(rng.random((q_n, m, c)).astype(np.float32))
+    codes = jnp.array(rng.integers(0, c, (db_n, m)).astype(np.int32))
+    us = _time(ops.pq_adc_xla, lut, codes)
+    common.emit("kernel/pq_adc/xla", us,
+                f"bytes={db_n * m}→GBps={db_n * m / us / 1e3:.2f}")
+    us = _time(lambda a, b: ops.pq_adc(a, b, interpret=True), lut[:2], codes[:2048])
+    common.emit("kernel/pq_adc/pallas-interpret(2x2048)", us, "correctness-path")
+
+
+if __name__ == "__main__":
+    args = common.std_args(__doc__).parse_args()
+    main(args.full, args.trace)

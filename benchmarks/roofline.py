@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), derives
+the three roofline terms per (arch x shape x mesh) using the TPU v5e
+constants, identifies the dominant bottleneck, and emits the §Roofline
+table (markdown + CSV).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_HBM_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_shard / link_bw
+  MODEL_FLOPS (global) = 6 N_active D (train) | 2 N_active D (prefill)
+                         | 2 N_active B (decode, per emitted token)
+  roofline_fraction = [MODEL_FLOPS / (chips * peak)] / max(terms)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link (ICI)
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["params_active"]
+    b, s = rec["global_batch"], rec["seq_len"]
+    if rec["kind"] == "train":
+        return 6.0 * n * b * s
+    if rec["kind"] == "prefill":
+        return 2.0 * n * b * s
+    return 2.0 * n * b  # decode: one token per sequence
+
+
+def derive(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "hlo" not in rec:
+        return None
+    h = rec["hlo"]
+    chips = rec["n_devices"]
+    compute = h["flops_per_device"] / PEAK_FLOPS
+    memory = h["hbm_bytes_per_device"] / HBM_BW
+    coll = sum(h["collective_bytes_per_shard"].values()) / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    ideal = mf / (chips * PEAK_FLOPS)
+    bound = max(terms.values())
+    hlo_global = h["flops_per_device"] * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+        "mem_gb_per_dev": (rec.get("params_bytes_per_device", 0)
+                           + rec.get("opt_bytes_per_device", 0)
+                           + rec.get("cache_bytes_per_device", 0)) / 2**30,
+        "collective_counts": h.get("collective_counts", {}),
+        "coll_by_class": h.get("collective_bytes_per_shard", {}),
+    }
+
+
+def suggestion(row: dict) -> str:
+    if row["dominant"] == "memory":
+        if row["kind"] == "train":
+            return ("fuse attention/softmax traffic (flash path), cut remat "
+                    "re-reads")
+        return "shrink cache dtype / fuse decode gathers"
+    if row["dominant"] == "collective":
+        return ("overlap grad all-reduce with backward; shard/reschedule "
+                "the dominant collective class")
+    if row["useful_ratio"] < 0.5:
+        return "reduce remat recompute + non-model flops (attention/dispatch)"
+    return "increase arithmetic intensity (larger per-chip tiles)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single",
+                    help="mesh for the table (single|multi|both)")
+    ap.add_argument("--csv", default="")
+    args = ap.parse_args()
+
+    rows, skips, fails = [], [], []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+            continue
+        if rec.get("status") != "ok":
+            fails.append(rec)
+            continue
+        row = derive(rec)
+        if row and (args.mesh == "both" or row["mesh"] == args.mesh):
+            rows.append(row)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'mesh':6s} | compute(s) | "
+           f"memory(s) | collect(s) | dominant   | 6ND/HLO | roofline |")
+    print(hdr)
+    print("|" + "-" * (len(hdr) - 2) + "|")
+    for r in rows:
+        print(f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:6s} "
+              f"| {r['compute_s']:10.4f} | {r['memory_s']:9.4f} "
+              f"| {r['collective_s']:10.4f} | {r['dominant']:10s} "
+              f"| {r['useful_ratio']:7.3f} | {r['roofline_fraction']:8.3f} |")
+    print(f"\n{len(rows)} cells ok, {len(skips)} skipped, "
+          f"{len(fails)} failed")
+    for rec in skips:
+        print(f"  skip: {rec['arch']} {rec['shape']} {rec['mesh']}: "
+              f"{rec['reason']}")
+    for rec in fails:
+        print(f"  FAIL: {rec['arch']} {rec['shape']} {rec['mesh']}: "
+              f"{rec.get('error', '?')[:120]}")
+
+    if args.csv:
+        import csv as _csv
+        with open(args.csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=[k for k in rows[0]
+                                               if k not in (
+                                                   "collective_counts",
+                                                   "coll_by_class")])
+            w.writeheader()
+            for r in rows:
+                w.writerow({k: v for k, v in r.items()
+                            if k not in ("collective_counts",
+                                         "coll_by_class")})
+        print("wrote", args.csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver.
+
+Default: reduced CPU-friendly sizes (minutes).  ``--full`` = paper-scale.
+``--only figN`` runs a single harness.  The roofline/dry-run analyses are
+separate (``python -m benchmarks.roofline`` after ``launch/dryrun.py``) since
+they operate on compiled artifacts, not wall time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--trace", default=None, choices=[None, "sift", "amazon"])
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_gain_vs_requests, fig2_gain_vs_h,
+                            fig3_gain_vs_cf, fig4_gain_vs_k, fig5_sensitivity,
+                            fig6_mirror_maps, fig7_dissect, fig8_rounding,
+                            kernel_bench, regret, serve_bench)
+
+    suites = {
+        "fig1": (fig1_gain_vs_requests, ["sift", "amazon"]),
+        "fig2": (fig2_gain_vs_h, ["sift"]),
+        "fig3": (fig3_gain_vs_cf, ["sift"]),
+        "fig4": (fig4_gain_vs_k, ["sift"]),
+        "fig5": (fig5_sensitivity, ["sift"]),
+        "fig6": (fig6_mirror_maps, ["sift"]),
+        "fig7": (fig7_dissect, ["sift", "amazon"]),
+        "fig8": (fig8_rounding, ["amazon"]),
+        "regret": (regret, ["sift"]),
+        "kernels": (kernel_bench, ["sift"]),
+        "serve": (serve_bench, ["sift"]),
+    }
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, (mod, kinds) in suites.items():
+        if args.only and args.only != name:
+            continue
+        for kind in ([args.trace] if args.trace else kinds):
+            t0 = time.time()
+            try:
+                mod.main(args.full, kind)
+                print(f"# {name}/{kind} done in {time.time() - t0:.0f}s",
+                      file=sys.stderr)
+            except Exception:  # noqa: BLE001 — keep the suite running
+                failures += 1
+                print(f"# {name}/{kind} FAILED", file=sys.stderr)
+                traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — AÇAI: Ascent Similarity Caching with Approximate Indexes.
+
+A production-grade JAX serving/training framework whose retrieval tier
+implements the AÇAI similarity-caching policy (Si Salem, Neglia, Carra 2021)
+with approximate kNN indexes, online mirror ascent cache updates, and
+multi-pod distribution via pjit/shard_map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,40 @@
+"""AÇAI core — the paper's contribution as composable JAX modules.
+
+  costs       — dissimilarity/fetching cost model, augmented catalog (Sec. II/IV-A)
+  gain        — service cost Eq. (5), caching gain Eq. (7), subgradient Eq. (55)
+  mirror      — mirror maps (negative entropy / Euclidean)
+  projection  — Bregman projections onto the capped simplex (Sec. IV-F)
+  oma         — Online Mirror Ascent, Algorithm 1
+  rounding    — DepRound + CoupledRounding (App. F)
+  policy      — AcaiCache: serving (Eq. 2) + state updates, trace replay
+  baselines   — LRU, SIM-LRU, CLS-LRU, RND-LRU, QCACHE (Sec. II/V)
+  trace       — SIFT-like / Amazon-like synthetic traces (Sec. V-A)
+  ref         — pure-numpy oracles for every equation (test-only)
+"""
+
+from repro.core.costs import CostModel, calibrate_fetch_cost, pairwise_dissimilarity
+from repro.core.gain import gain_and_subgradient, gain_value, serve
+from repro.core.oma import OMAConfig, oma_update, theoretical_eta, uniform_state
+from repro.core.policy import AcaiCache, AcaiConfig, init_state, make_replay, make_step
+from repro.core.rounding import coupled_rounding, depround, independent_rounding
+
+__all__ = [
+    "AcaiCache",
+    "AcaiConfig",
+    "CostModel",
+    "OMAConfig",
+    "calibrate_fetch_cost",
+    "coupled_rounding",
+    "depround",
+    "gain_and_subgradient",
+    "gain_value",
+    "independent_rounding",
+    "init_state",
+    "make_replay",
+    "make_step",
+    "oma_update",
+    "pairwise_dissimilarity",
+    "serve",
+    "theoretical_eta",
+    "uniform_state",
+]

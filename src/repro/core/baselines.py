@@ -1,0 +1,386 @@
+"""State-of-the-art similarity-caching baselines (paper Sec. II and Sec. V).
+
+All baselines maintain an ordered list of key->value pairs (key = a past
+request embedding, value = its k' closest catalog objects) and update it
+LRU-style; the cache size is h objects, i.e. h // k' entries (the paper's
+inefficiency (i): overlapping value sets still consume separate slots).
+
+  LRU      — exact-match only (k' = k): hit iff the request equals a key.
+  SIM-LRU  — l = 1: hit iff the closest key is within C_theta.
+  CLS-LRU  — SIM-LRU + hypersphere-center updates (medoid of served history).
+  RND-LRU  — SIM-LRU with randomised miss: P(miss | d) increasing in d.
+  QCACHE   — k' = k, l > 1: merge the l closest entries' values; hit iff
+             >= 2 selected objects are *guaranteed* true neighbours (ball
+             containment argument of Falchi et al.) or the distance profile
+             matches the stored entries' profiles.
+
+They are deliberately plain numpy + python: these are sequential
+data-structure policies used as baselines; the JAX hot path is AÇAI itself.
+
+`augmented=True` gives every policy AÇAI's serving rule (Fig. 7/11-13 of the
+paper): the answer is composed per-object from the union of cached objects
+(cost c_d) and the server's kNN (cost c_d + c_f), while the cache-update
+logic stays untouched.  This isolates how much of AÇAI's edge comes from
+the indexes vs from the OMA updates.
+
+Geometric tests (QCACHE) run in *Euclidean* distance (triangle inequality);
+costs are whatever the CostModel says (squared Euclidean by default), exactly
+as in the paper's experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Server oracle: precomputed exact kNN answers for every trace request.
+# --------------------------------------------------------------------------
+
+class ServerOracle:
+    """Exact kNN answers from the remote server, precomputed in batch."""
+
+    def __init__(self, catalog: np.ndarray, requests: np.ndarray, kmax: int,
+                 chunk: int = 512):
+        self.catalog = catalog.astype(np.float32)
+        t = requests.shape[0]
+        kmax = min(kmax, catalog.shape[0])
+        self.kmax = kmax
+        self.ids = np.empty((t, kmax), np.int32)
+        self.d2 = np.empty((t, kmax), np.float32)  # squared euclidean
+        cn = (self.catalog ** 2).sum(1)
+        for s in range(0, t, chunk):
+            q = requests[s:s + chunk].astype(np.float32)
+            d2 = (q ** 2).sum(1)[:, None] - 2.0 * q @ self.catalog.T + cn[None, :]
+            np.maximum(d2, 0.0, out=d2)
+            part = np.argpartition(d2, kmax - 1, axis=1)[:, :kmax]
+            pd = np.take_along_axis(d2, part, axis=1)
+            order = np.argsort(pd, axis=1, kind="stable")
+            self.ids[s:s + chunk] = np.take_along_axis(part, order, axis=1)
+            self.d2[s:s + chunk] = np.take_along_axis(pd, order, axis=1)
+
+    def knn(self, t: int, k: int):
+        return self.ids[t, :k], self.d2[t, :k]
+
+    def empty_cost(self, t: int, k: int, c_f: float, metric: str = "sqeuclidean"):
+        d = self.d2[t, :k] if metric == "sqeuclidean" else np.sqrt(self.d2[t, :k])
+        return float(d.sum() + k * c_f)
+
+
+def _dist2(q: np.ndarray, pts: np.ndarray) -> np.ndarray:
+    diff = pts - q[None, :]
+    return np.maximum((diff * diff).sum(1), 0.0)
+
+
+@dataclasses.dataclass
+class StepResult:
+    cost: float
+    gain: float
+    hit: bool
+    served_local: int
+    fetched: int  # objects fetched into the cache this step
+
+
+class _Entry:
+    __slots__ = ("key_emb", "value_ids", "value_d2_key", "history")
+
+    def __init__(self, key_emb, value_ids, value_d2_key):
+        self.key_emb = key_emb
+        self.value_ids = value_ids            # (k',) catalog ids
+        self.value_d2_key = value_d2_key      # (k',) squared dist to key
+        self.history: deque = deque(maxlen=16)
+
+
+class KeyValueCache:
+    """Shared machinery for the LRU-family policies."""
+
+    name = "base"
+
+    def __init__(self, catalog: np.ndarray, oracle: ServerOracle, *, h: int,
+                 k: int, c_f: float, k_prime: Optional[int] = None,
+                 c_theta: Optional[float] = None, metric: str = "sqeuclidean",
+                 augmented: bool = False, seed: int = 0):
+        self.catalog = catalog
+        self.oracle = oracle
+        self.h, self.k = h, k
+        self.k_prime = k_prime or k
+        self.max_entries = max(h // self.k_prime, 1)
+        self.c_f = c_f
+        self.c_theta = c_theta if c_theta is not None else 1.5 * c_f
+        self.metric = metric
+        self.augmented = augmented
+        self.rng = np.random.default_rng(seed)
+        self.entries: "OrderedDict[int, _Entry]" = OrderedDict()  # MRU first
+        self._next_id = 0
+
+    # -- cost helpers -------------------------------------------------------
+
+    def _cost(self, d2: np.ndarray) -> np.ndarray:
+        return d2 if self.metric == "sqeuclidean" else np.sqrt(d2)
+
+    def cached_object_ids(self) -> np.ndarray:
+        if not self.entries:
+            return np.empty((0,), np.int32)
+        return np.unique(np.concatenate([e.value_ids for e in self.entries.values()]))
+
+    # -- LRU bookkeeping ----------------------------------------------------
+
+    def _touch(self, eid: int):
+        self.entries.move_to_end(eid, last=False)
+
+    def _insert(self, r_emb: np.ndarray, ids: np.ndarray, d2: np.ndarray) -> int:
+        eid = self._next_id
+        self._next_id += 1
+        self.entries[eid] = _Entry(r_emb.copy(), ids.copy(), d2.copy())
+        self.entries.move_to_end(eid, last=False)
+        evicted = 0
+        while len(self.entries) > self.max_entries:
+            self.entries.popitem(last=True)
+            evicted += 1
+        return evicted
+
+    # -- serving ------------------------------------------------------------
+
+    def _serve_from_ids(self, t: int, r_emb: np.ndarray, local_ids: np.ndarray
+                        ) -> StepResult:
+        """AÇAI-style per-object composition over local_ids + server kNN."""
+        srv_ids, srv_d2 = self.oracle.knn(t, self.k)
+        if local_ids.size:
+            loc_d2 = _dist2(r_emb, self.catalog[local_ids])
+            costs = np.concatenate([self._cost(loc_d2), self._cost(srv_d2) + self.c_f])
+            obj = np.concatenate([local_ids, srv_ids])
+            is_local = np.concatenate([np.ones(local_ids.size, bool),
+                                       np.zeros(self.k, bool)])
+        else:
+            costs = self._cost(srv_d2) + self.c_f
+            obj = srv_ids
+            is_local = np.zeros(self.k, bool)
+        # dedup: a cached object also in the server answer keeps the cheap copy
+        order = np.argsort(costs, kind="stable")
+        seen, pick = set(), []
+        for p in order:
+            if int(obj[p]) in seen:
+                continue
+            seen.add(int(obj[p]))
+            pick.append(p)
+            if len(pick) == self.k:
+                break
+        pick = np.array(pick)
+        cost = float(costs[pick].sum())
+        served_local = int(is_local[pick].sum())
+        gain = self.oracle.empty_cost(t, self.k, self.c_f, self.metric) - cost
+        return StepResult(cost, gain, served_local > 0, served_local, 0)
+
+    def _answer_cost_local(self, t: int, r_emb: np.ndarray, ids: np.ndarray
+                           ) -> StepResult:
+        """Serve k objects entirely from `ids` (approximate hit)."""
+        d2 = _dist2(r_emb, self.catalog[ids])
+        order = np.argsort(d2, kind="stable")[: self.k]
+        cost = float(self._cost(d2[order]).sum())
+        gain = self.oracle.empty_cost(t, self.k, self.c_f, self.metric) - cost
+        return StepResult(cost, gain, True, self.k, 0)
+
+    def _answer_cost_miss(self, t: int) -> StepResult:
+        cost = self.oracle.empty_cost(t, self.k, self.c_f, self.metric)
+        return StepResult(cost, 0.0, False, 0, self.k_prime)
+
+    # -- per-policy hooks ---------------------------------------------------
+
+    def _closest_entry(self, r_emb: np.ndarray):
+        if not self.entries:
+            return None, np.inf
+        eids = list(self.entries.keys())
+        keys = np.stack([self.entries[e].key_emb for e in eids])
+        d2 = _dist2(r_emb, keys)
+        j = int(np.argmin(d2))
+        return eids[j], self._cost(np.array([d2[j]]))[0]
+
+    def _is_hit(self, t: int, r_emb: np.ndarray):
+        raise NotImplementedError
+
+    def _on_hit(self, t, r_emb, eid):
+        self._touch(eid)
+
+    def step(self, t: int, r_emb: np.ndarray) -> StepResult:
+        hit, eid = self._is_hit(t, r_emb)
+        if hit:
+            self._on_hit(t, r_emb, eid)
+            entry = self.entries[eid]
+            if self.augmented:
+                res = self._serve_from_ids(t, r_emb, self.cached_object_ids())
+            else:
+                res = self._answer_cost_local(t, r_emb, entry.value_ids)
+            return res
+        ids, d2 = self.oracle.knn(t, self.k_prime)
+        self._insert(r_emb, ids, d2)
+        if self.augmented:
+            res = self._serve_from_ids(t, r_emb, self.cached_object_ids())
+            return StepResult(res.cost, res.gain, res.hit, res.served_local,
+                              self.k_prime)
+        return self._answer_cost_miss(t)
+
+
+class LRU(KeyValueCache):
+    """Naive exact-match similarity cache (paper Sec. V-B)."""
+
+    name = "LRU"
+
+    def __init__(self, *args, **kwargs):
+        kwargs.setdefault("k_prime", kwargs.get("k", None))
+        super().__init__(*args, **kwargs)
+        self._key_lookup: dict[bytes, int] = {}
+
+    def _is_hit(self, t, r_emb):
+        eid = self._key_lookup.get(r_emb.tobytes())
+        return (eid is not None and eid in self.entries), eid
+
+    def _insert(self, r_emb, ids, d2):
+        evicted = super()._insert(r_emb, ids, d2)
+        eid = next(iter(self.entries))
+        self._key_lookup[r_emb.tobytes()] = eid
+        return evicted
+
+
+class SimLRU(KeyValueCache):
+    name = "SIM-LRU"
+
+    def _is_hit(self, t, r_emb):
+        eid, d = self._closest_entry(r_emb)
+        return (eid is not None and d <= self.c_theta), eid
+
+
+class RndLRU(SimLRU):
+    """SIM-LRU with randomised hit decision: P(miss) grows with d."""
+
+    name = "RND-LRU"
+
+    def _is_hit(self, t, r_emb):
+        eid, d = self._closest_entry(r_emb)
+        if eid is None:
+            return False, None
+        p_miss = min(1.0, float(d) / max(self.c_theta, 1e-12))
+        return (self.rng.random() >= p_miss), eid
+
+
+class ClsLRU(SimLRU):
+    """SIM-LRU + center updates: on a hit the entry's key moves to the medoid
+    of its served-request history (pushes intersecting hyperspheres apart)."""
+
+    name = "CLS-LRU"
+
+    def _on_hit(self, t, r_emb, eid):
+        super()._on_hit(t, r_emb, eid)
+        e = self.entries[eid]
+        e.history.append(r_emb.copy())
+        if len(e.history) >= 2:
+            hist = np.stack(e.history)
+            cand = self.catalog[e.value_ids]
+            # medoid: cached object minimising total distance to the history
+            tot = ((cand[:, None, :] - hist[None, :, :]) ** 2).sum(-1).sum(1)
+            new_center = cand[int(np.argmin(tot))]
+            e.key_emb = new_center.copy()
+            e.value_d2_key = _dist2(new_center, cand)
+
+
+class QCache(KeyValueCache):
+    """QCACHE (Falchi et al. 2012): k' = k, search the l closest entries."""
+
+    name = "QCACHE"
+
+    def __init__(self, *args, l: Optional[int] = None, theta_guaranteed: int = 2,
+                 profile_tol: float = 1.25, **kwargs):
+        kwargs.setdefault("k_prime", kwargs.get("k"))
+        super().__init__(*args, **kwargs)
+        self.l = l  # None => all entries (paper: l = h/k)
+        self.theta_guaranteed = theta_guaranteed
+        self.profile_tol = profile_tol
+
+    def _is_hit(self, t, r_emb):
+        if not self.entries:
+            return False, None
+        eids = list(self.entries.keys())
+        keys = np.stack([self.entries[e].key_emb for e in eids])
+        dk = np.sqrt(_dist2(r_emb, keys))  # euclidean for geometry
+        take = np.argsort(dk, kind="stable")
+        if self.l is not None:
+            take = take[: self.l]
+        merged_ids, merged_guard = [], []
+        for j in take:
+            e = self.entries[eids[int(j)]]
+            rho = float(np.sqrt(e.value_d2_key.max()))  # covering radius
+            guard = rho - dk[int(j)]  # guarantee margin for this entry
+            merged_ids.append(e.value_ids)
+            merged_guard.append(np.full(e.value_ids.shape, guard))
+        ids = np.concatenate(merged_ids)
+        guard = np.concatenate(merged_guard)
+        d_obj = np.sqrt(_dist2(r_emb, self.catalog[ids]))
+        # keep best copy per object id
+        order = np.argsort(d_obj, kind="stable")
+        seen, pick = set(), []
+        for p in order:
+            if int(ids[p]) in seen:
+                continue
+            seen.add(int(ids[p]))
+            pick.append(p)
+            if len(pick) == self.k:
+                break
+        if len(pick) < self.k:
+            return False, take[0] if len(take) else None
+        pick = np.array(pick)
+        guaranteed = int((d_obj[pick] <= guard[pick] + 1e-12).sum())
+        if guaranteed >= self.theta_guaranteed:
+            return True, eids[int(take[0])]
+        # distance-profile test: mean distance of the selected k vs the mean
+        # key->value distance profile of the stored entries
+        prof = np.mean([np.sqrt(e.value_d2_key).mean()
+                        for e in self.entries.values()])
+        if d_obj[pick].mean() <= self.profile_tol * prof:
+            return True, eids[int(take[0])]
+        return False, eids[int(take[0])]
+
+    def _on_hit(self, t, r_emb, eid):
+        # touch every contributing entry (paper: pairs that contributed move
+        # to the front); we touch the closest one — the dominant contributor.
+        self._touch(eid)
+
+    def step(self, t, r_emb):
+        # QCACHE serves from the merged value sets, not a single entry.
+        hit, eid = self._is_hit(t, r_emb)
+        if hit:
+            self._on_hit(t, r_emb, eid)
+            ids = self.cached_object_ids()
+            if self.augmented:
+                return self._serve_from_ids(t, r_emb, ids)
+            return self._answer_cost_local(t, r_emb, ids)
+        ids, d2 = self.oracle.knn(t, self.k_prime)
+        self._insert(r_emb, ids, d2)
+        if self.augmented:
+            res = self._serve_from_ids(t, r_emb, self.cached_object_ids())
+            return StepResult(res.cost, res.gain, res.hit, res.served_local,
+                              self.k_prime)
+        return self._answer_cost_miss(t)
+
+
+POLICIES = {p.name: p for p in (LRU, SimLRU, ClsLRU, RndLRU, QCache)}
+
+
+def run_policy(policy: KeyValueCache, requests: np.ndarray):
+    """Replay a trace; returns dict of per-step metric arrays."""
+    t_total = requests.shape[0]
+    gain = np.zeros(t_total)
+    cost = np.zeros(t_total)
+    hits = np.zeros(t_total, bool)
+    fetched = np.zeros(t_total, np.int32)
+    for t in range(t_total):
+        res = policy.step(t, requests[t])
+        gain[t], cost[t], hits[t], fetched[t] = res.gain, res.cost, res.hit, res.fetched
+    return {"gain": gain, "cost": cost, "hit": hits, "fetched": fetched}
+
+
+def nag(gains: np.ndarray, k: int, c_f: float) -> np.ndarray:
+    """Normalised average gain curve, Eq. (11)."""
+    return np.cumsum(gains) / (k * c_f * np.arange(1, gains.shape[0] + 1))

@@ -1,0 +1,174 @@
+"""Distributed AÇAI: the paper's retrieval/caching step at pod scale.
+
+At production scale the catalog (10^8 x d embeddings) and the fractional
+cache state y live SHARDED over the `model` mesh axis; the request batch is
+data-parallel.  One serve+update step per request batch:
+
+  1. every chip scans its catalog shard with the (Pallas) distance kernel
+     and takes a local top-C            -> compute-bound, no comms
+  2. all-gather of per-shard top-C over `model` (tiny: C ids+dists/request)
+     and a top-C re-merge               -> the only quadratic-free exchange
+  3. per-request gain/subgradient on the merged candidates (Eq. 55)
+  4. subgradients routed to the owning y-shards via all_gather over `data`
+     + local mask (candidate traffic: B x C pairs, bytes not catalog-sized)
+  5. OMA multiplicative update + DISTRIBUTED capped-simplex projection:
+     per-shard top-A + per-shard tail sums are all-gathered (A x shards
+     scalars), the exact global water-filling scale is solved locally and
+     applied shard-wise — the O(N log N) sort of Sec. IV-F becomes
+     O(N/P log A) + an O(A.P) scalar exchange.
+
+The serve answer (ids/costs of the k cheapest augmented copies) comes out
+of the same merged candidate set.  This file is lowered by the dry-run as
+the paper-representative roofline cell (`acai-retrieval`).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gain as gain_lib
+from repro.core.costs import BIG_COST
+from repro.core.projection import _negentropy_scale_from_sorted
+
+
+def _local_topk_scan(requests, catalog, c: int, chunk: int):
+    """Fused distance+top-k over catalog chunks: never materialises the
+    (B, N_shard) distance matrix in HBM (the XLA analogue of the Pallas
+    l2_topk kernel — §Perf optimization for the retrieval cell)."""
+    n = catalog.shape[0]
+    qn = jnp.sum(requests * requests, axis=1, keepdims=True)
+    nchunks = max(n // chunk, 1)
+
+    def body(carry, j):
+        best_d, best_i = carry
+        blk = jax.lax.dynamic_slice_in_dim(catalog, j * chunk, chunk, 0)
+        cn = jnp.sum(blk * blk, axis=1)[None, :]
+        d2 = jnp.maximum(qn - 2.0 * requests @ blk.T + cn, 0.0)
+        ids = j * chunk + jnp.arange(chunk)[None, :]
+        cat_d = jnp.concatenate([best_d, d2], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(
+            ids, (requests.shape[0], chunk))], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, c)
+        return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    init = (jnp.full((requests.shape[0], c), jnp.inf, jnp.float32),
+            jnp.zeros((requests.shape[0], c), jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    return -best_d, best_i  # (neg-dist convention of lax.top_k callers)
+
+
+def make_retrieval_step(mesh, *, n_shard: int, d: int, c: int, k: int,
+                        c_f: float, h: int, eta: float, top_a: int,
+                        batch_axes=("data",), model_axis: str = "model",
+                        scan_chunk: int = 0):
+    """Returns step(catalog_shard, y, requests) -> (y_new, answer, metrics)
+    wrapped in shard_map over `mesh`.
+
+    catalog: (N, d) sharded P(model, None);  y: (N,) sharded P(model);
+    requests: (B, d) sharded P(batch_axes, None).
+    scan_chunk > 0 switches the local scan to the fused chunked top-k
+    (memory-roofline optimization; 0 = paper-faithful full matrix).
+    """
+    n_model = 1
+    for ax in ([model_axis] if isinstance(model_axis, str) else model_axis):
+        n_model *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+
+    def step(catalog, y, requests):
+        # ---- 1. local distance scan + top-C (per shard) -----------------
+        if scan_chunk:
+            neg, loc_ids = _local_topk_scan(requests, catalog, c, scan_chunk)
+            neg = -neg
+        else:
+            qn = jnp.sum(requests * requests, axis=1, keepdims=True)
+            cn = jnp.sum(catalog * catalog, axis=1)[None, :]
+            d2 = jnp.maximum(qn - 2.0 * requests @ catalog.T + cn, 0.0)
+            neg, loc_ids = jax.lax.top_k(-d2, c)             # (b, C)
+        my_shard = jax.lax.axis_index(model_axis)
+        glob_ids = loc_ids + my_shard * n_shard
+
+        # ---- 2. merge shards' candidates over `model` --------------------
+        all_d = jax.lax.all_gather(-neg, model_axis, axis=1,
+                                   tiled=True)                # (b, P*C)
+        all_ids = jax.lax.all_gather(glob_ids, model_axis, axis=1,
+                                     tiled=True)
+        negm, pos = jax.lax.top_k(-all_d, c)                  # global top-C
+        cand_ids = jnp.take_along_axis(all_ids, pos, axis=1)
+        cand_d = -negm
+
+        # candidate y values: gather from the sharded y via gather-all
+        # (y is (n_shard,) per chip; candidates span shards, so gather the
+        # candidate y's with a masked local lookup + psum over model)
+        local = (cand_ids >= my_shard * n_shard) & \
+                (cand_ids < (my_shard + 1) * n_shard)
+        safe = jnp.clip(cand_ids - my_shard * n_shard, 0, n_shard - 1)
+        y_cand = jnp.where(local, y[safe], 0.0)
+        y_cand = jax.lax.psum(y_cand, model_axis)             # (b, C)
+
+        # ---- 3. serve + subgradient (Eq. 2 / Eq. 55) ---------------------
+        serve = jax.vmap(lambda dd, xx: gain_lib.serve(dd, xx, k, c_f))(
+            cand_d, (y_cand > 0.5).astype(cand_d.dtype))
+        _, g_cand = jax.vmap(
+            lambda dd, yy: gain_lib.gain_and_subgradient(dd, yy, k, c_f))(
+            cand_d, y_cand)
+
+        # ---- 4. route subgradients to owning shards ----------------------
+        g_all = jax.lax.all_gather(g_cand, batch_axes, axis=0, tiled=True)
+        ids_all = jax.lax.all_gather(cand_ids, batch_axes, axis=0,
+                                     tiled=True)               # (B, C)
+        mine = (ids_all >= my_shard * n_shard) & \
+               (ids_all < (my_shard + 1) * n_shard)
+        local_idx = jnp.clip(ids_all - my_shard * n_shard, 0, n_shard - 1)
+        g_shard = jnp.zeros((n_shard,), y.dtype).at[
+            local_idx.reshape(-1)].add(
+            jnp.where(mine, g_all, 0.0).reshape(-1))
+
+        # ---- 5. OMA + distributed projection -----------------------------
+        z = y * jnp.exp(jnp.clip(eta * g_shard, -60.0, 60.0))
+        ztop, _ = jax.lax.top_k(z, top_a)
+        tail = jnp.sum(z) - jnp.sum(ztop)
+        heads = jax.lax.all_gather(ztop, model_axis, tiled=True)  # (P*A,)
+        tails = jax.lax.psum(tail, model_axis)
+        heads = jnp.sort(heads)[::-1]
+        s, _ = _negentropy_scale_from_sorted(heads, tails, float(h))
+        y_new = jnp.clip(jnp.minimum(1.0, z * s), 1e-12, 1.0)
+
+        metrics = {
+            "gain": jax.lax.pmean(jnp.mean(serve.gain), batch_axes),
+            "served_local": jax.lax.pmean(
+                jnp.mean(jnp.sum(serve.from_cache, axis=1).astype(jnp.float32)),
+                batch_axes),
+        }
+        return y_new, serve.answer_ids, metrics
+
+    return jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(P(model_axis, None), P(model_axis), P(batch_axes, None)),
+        out_specs=(P(model_axis), P(batch_axes, None),
+                   {"gain": P(), "served_local": P()}),
+        check_vma=False,
+    )
+
+
+def reference_step(catalog, y, requests, *, c, k, c_f, h, eta, top_a):
+    """Single-device oracle with identical semantics (for tests)."""
+    from repro.core import projection
+
+    d2 = jnp.maximum(
+        jnp.sum(requests ** 2, 1, keepdims=True)
+        - 2 * requests @ catalog.T + jnp.sum(catalog ** 2, 1)[None], 0.0)
+    neg, ids = jax.lax.top_k(-d2, c)
+    cand_d = -neg
+    y_cand = y[ids]
+    serve = jax.vmap(lambda dd, xx: gain_lib.serve(dd, xx, k, c_f))(
+        cand_d, (y_cand > 0.5).astype(cand_d.dtype))
+    _, g_cand = jax.vmap(
+        lambda dd, yy: gain_lib.gain_and_subgradient(dd, yy, k, c_f))(
+        cand_d, y_cand)
+    g = jnp.zeros_like(y).at[ids.reshape(-1)].add(g_cand.reshape(-1))
+    z = y * jnp.exp(jnp.clip(eta * g, -60.0, 60.0))
+    y_new = projection.capped_simplex_negentropy_topk(z, h, top_a)
+    return jnp.clip(y_new, 1e-12, 1.0), serve.answer_ids

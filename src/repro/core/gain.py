@@ -1,0 +1,190 @@
+"""Caching gain, service cost and subgradients (paper Sec. IV-D, App. B/C).
+
+All functions operate on a fixed-size *candidate set* of C objects — the
+union of kNN(r, local catalog) and kNN(r, remote catalog) returned by the two
+approximate indexes (Sec. IV-B/C).  Objects outside the candidate set cannot
+appear in the answer and have zero subgradient, so restricting the augmented
+catalog U = N ∪ {N+1..2N} to the candidates is exact as long as the candidate
+set contains the K^r cheapest augmented entries — guaranteed when C ≥ k
+catalog candidates are supplied (their remote copies alone drive sigma to k).
+
+Layout: every candidate i contributes two augmented entries,
+    entry i       (local copy,  cost d_i,        weight y_i)
+    entry i + C   (remote copy, cost d_i + c_f,  weight 1 - y_i)
+mirroring the paper's x_{i+N} = 1 - x_i coupling.  Invalid candidates
+(padding / duplicates across the two indexes) are passed with d_i = BIG_COST
+and y_i = 0 so they sort to the tail, keep sigma-accounting consistent, and
+never contribute before K^r.
+
+Everything is pure jnp + lax and jit/vmap-friendly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import BIG_COST
+
+
+class AugmentedOrder(NamedTuple):
+    """Sorted augmented-entry view of a candidate set for one request."""
+
+    costs: jax.Array      # (2C,) sorted ascending: c(r, pi_i)
+    weights: jax.Array    # (2C,) y_{pi_i} (fractional) or x (integral)
+    is_remote: jax.Array  # (2C,) bool
+    cand_of_entry: jax.Array  # (2C,) candidate slot of each sorted entry
+    lpos: jax.Array       # (C,) sorted position of candidate's local copy
+    rpos: jax.Array       # (C,) sorted position of candidate's remote copy
+
+
+def _augment_and_sort(d: jax.Array, y: jax.Array, c_f) -> AugmentedOrder:
+    c = d.shape[-1]
+    costs = jnp.concatenate([d, d + c_f])
+    weights = jnp.concatenate([y, 1.0 - y])
+    is_remote = jnp.concatenate(
+        [jnp.zeros((c,), bool), jnp.ones((c,), bool)]
+    )
+    order = jnp.argsort(costs, stable=True)
+    inv = jnp.argsort(order, stable=True)  # position of original entry j
+    return AugmentedOrder(
+        costs=costs[order],
+        weights=weights[order],
+        is_remote=is_remote[order],
+        cand_of_entry=jnp.where(order < c, order, order - c),
+        lpos=inv[:c],
+        rpos=inv[c:],
+    )
+
+
+def gain_value(d: jax.Array, y: jax.Array, k: int, c_f) -> jax.Array:
+    """Caching gain G(r, y) of Eq. (7) on a candidate set.
+
+    d: (C,) dissimilarities (BIG_COST on invalid slots)
+    y: (C,) fractional (or 0/1 integral) cache state of the candidates
+    """
+    a = _augment_and_sort(d, y, c_f)
+    s = jnp.cumsum(a.weights)                  # S_i = sum_{j<=i} w_{pi_j}
+    sig = jnp.cumsum(a.is_remote.astype(d.dtype))  # sigma_i
+    alpha = a.costs[1:] - a.costs[:-1]         # alpha_i = c_{i+1} - c_i
+    # terms for i = 1 .. K^r - 1  <=>  sigma_i < k (S_i >= sigma_i always).
+    active = sig[:-1] < k
+    inner = jnp.minimum(k - sig[:-1], s[:-1] - sig[:-1])
+    return jnp.sum(jnp.where(active, alpha * inner, 0.0))
+
+
+def gain_and_subgradient(
+    d: jax.Array, y: jax.Array, k: int, c_f
+) -> tuple[jax.Array, jax.Array]:
+    """G(r, y) and a subgradient g ∈ ∂_y G(r, y)  (Eq. 55, App. C).
+
+    The component for candidate l telescopes to
+        g_l = c(r, pi_{b_l + 1}) - d_l        if lpos_l <= b_l else 0,
+        b_l = min(rpos_l - 1, T),   T = max{i : S_i < k},
+    i.e. the paper's (c(r, pi_{i*+1}) - c(r, l)) * 1{l* <= i*} with the
+    per-component clamp 'remote copy of l not in the prefix'.
+    Returns (gain, g) with g of shape (C,) aligned to the candidate slots.
+    """
+    a = _augment_and_sort(d, y, c_f)
+    s = jnp.cumsum(a.weights)
+    sig = jnp.cumsum(a.is_remote.astype(d.dtype))
+    alpha = a.costs[1:] - a.costs[:-1]
+    active = sig[:-1] < k
+    inner = jnp.minimum(k - sig[:-1], s[:-1] - sig[:-1])
+    gain = jnp.sum(jnp.where(active, alpha * inner, 0.0))
+
+    two_c = a.costs.shape[0]
+    # T: last sorted position with S < k (S nondecreasing for y in [0,1]).
+    t = jnp.sum(s < k) - 1  # -1 if none
+    b = jnp.minimum(a.rpos - 1, t)
+    upper = jnp.take(a.costs, jnp.clip(b + 1, 0, two_c - 1))
+    g = jnp.where(a.lpos <= b, upper - d, 0.0)
+    g = jnp.maximum(g, 0.0)  # alpha_i >= 0 => g >= 0; guards float dust
+    return gain, g
+
+
+class ServeResult(NamedTuple):
+    answer_ids: jax.Array    # (k,) candidate-slot indices of the answer
+    from_cache: jax.Array    # (k,) bool — served locally?
+    answer_costs: jax.Array  # (k,) per-object cost c(r, .)
+    cost: jax.Array          # scalar C(r, x), Eq. (5)
+    gain: jax.Array          # scalar G(r, x), Eq. (6)
+
+
+def serve(d: jax.Array, x: jax.Array, k: int, c_f) -> ServeResult:
+    """Compose the answer per Eq. (2): first k available augmented entries.
+
+    x: (C,) integral cache indicator on the candidate slots.
+    An entry is available iff weight = 1 (local copies need x_i = 1; remote
+    copies are always available since x_{i+N} = 1 - x_i only gates the paper
+    bookkeeping — for integral x a remote copy has weight 1 iff x_i = 0, and
+    when x_i = 1 the *local* copy (strictly cheaper) precedes it, so taking
+    weight-1 entries in cost order is exactly the arg-min of Eq. (2).
+    """
+    a = _augment_and_sort(d, x, c_f)
+    w = a.weights > 0.5
+    rank = jnp.cumsum(w.astype(jnp.int32))
+    chosen = w & (rank <= k)
+    cost = jnp.sum(jnp.where(chosen, a.costs, 0.0))
+
+    # Gather the k chosen entries in order.
+    pos = jnp.nonzero(chosen, size=k, fill_value=a.costs.shape[0] - 1)[0]
+    answer_ids = a.cand_of_entry[pos]
+    from_cache = ~a.is_remote[pos]
+    answer_costs = a.costs[pos]
+
+    # Empty-cache cost: k closest catalog objects, all fetched remotely.
+    neg_top, _ = jax.lax.top_k(-d, k)
+    empty_cost = jnp.sum(-neg_top) + k * c_f
+    return ServeResult(answer_ids, from_cache, answer_costs, cost, empty_cost - cost)
+
+
+def empty_cache_cost(d: jax.Array, k: int, c_f) -> jax.Array:
+    """C(r, (0..0,1..1)): all k answers fetched from the server."""
+    neg_top, _ = jax.lax.top_k(-d, k)
+    return jnp.sum(-neg_top) + k * c_f
+
+
+# vmapped conveniences over a batch of requests -----------------------------
+
+gain_value_batch = jax.vmap(gain_value, in_axes=(0, 0, None, None))
+gain_and_subgradient_batch = jax.vmap(
+    gain_and_subgradient, in_axes=(0, 0, None, None)
+)
+serve_batch = jax.vmap(serve, in_axes=(0, 0, None, None))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def lower_bound_l(d: jax.Array, y: jax.Array, k: int, c_f) -> jax.Array:
+    """The multilinear lower bound L(r, y) of Eq. (15) (App. A).
+
+    L(r,y) = sum_i alpha_i (k - sigma_i) (1 - prod_{j in I_i} (1 - y_pi_j/(k-sigma_i)))
+    where I_i keeps local copies whose remote twin is not in the prefix.
+    Used by tests to check Lemma 1:  L(y) <= G(y) <= (1-1/e)^{-1} L(y).
+    """
+    a = _augment_and_sort(d, y, c_f)
+    two_c = a.costs.shape[0]
+    sig = jnp.cumsum(a.is_remote.astype(d.dtype))
+    alpha = a.costs[1:] - a.costs[:-1]
+    active = sig[:-1] < k
+
+    # I_i membership for prefix i: local entries at position p <= i whose
+    # remote twin position rpos > i.  Build per-(i, entry) mask — O(C^2) but
+    # this is a test helper, not the hot path.
+    pos = jnp.arange(two_c)
+    is_local_entry = ~a.is_remote
+    rpos_of_entry = a.rpos[a.cand_of_entry]  # remote-twin position per entry
+    yv = jnp.where(is_local_entry, a.weights, 0.0)
+
+    def term(i):
+        in_prefix = pos <= i
+        member = in_prefix & is_local_entry & (rpos_of_entry > i)
+        c = jnp.maximum(k - sig[i], 1.0)
+        prod = jnp.prod(jnp.where(member, 1.0 - yv / c, 1.0))
+        return (k - sig[i]) * (1.0 - prod)
+
+    terms = jax.vmap(term)(jnp.arange(two_c - 1))
+    return jnp.sum(jnp.where(active, alpha * terms, 0.0))

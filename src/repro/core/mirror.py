@@ -1,0 +1,31 @@
+"""Mirror maps for Online Mirror Ascent (paper Sec. IV-E, Fig. 6).
+
+A mirror map supplies the primal->dual gradient map and its inverse.  For the
+negative entropy  Phi(y) = sum y log y  the OMA step
+    grad Phi(y) = 1 + log y;   (grad Phi)^{-1}(v) = exp(v - 1)
+composes to the multiplicative update  z = y * exp(eta * g)  (the additive
+constants cancel, and any global factor is absorbed by the projection scale),
+which is what we implement — numerically far safer than exp(log y + ...).
+
+For the squared Euclidean norm, OMA is plain projected gradient ascent.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEGENTROPY = "negentropy"
+EUCLIDEAN = "euclidean"
+
+# exp-argument clip: keeps the multiplicative update finite for adversarially
+# large eta*g without changing the argmax structure of the projection.
+_EXP_CLIP = 60.0
+
+
+def dual_ascent_step(y: jnp.ndarray, g: jnp.ndarray, eta, mirror: str) -> jnp.ndarray:
+    """z_{t+1} = (grad Phi)^{-1}(grad Phi(y_t) + eta g_t)   (lines 3-5, Alg. 1)."""
+    if mirror == NEGENTROPY:
+        return y * jnp.exp(jnp.clip(eta * g, -_EXP_CLIP, _EXP_CLIP))
+    if mirror == EUCLIDEAN:
+        return y + eta * g
+    raise ValueError(f"unknown mirror map {mirror!r}")

@@ -1,0 +1,62 @@
+"""Online Mirror Ascent — Algorithm 1 of the paper.
+
+The full AÇAI update for one request:
+  1. receive subgradient g_t of G(r_t, y_t)            (repro.core.gain)
+  2. dual ascent step through the mirror map            (repro.core.mirror)
+  3. Bregman projection onto conv(X) = capped simplex   (repro.core.projection)
+  4. every M requests: randomised rounding to x in X    (repro.core.rounding)
+
+The learning-rate default follows Theorem IV.1's optimum
+  eta* = (1/L) sqrt(2 D / (h T)),   L = c_d^k + c_f,   D = h log(N/h).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mirror as mirror_maps
+from repro.core import projection
+
+Y_FLOOR = 1e-12  # keeps y in the (open) domain of the entropy map
+
+
+@dataclasses.dataclass(frozen=True)
+class OMAConfig:
+    eta: float = 1e-2
+    mirror: str = mirror_maps.NEGENTROPY
+    rounding: str = "coupled"  # 'depround' | 'coupled' | 'independent'
+    round_every: int = 1       # the paper's M
+    projection_topk: int = 0   # 0 = exact full sort; >0 = accelerated top-A
+
+
+def theoretical_eta(c_dk: float, c_f: float, h: int, n: int, horizon: int) -> float:
+    """eta* of Theorem IV.1 (App. E, Eq. (78))."""
+    big_l = c_dk + c_f
+    big_d = h * math.log(max(n / max(h, 1), 1.0 + 1e-9))
+    return (1.0 / big_l) * math.sqrt(2.0 * big_d / (max(h, 1) * max(horizon, 1)))
+
+
+def project(z: jax.Array, h, cfg: OMAConfig) -> jax.Array:
+    if cfg.mirror == mirror_maps.NEGENTROPY:
+        if cfg.projection_topk:
+            y = projection.capped_simplex_negentropy_topk(z, h, cfg.projection_topk)
+        else:
+            y = projection.capped_simplex_negentropy(z, h)
+        return jnp.clip(y, Y_FLOOR, 1.0)
+    y = projection.capped_simplex_euclidean(z, h)
+    return jnp.clip(y, 0.0, 1.0)
+
+
+def oma_update(y: jax.Array, g: jax.Array, h, cfg: OMAConfig) -> jax.Array:
+    """One OMA step (lines 3-6 of Algorithm 1)."""
+    z = mirror_maps.dual_ascent_step(y, g, cfg.eta, cfg.mirror)
+    return project(z, h, cfg)
+
+
+def uniform_state(n: int, h: int, dtype=jnp.float32) -> jax.Array:
+    """y_1 = argmin_{conv(X)} Phi(y) = (h/N, ..., h/N)  (Lemma 8)."""
+    return jnp.full((n,), h / n, dtype)

@@ -1,0 +1,192 @@
+"""AÇAI policy: request serving + OMA cache updates (paper Sec. IV).
+
+Two entry points:
+
+* `make_replay(...)` — a fully-jitted `lax.scan` over a request trace,
+  carrying (y_t, x_t, key).  This is the benchmark/experiment hot path:
+  per request it (1) builds the candidate set from the two indexes,
+  (2) serves per Eq. (2) from x_t, (3) computes the subgradient Eq. (55)
+  at y_t, (4) applies OMA + projection, (5) rounds to x_{t+1}.
+
+* `AcaiCache` — an object wrapper over the same jitted step for the serving
+  tier (repro.serve.semantic_cache) where requests arrive one by one.
+
+Candidate sets: the union of kNN(r, local catalog) and kNN(r, remote
+catalog) as returned by the two (approximate) indexes, deduplicated by
+masking (duplicates get cost BIG and weight 0 so they are exactly neutral
+in the augmented-catalog accounting — see repro.core.gain).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gain as gain_lib
+from repro.core import oma as oma_lib
+from repro.core import rounding as rounding_lib
+from repro.core.costs import BIG_COST, pairwise_dissimilarity
+
+
+class StepMetrics(NamedTuple):
+    gain_int: jax.Array    # G(r_t, x_t) — what the system actually earns
+    gain_frac: jax.Array   # G(r_t, y_t) — fractional gain (analysis)
+    cost: jax.Array        # C(r_t, x_t)
+    served_local: jax.Array  # how many of the k answers came from the cache
+    fetched: jax.Array     # cache-update traffic (# objects fetched)
+    occupancy: jax.Array   # sum x_t
+
+
+class CacheState(NamedTuple):
+    y: jax.Array  # (N,) fractional state
+    x: jax.Array  # (N,) physical cache indicator
+    t: jax.Array  # step counter
+    key: jax.Array
+
+
+def dedup_mask(ids: jax.Array, n: int) -> jax.Array:
+    """valid[i] = ids[i] is a real id (< n) and its first occurrence."""
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((1,), bool), sorted_ids[1:] == sorted_ids[:-1]]
+    )
+    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    return (ids < n) & ~dup
+
+
+def exact_candidate_fn(
+    catalog: jax.Array, c_remote: int, c_local: int, metric: str = "sqeuclidean"
+) -> Callable:
+    """Candidate generator backed by exact (flat) search on both sides.
+
+    Models *perfect-recall* indexes; the approximate variants live in
+    repro.index.candidates (same signature) and plug in here.
+    """
+    n = catalog.shape[0]
+
+    def fn(r: jax.Array, x: jax.Array):
+        d_full = pairwise_dissimilarity(r[None, :], catalog, metric)[0]
+        _, ids_remote = jax.lax.top_k(-d_full, c_remote)
+        d_cached = jnp.where(x > 0.5, d_full, jnp.inf)
+        _, ids_local = jax.lax.top_k(-d_cached, c_local)
+        ids = jnp.concatenate([ids_remote, ids_local])
+        valid = dedup_mask(ids, n)
+        # a "local" candidate slot is only valid if that object is cached
+        cached_ok = jnp.concatenate(
+            [jnp.ones((c_remote,), bool), x[ids_local] > 0.5]
+        )
+        valid = valid & cached_ok
+        d = jnp.where(valid, d_full[jnp.clip(ids, 0, n - 1)], BIG_COST)
+        return ids, d, valid
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class AcaiConfig:
+    h: int                      # cache capacity (objects)
+    k: int = 10                 # answers per request
+    c_f: float = 1.0            # fetching cost
+    c_remote: int = 64          # remote-index candidates (>= k!)
+    c_local: int = 16           # local-index candidates
+    oma: oma_lib.OMAConfig = dataclasses.field(default_factory=oma_lib.OMAConfig)
+
+
+def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t):
+    mode = cfg.oma.rounding
+    if mode == "coupled":
+        return rounding_lib.coupled_rounding(key, x_old, y_old, y_new)
+    if mode == "independent":
+        return rounding_lib.independent_rounding(key, y_new)
+    if mode == "depround":
+        # Re-round every M requests (Alg. 1 lines 7-9), freeze in between.
+        return jax.lax.cond(
+            (t % cfg.oma.round_every) == 0,
+            lambda _: rounding_lib.depround(key, y_new),
+            lambda _: x_old,
+            None,
+        )
+    raise ValueError(mode)
+
+
+def make_step(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
+    """Build the jitted per-request step: (state, r) -> (state', metrics)."""
+
+    def step(state: CacheState, r: jax.Array):
+        key, k_round = jax.random.split(state.key)
+        ids, d, valid = candidate_fn(r, state.x)
+        x_cand = jnp.where(valid, state.x[jnp.clip(ids, None, state.x.shape[0] - 1)], 0.0)
+        y_cand = jnp.where(valid, state.y[jnp.clip(ids, None, state.y.shape[0] - 1)], 0.0)
+
+        served = gain_lib.serve(d, x_cand, cfg.k, cfg.c_f)
+        gain_frac, g_cand = gain_lib.gain_and_subgradient(d, y_cand, cfg.k, cfg.c_f)
+
+        g_full = (
+            jnp.zeros_like(state.y)
+            .at[jnp.clip(ids, None, state.y.shape[0] - 1)]
+            .add(jnp.where(valid, g_cand, 0.0))
+        )
+        y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg.oma)
+        x_new = _round_state(cfg, k_round, y_new, state.y, state.x, state.t)
+
+        metrics = StepMetrics(
+            gain_int=served.gain,
+            gain_frac=gain_frac,
+            cost=served.cost,
+            served_local=jnp.sum(served.from_cache.astype(jnp.int32)),
+            fetched=rounding_lib.movement(x_new, state.x),
+            occupancy=jnp.sum(x_new),
+        )
+        return CacheState(y_new, x_new, state.t + 1, key), metrics
+
+    return step
+
+
+def init_state(n: int, cfg: AcaiConfig, seed: int = 0, start: str = "uniform") -> CacheState:
+    """start='uniform': y_1 = argmin Phi (Alg. 1 line 1); 'empty': cold cache."""
+    y = oma_lib.uniform_state(n, cfg.h)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    if start == "uniform":
+        x = rounding_lib.depround(k0, y)
+    else:
+        x = jnp.zeros((n,), jnp.float32)
+    return CacheState(y=y, x=x, t=jnp.zeros((), jnp.int32), key=key)
+
+
+def make_replay(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
+    """Whole-trace replay: (state, requests (T,d)) -> (state', StepMetrics (T,))."""
+    step = make_step(cfg, candidate_fn)
+
+    @jax.jit
+    def replay(state: CacheState, requests: jax.Array):
+        return jax.lax.scan(step, state, requests)
+
+    return replay
+
+
+class AcaiCache:
+    """Object API over the jitted step, for the online serving tier."""
+
+    def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None, seed=0):
+        self.cfg = cfg
+        self.catalog = catalog
+        fn = candidate_fn or exact_candidate_fn(catalog, cfg.c_remote, cfg.c_local)
+        self._step = jax.jit(make_step(cfg, fn))
+        self.state = init_state(catalog.shape[0], cfg, seed=seed)
+
+    def serve_update(self, r: jax.Array) -> StepMetrics:
+        self.state, metrics = self._step(self.state, r)
+        return metrics
+
+    @property
+    def cached_ids(self):
+        return jnp.nonzero(self.state.x > 0.5)[0]
+
+    def normalized_gain(self, total_gain: float, t: int) -> float:
+        """NAG of Eq. (11)."""
+        return float(total_gain) / (self.cfg.k * self.cfg.c_f * max(t, 1))

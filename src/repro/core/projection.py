@@ -1,0 +1,87 @@
+"""Bregman projections onto the capped simplex (paper Sec. IV-F, line 6 Alg. 1).
+
+Feasible set:  B_h = { y in [0,1]^N : sum_i y_i = h }   (= conv(X) on the
+local components; the augmented components are determined by y_{i+N}=1-y_i).
+
+* negentropy map  Phi(y) = sum y log y:
+    argmin_y D_Phi(y, z)  =>  y_i = min(1, s * z_i)  for the unique s > 0
+    with sum_i min(1, s z_i) = h.  Solved EXACTLY by the sort-based
+    threshold scan the paper adapts from Wang & Lu — O(N log N).
+* euclidean map   Phi(y) = 1/2 ||y||^2:
+    y_i = clip(z_i - tau, 0, 1); tau found by monotone bisection (the sum is
+    continuous, piecewise-linear, strictly decreasing where feasible).
+
+`negentropy_topk` is the beyond-paper accelerated variant: only the largest
+A entries can hit the cap y=1 (s*z is order-preserving), so an O(N + A log A)
+lax.top_k + scan over A suffices instead of a full sort.  Bitwise-identical
+results whenever the number of capped entries is < A (always true in practice
+since at most h entries cap and we take A >= h headroom).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def _negentropy_scale_from_sorted(zs_desc: jax.Array, tail_sum, h):
+    """Find s with sum min(1, s z) = h given the (descending) head `zs_desc`
+    of z plus the scalar sum of the remaining (never-capped) tail."""
+    a = zs_desc.shape[0]
+    m = jnp.arange(a, dtype=zs_desc.dtype)  # number of capped entries
+    # reversed cumsum: accumulates the small tail entries first — avoids the
+    # float32 cancellation of the (total - prefix) formulation.
+    suffix = jnp.cumsum(zs_desc[::-1])[::-1]  # sum_{i >= m} zs[i]
+    denom = jnp.maximum(suffix + tail_sum, _TINY)
+    s_m = (h - m) / denom
+    # consistency: first uncapped scaled <= 1, last capped scaled >= 1
+    cond_uncapped = zs_desc * s_m <= 1.0 + 1e-7
+    prev = jnp.concatenate([jnp.full((1,), jnp.inf, zs_desc.dtype), zs_desc[:-1]])
+    cond_capped = prev * s_m >= 1.0 - 1e-7
+    valid = cond_uncapped & cond_capped & (h - m > 0)
+    idx = jnp.argmax(valid)  # first (smallest m) valid split
+    return jnp.take(s_m, idx), valid.any()
+
+
+@partial(jax.jit, static_argnames=())
+def capped_simplex_negentropy(z: jax.Array, h) -> jax.Array:
+    """Exact sort-based negentropy Bregman projection, O(N log N)."""
+    n = z.shape[0]
+    z = jnp.maximum(z, 0.0)
+    zs = jnp.sort(z)[::-1]
+    s, ok = _negentropy_scale_from_sorted(zs, jnp.zeros((), z.dtype), h)
+    y = jnp.minimum(1.0, z * s)
+    # h >= N degenerate: everything capped.
+    return jnp.where(jnp.asarray(h, z.dtype) >= n, jnp.ones_like(z), y)
+
+
+@partial(jax.jit, static_argnames=("a",))
+def capped_simplex_negentropy_topk(z: jax.Array, h, a: int) -> jax.Array:
+    """O(N + A log A) variant: sort only the top-A entries (A >= h + slack)."""
+    z = jnp.maximum(z, 0.0)
+    ztop, idx = jax.lax.top_k(z, a)
+    # sum the non-top tail directly (no total-minus-top cancellation)
+    tail = jnp.sum(z.at[idx].set(0.0))
+    s, _ = _negentropy_scale_from_sorted(ztop, tail, h)
+    return jnp.minimum(1.0, z * s)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def capped_simplex_euclidean(z: jax.Array, h, iters: int = 64) -> jax.Array:
+    """Euclidean projection onto B_h via bisection on the shift tau."""
+    lo = jnp.min(z) - 1.0
+    hi = jnp.max(z)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        total = jnp.sum(jnp.clip(z - mid, 0.0, 1.0))
+        too_big = total > h
+        return (jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return jnp.clip(z - 0.5 * (lo + hi), 0.0, 1.0)

@@ -1,0 +1,165 @@
+"""Pure-numpy reference oracle for the AÇAI core math.
+
+Implements the paper's equations literally (loops, no vectorisation
+tricks) over the FULL catalog, as an independent cross-check for the
+fixed-candidate-set jnp implementation in repro.core.gain.
+
+  * cost_integral       — Eq. (5) by direct simulation
+  * gain_integral       — Eq. (6)
+  * gain_fractional     — Eq. (7) with explicit K^r / sigma / alpha
+  * lower_bound         — Eq. (15)
+  * subgrad_fd          — two-sided finite differences on Eq. (7)
+  * best_answer_bruteforce — Eq. (2) by subset enumeration (tiny instances)
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+def _augmented(d: np.ndarray, c_f: float):
+    """Return (costs, is_remote, obj) for 2N entries, sorted by cost."""
+    n = d.shape[0]
+    costs = np.concatenate([d, d + c_f])
+    is_remote = np.concatenate([np.zeros(n, bool), np.ones(n, bool)])
+    obj = np.concatenate([np.arange(n), np.arange(n)])
+    order = np.argsort(costs, kind="stable")
+    return costs[order], is_remote[order], obj[order]
+
+
+def cost_integral(d: np.ndarray, x: np.ndarray, k: int, c_f: float) -> float:
+    """C(r, x) of Eq. (5): walk pi^r, take available entries until k served."""
+    costs, is_remote, obj = _augmented(d, c_f)
+    total, served = 0.0, 0
+    for c, rem, o in zip(costs, is_remote, obj):
+        if served >= k:
+            break
+        avail = (1 - x[o]) if rem else x[o]
+        if avail >= 0.5:
+            total += c
+            served += 1
+    assert served == k, "catalog too small for k"
+    return float(total)
+
+
+def empty_cost(d: np.ndarray, k: int, c_f: float) -> float:
+    return float(np.sort(d)[:k].sum() + k * c_f)
+
+
+def gain_integral(d: np.ndarray, x: np.ndarray, k: int, c_f: float) -> float:
+    return empty_cost(d, k, c_f) - cost_integral(d, x, k, c_f)
+
+
+def _sorted_entries(d: np.ndarray, y: np.ndarray, c_f: float):
+    n = d.shape[0]
+    costs = np.concatenate([d, d + c_f])
+    weights = np.concatenate([y, 1.0 - y])
+    is_remote = np.concatenate([np.zeros(n, bool), np.ones(n, bool)])
+    order = np.argsort(costs, kind="stable")
+    return costs[order], weights[order], is_remote[order]
+
+
+def gain_fractional(d: np.ndarray, y: np.ndarray, k: int, c_f: float) -> float:
+    """G(r, y) of Eq. (7), literal transcription."""
+    costs, weights, is_remote = _sorted_entries(d, y, c_f)
+    sigma = np.cumsum(is_remote.astype(float))
+    k_r = int(np.argmax(sigma >= k)) + 1  # 1-based K^r
+    s = np.cumsum(weights)
+    total = 0.0
+    for i in range(1, k_r):  # i = 1 .. K^r - 1 (1-based)
+        alpha = costs[i] - costs[i - 1]
+        total += alpha * min(k - sigma[i - 1], s[i - 1] - sigma[i - 1])
+    return float(total)
+
+
+def lower_bound(d: np.ndarray, y: np.ndarray, k: int, c_f: float) -> float:
+    """L(r, y) of Eq. (15)."""
+    n = d.shape[0]
+    costs = np.concatenate([d, d + c_f])
+    weights = np.concatenate([y, 1.0 - y])
+    is_remote = np.concatenate([np.zeros(n, bool), np.ones(n, bool)])
+    obj = np.concatenate([np.arange(n), np.arange(n)])
+    order = np.argsort(costs, kind="stable")
+    costs, weights, is_remote, obj = (
+        costs[order], weights[order], is_remote[order], obj[order]
+    )
+    pos_of_remote = {obj[p]: p for p in range(2 * n) if is_remote[p]}
+    sigma = np.cumsum(is_remote.astype(float))
+    k_r = int(np.argmax(sigma >= k)) + 1
+    total = 0.0
+    for i in range(1, k_r):  # prefix length i (1-based)
+        alpha = costs[i] - costs[i - 1]
+        c = k - sigma[i - 1]
+        prod = 1.0
+        for p in range(i):
+            if not is_remote[p] and pos_of_remote[obj[p]] >= i:
+                prod *= 1.0 - weights[p] / c
+        total += alpha * c * (1.0 - prod)
+    return float(total)
+
+
+def subgrad_fd(
+    d: np.ndarray, y: np.ndarray, k: int, c_f: float, eps: float = 1e-5
+) -> np.ndarray:
+    """Two-sided finite-difference gradient of Eq. (7) — exact at generic y
+    (G is piecewise linear; non-differentiable only where some S_i = k)."""
+    g = np.zeros_like(y)
+    for i in range(y.shape[0]):
+        yp, ym = y.copy(), y.copy()
+        yp[i] += eps
+        ym[i] -= eps
+        g[i] = (gain_fractional(d, yp, k, c_f) - gain_fractional(d, ym, k, c_f)) / (
+            2 * eps
+        )
+    return g
+
+
+def best_answer_bruteforce(
+    d: np.ndarray, x: np.ndarray, k: int, c_f: float
+) -> float:
+    """min_{|B| = k} C(r, B) of Eq. (2) by enumeration (use only for N<=12)."""
+    n = d.shape[0]
+    best = np.inf
+    for subset in itertools.combinations(range(n), k):
+        c = sum(d[o] if x[o] >= 0.5 else d[o] + c_f for o in subset)
+        best = min(best, c)
+    return float(best)
+
+
+def project_capped_simplex_bisect(
+    z: np.ndarray, h: float, kind: str = "negentropy", iters: int = 200
+) -> np.ndarray:
+    """Oracle Bregman projection onto {y in [0,1]^N : sum y = h} by bisection.
+
+    negentropy: y = min(1, z * s)        (s > 0)
+    euclidean : y = clip(z - tau, 0, 1)
+    """
+    if kind == "negentropy":
+        lo, hi = 0.0, (h / max(z.sum(), 1e-30)) * 1e6 + 1e6
+
+        def total(s):
+            return np.minimum(1.0, z * s).sum()
+
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            if total(mid) < h:
+                lo = mid
+            else:
+                hi = mid
+        return np.minimum(1.0, z * 0.5 * (lo + hi))
+    if kind == "euclidean":
+        lo, hi = z.min() - 1.0 - h, z.max() + 1.0
+
+        def total_tau(tau):
+            return np.clip(z - tau, 0.0, 1.0).sum()
+
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            if total_tau(mid) > h:
+                lo = mid
+            else:
+                hi = mid
+        return np.clip(z - 0.5 * (lo + hi), 0.0, 1.0)
+    raise ValueError(kind)

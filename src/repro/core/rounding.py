@@ -1,0 +1,96 @@
+"""Randomised rounding: DepRound (Byrka et al.) and CoupledRounding (App. F).
+
+DEPROUND maps y in conv(X) to x in X with
+  (1) E[x_i] = y_i,
+  (2) sum_i x_i = sum_i y_i  (= h, exactly),
+  (3) E[prod_{i in S} (1 - x_i)] <= prod_{i in S} (1 - y_i)   (neg. correlation)
+— the three properties Lemma 2/3 of the paper need for the (1-1/e) bound.
+
+Implemented as a jittable pairwise walk (lax.scan): carry one "active"
+fractional coordinate, SIMPLIFY it against the next coordinate, freeze
+whichever becomes integral.  O(N), runs in float64 internally so the
+cardinality h is preserved exactly.
+
+COUPLEDROUNDING (Algorithm 2) couples x_{t+1} to (x_t, y_t, y_{t+1})
+component-wise so that  E[x_{t+1}] = y_{t+1}  and
+E||x_{t+1} - x_t||_1 = ||y_{t+1} - y_t||_1  (Theorem F.1) — sub-linear
+cache-update traffic (Theorem F.2) at the price of a capacity constraint
+held only in expectation (Chernoff bound Eq. (81)).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_DELTA = 1e-9
+
+
+def _simplify(p, q, u):
+    """One SIMPLIFY step: returns (p', q') with at least one integral."""
+    alpha = jnp.minimum(1.0 - p, q)
+    beta = jnp.minimum(p, 1.0 - q)
+    denom = alpha + beta
+    take_first = u * jnp.maximum(denom, _DELTA) < beta
+    p1 = jnp.where(take_first, p + alpha, p - beta)
+    q1 = jnp.where(take_first, q - alpha, q + beta)
+    degenerate = denom <= _DELTA  # both already integral
+    return jnp.where(degenerate, p, p1), jnp.where(degenerate, q, q1)
+
+
+@jax.jit
+def depround(key: jax.Array, y: jax.Array) -> jax.Array:
+    """DepRound: y in [0,1]^N with integral sum h -> x in {0,1}^N, sum x = h."""
+    n = y.shape[0]
+    yf = y.astype(jnp.float64) if jax.config.jax_enable_x64 else y.astype(jnp.float32)
+    us = jax.random.uniform(key, (n - 1,), dtype=yf.dtype)
+
+    def step(carry, inp):
+        aidx, aval = carry
+        i, yi, u = inp
+        p1, q1 = _simplify(aval, yi, u)
+        p_int = (p1 <= _DELTA * 10) | (p1 >= 1.0 - _DELTA * 10)
+        out_idx = jnp.where(p_int, aidx, i)
+        out_val = jnp.where(p_int, jnp.round(p1), jnp.round(q1))
+        new_aidx = jnp.where(p_int, i, aidx)
+        new_aval = jnp.where(p_int, q1, p1)
+        return (new_aidx, new_aval), (out_idx, out_val)
+
+    idxs = jnp.arange(1, n)
+    (faidx, faval), (out_idx, out_val) = jax.lax.scan(
+        step, (jnp.asarray(0), yf[0]), (idxs, yf[1:], us)
+    )
+    x = jnp.zeros((n,), y.dtype)
+    x = x.at[out_idx].set(out_val.astype(y.dtype))
+    x = x.at[faidx].set(jnp.round(faval).astype(y.dtype))
+    return x
+
+
+@jax.jit
+def coupled_rounding(
+    key: jax.Array, x_t: jax.Array, y_t: jax.Array, y_tp1: jax.Array
+) -> jax.Array:
+    """Algorithm 2: component-wise coupled rounding."""
+    delta = y_tp1 - y_t
+    u = jax.random.uniform(key, x_t.shape, dtype=y_t.dtype)
+    p_evict = -delta / jnp.maximum(y_t, _DELTA)
+    p_fetch = delta / jnp.maximum(1.0 - y_t, _DELTA)
+    evict = (x_t > 0.5) & (delta < 0) & (u < p_evict)
+    fetch = (x_t < 0.5) & (delta > 0) & (u < p_fetch)
+    return jnp.where(evict, 0.0, jnp.where(fetch, 1.0, x_t)).astype(x_t.dtype)
+
+
+@jax.jit
+def independent_rounding(key: jax.Array, y: jax.Array) -> jax.Array:
+    """Relaxed-capacity rounding (App. F): x_i ~ Bernoulli(y_i) independently.
+
+    E[x] = y; occupancy concentrates within (1 +/- delta) h  (Eq. (81))."""
+    return jax.random.bernoulli(key, y).astype(y.dtype)
+
+
+@partial(jax.jit, static_argnames=())
+def movement(x_new: jax.Array, x_old: jax.Array) -> jax.Array:
+    """Number of fetches |{i: x goes 0->1}| — the update cost of App. F."""
+    return jnp.sum(jnp.maximum(x_new - x_old, 0.0))

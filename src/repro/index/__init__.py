@@ -1,0 +1,29 @@
+"""Approximate kNN index substrate (paper Sec. III).
+
+AÇAI keeps two indexes at the edge server:
+  * local catalog  (dynamic, h objects)  — graph index (NSW, HNSW-style)
+    or flat scan: h is small enough that both are sub-millisecond.
+  * remote catalog (static, N objects)   — IVF-Flat / IVF-PQ (FAISS-style)
+    with compact codes, or LSH.
+
+All indexes are JAX-native with static shapes (dense padded bucket tables,
+fixed-width beams) so queries jit and shard; the TPU adaptations are
+documented in DESIGN.md §3.  Builds run once in numpy/JAX at setup time.
+"""
+
+from repro.index.exact import FlatIndex
+from repro.index.ivf import IVFFlatIndex
+from repro.index.kmeans import kmeans
+from repro.index.lsh import LSHIndex
+from repro.index.nsw import NSWIndex
+from repro.index.pq import IVFPQIndex, PQCodec
+
+__all__ = [
+    "FlatIndex",
+    "IVFFlatIndex",
+    "IVFPQIndex",
+    "LSHIndex",
+    "NSWIndex",
+    "PQCodec",
+    "kmeans",
+]

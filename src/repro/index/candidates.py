@@ -1,0 +1,51 @@
+"""Candidate-set builders wiring the ANN indexes into the AÇAI policy.
+
+Same signature as repro.core.policy.exact_candidate_fn:
+    fn(r, x) -> (ids (C,), dists (C,), valid (C,))
+Remote candidates come from the (approximate) remote-catalog index with an
+exact re-rank of the retrieved embeddings (AÇAI evaluates true costs on the
+retrieved set); local candidates come from a flat scan of the cached
+objects (h is small — this *is* the local index at bench scale; an NSWIndex
+drops in for larger local catalogs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import BIG_COST
+from repro.core.policy import dedup_mask
+
+
+def index_candidate_fn(index, catalog: jax.Array, c_remote: int, c_local: int):
+    n = catalog.shape[0]
+
+    def fn(r: jax.Array, x: jax.Array):
+        _, ids_remote = index.query(r[None, :], c_remote)
+        ids_remote = ids_remote[0]
+        # exact re-rank distances on the retrieved candidates
+        d_full_remote = jnp.sum(
+            (catalog[jnp.clip(ids_remote, 0, None)] - r[None, :]) ** 2, axis=-1
+        )
+        miss = ids_remote < 0
+        ids_remote = jnp.where(miss, n, ids_remote)  # n = invalid sentinel
+
+        d_all = jnp.sum((catalog - r[None, :]) ** 2, axis=-1)
+        d_cached = jnp.where(x > 0.5, d_all, jnp.inf)
+        _, ids_local = jax.lax.top_k(-d_cached, c_local)
+
+        ids = jnp.concatenate([ids_remote, ids_local])
+        valid = dedup_mask(ids, n)
+        cached_ok = jnp.concatenate(
+            [jnp.ones((c_remote,), bool), x[ids_local] > 0.5]
+        )
+        valid = valid & cached_ok
+        d = jnp.where(
+            valid,
+            jnp.sum((catalog[jnp.clip(ids, 0, n - 1)] - r[None, :]) ** 2, -1),
+            BIG_COST,
+        )
+        return ids, d, valid
+
+    return fn

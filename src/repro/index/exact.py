@@ -1,0 +1,39 @@
+"""Exact (flat) kNN index — the recall=1 reference and the local-catalog
+workhorse (h <= a few thousand objects: a flat MXU scan beats any structure).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class FlatIndex:
+    """Brute-force index.  kernel='xla' uses the fused-XLA distance path,
+    'pallas' the Pallas kernel (interpret-mode on CPU), 'auto' picks by
+    backend (pallas on TPU)."""
+
+    def __init__(self, embeddings: jax.Array, kernel: str = "auto"):
+        self.embeddings = jnp.asarray(embeddings, jnp.float32)
+        if kernel == "auto":
+            kernel = "pallas" if jax.default_backend() == "tpu" else "xla"
+        self.kernel = kernel
+
+    @partial(jax.jit, static_argnames=("self", "k"))
+    def query(self, q: jax.Array, k: int):
+        q = jnp.atleast_2d(q)
+        if self.kernel == "pallas":
+            return ops.topk_l2(q, self.embeddings, k)
+        d = ops.pairwise_l2_xla(q, self.embeddings)
+        neg, ids = jax.lax.top_k(-d, k)
+        return -neg, ids
+
+    def __hash__(self):  # allow use as a static jit argument
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

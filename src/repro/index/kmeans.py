@@ -1,0 +1,32 @@
+"""Lloyd k-means in JAX (used to train IVF coarse quantizers + PQ codebooks)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, data: jax.Array, k: int, iters: int = 12):
+    """Returns (centroids (k, d), assignments (n,))."""
+    n = data.shape[0]
+    init_idx = jax.random.choice(key, n, shape=(k,), replace=False)
+    cents = data[init_idx]
+
+    def body(_, cents):
+        d = ops.pairwise_l2_xla(data, cents)  # (n, k)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=data.dtype)  # (n, k)
+        sums = onehot.T @ data                                 # (k, d)
+        counts = jnp.sum(onehot, axis=0)[:, None]
+        new = sums / jnp.maximum(counts, 1.0)
+        # keep the old centroid for empty clusters
+        return jnp.where(counts > 0, new, cents)
+
+    cents = jax.lax.fori_loop(0, iters, body, cents)
+    assign = jnp.argmin(ops.pairwise_l2_xla(data, cents), axis=1)
+    return cents, assign

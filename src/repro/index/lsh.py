@@ -1,0 +1,70 @@
+"""Random-hyperplane LSH index (multi-table, dense padded buckets)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LSHIndex:
+    def __init__(self, embeddings, tables: int = 8, bits: int = 10,
+                 cap: int | None = None, seed: int = 0):
+        emb = np.asarray(embeddings, np.float32)
+        n, d = emb.shape
+        rng = np.random.default_rng(seed)
+        self.planes = rng.normal(size=(tables, bits, d)).astype(np.float32)
+        self.tables, self.bits = tables, bits
+        nb = 2 ** bits
+        sig = (np.einsum("tbd,nd->tnb", self.planes, emb) > 0)
+        codes = (sig * (1 << np.arange(bits))[None, None, :]).sum(-1)  # (t, n)
+        counts = np.stack([np.bincount(codes[t], minlength=nb)
+                           for t in range(tables)])
+        cap = int(counts.max()) if cap is None else cap
+        table = np.full((tables, nb, cap), -1, np.int32)
+        cursor = np.zeros((tables, nb), np.int32)
+        for t in range(tables):
+            for i, b in enumerate(codes[t]):
+                c = cursor[t, b]
+                if c < cap:
+                    table[t, b, c] = i
+                    cursor[t, b] = c + 1
+        self.buckets = jnp.asarray(table)
+        self.planes_j = jnp.asarray(self.planes)
+        self.embeddings = jnp.asarray(emb)
+
+    @partial(jax.jit, static_argnames=("self", "k"))
+    def query(self, q: jax.Array, k: int):
+        q = jnp.atleast_2d(q)
+        b = q.shape[0]
+        sig = jnp.einsum("tbd,nd->ntb", self.planes_j, q) > 0  # (B, t, bits)
+        weights = (1 << jnp.arange(self.bits, dtype=jnp.int32))
+        codes = jnp.sum(sig.astype(jnp.int32) * weights[None, None, :], -1)
+        cand = jax.vmap(
+            lambda c: self.buckets[jnp.arange(self.tables), c].reshape(-1)
+        )(codes)                                                # (B, t*cap)
+        valid = cand >= 0
+        embs = self.embeddings[jnp.clip(cand, 0, None)]
+        diff = embs - q[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+        d = jnp.where(valid, d, jnp.inf)
+        # the same object sits in multiple tables' buckets: dedup per query
+        order = jnp.argsort(cand, axis=1)
+        sid = jnp.take_along_axis(cand, order, axis=1)
+        dup_sorted = jnp.concatenate(
+            [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1
+        )
+        dup = jnp.zeros_like(dup_sorted)
+        dup = jax.vmap(lambda dd, oo, ds: dd.at[oo].set(ds))(dup, order, dup_sorted)
+        d = jnp.where(dup, jnp.inf, d)
+        neg, pos = jax.lax.top_k(-d, k)
+        ids = jnp.take_along_axis(cand, pos, axis=1)
+        return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

@@ -1,0 +1,117 @@
+"""NSW graph index — the HNSW-style local-catalog index, TPU-adapted.
+
+HNSW's pointer-chasing search is hostile to jit; we keep the navigable-
+small-world *semantics* (greedy beam search over a neighbour graph, entry
+point = medoid) but store the graph as a dense (N, degree) table and run a
+fixed-width, fixed-step beam with masked gathers (DESIGN.md §3).  Recall is
+controlled by (degree, beam, steps) just like HNSW's (M, efSearch).
+
+Build: exact kNN graph + long-range shortcuts (random far edges), the
+classic NSW construction, done once in numpy at setup.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def build_nsw_graph(emb: np.ndarray, degree: int = 16, shortcuts: int = 2,
+                    seed: int = 0, chunk: int = 1024) -> np.ndarray:
+    n = emb.shape[0]
+    rng = np.random.default_rng(seed)
+    knn = min(degree - shortcuts, n - 1)
+    graph = np.empty((n, degree), np.int32)
+    cn = (emb ** 2).sum(1)
+    for s in range(0, n, chunk):
+        q = emb[s:s + chunk]
+        d = (q ** 2).sum(1)[:, None] - 2 * q @ emb.T + cn[None]
+        np.fill_diagonal(d[:, s:s + q.shape[0]], np.inf)
+        part = np.argpartition(d, knn, axis=1)[:, :knn]
+        graph[s:s + chunk, :knn] = part
+    graph[:, knn:] = rng.integers(0, n, (n, degree - knn))
+    return graph
+
+
+class NSWIndex:
+    def __init__(self, embeddings, degree: int = 16, beam: int = 32,
+                 steps: int = 12, seed: int = 0):
+        emb = np.asarray(embeddings, np.float32)
+        self.embeddings = jnp.asarray(emb)
+        self.graph = jnp.asarray(build_nsw_graph(emb, degree, seed=seed))
+        self.beam, self.steps, self.degree = beam, steps, degree
+        # entry points = catalog points nearest to k-means centroids: the
+        # static-shape stand-in for HNSW's upper navigation layers — ensures
+        # every density mode seeds the beam (DESIGN.md §3).
+        from repro.index.kmeans import kmeans as _kmeans
+
+        nentry = min(beam, emb.shape[0])
+        cents, _ = _kmeans(jax.random.PRNGKey(seed), self.embeddings, nentry)
+        d2 = ops.pairwise_l2_xla(cents, self.embeddings)
+        self.entry_points = jnp.argmin(d2, axis=1).astype(jnp.int32)  # (nentry,)
+
+    @partial(jax.jit, static_argnames=("self", "k"))
+    def query(self, q: jax.Array, k: int):
+        q = jnp.atleast_2d(q)
+
+        def one(qv):
+            beam_ids = jnp.resize(self.entry_points, (self.beam,))
+            beam_d = jnp.sum(
+                (self.embeddings[beam_ids] - qv[None, :]) ** 2, axis=-1
+            )
+            # mark duplicate seeds so they are not re-expanded
+            dup0 = jnp.concatenate(
+                [jnp.zeros((self.entry_points.shape[0],), bool),
+                 jnp.ones((self.beam - self.entry_points.shape[0],), bool)]
+            ) if self.beam > self.entry_points.shape[0] else jnp.zeros(
+                (self.beam,), bool
+            )
+            beam_d = jnp.where(dup0, jnp.inf, beam_d)
+            expanded = dup0
+
+            def step(_, carry):
+                ids, dist, exp = carry
+                # pick the best unexpanded beam entry
+                cand_d = jnp.where(exp, jnp.inf, dist)
+                j = jnp.argmin(cand_d)
+                exp = exp.at[j].set(True)
+                nbrs = self.graph[ids[j]]                     # (degree,)
+                nd = jnp.sum(
+                    (self.embeddings[nbrs] - qv[None, :]) ** 2, axis=-1
+                )
+                all_ids = jnp.concatenate([ids, nbrs])
+                all_d = jnp.concatenate([dist, nd])
+                all_exp = jnp.concatenate(
+                    [exp, jnp.zeros((self.degree,), bool)]
+                )
+                # dedup: keep the first occurrence of each id (sorted by id,
+                # mark repeats with +inf) then take the best `beam`
+                order = jnp.argsort(all_ids)
+                sid = all_ids[order]
+                dup = jnp.concatenate(
+                    [jnp.zeros((1,), bool), sid[1:] == sid[:-1]]
+                )
+                dupmask = jnp.zeros_like(dup).at[order].set(dup)
+                all_d = jnp.where(dupmask, jnp.inf, all_d)
+                neg, pos = jax.lax.top_k(-all_d, self.beam)
+                return all_ids[pos], -neg, all_exp[pos]
+
+            ids, dist, _ = jax.lax.fori_loop(
+                0, self.steps, step, (beam_ids, beam_d, expanded)
+            )
+            neg, pos = jax.lax.top_k(-dist, k)
+            return -neg, ids[pos]
+
+        d, ids = jax.vmap(one)(q)
+        return d, ids
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

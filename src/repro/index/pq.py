@@ -1,0 +1,124 @@
+"""Product quantization codec + IVF-PQ index (the paper's remote-catalog
+index: ~30 bytes/object à la FAISS IVFPQ, Sec. III).
+
+The ADC scan runs through repro.kernels.ops.pq_adc — the one-hot-matmul TPU
+adaptation of the GPU shared-memory gather (DESIGN.md §3).  An optional
+exact re-rank of the top candidates (refine factor) recovers recall, which
+is standard FAISS practice and what AÇAI needs to estimate true server-side
+dissimilarity costs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.ivf import build_invlists
+from repro.index.kmeans import kmeans
+from repro.kernels import ops
+
+
+class PQCodec:
+    """M sub-spaces x 256-centroid codebooks."""
+
+    def __init__(self, data: jax.Array, m: int = 8, nbits: int = 8,
+                 train_iters: int = 12, seed: int = 0):
+        n, d = data.shape
+        assert d % m == 0, (d, m)
+        self.m, self.dsub, self.ksub = m, d // m, 2 ** nbits
+        sub = jnp.asarray(data, jnp.float32).reshape(n, m, self.dsub)
+        keys = jax.random.split(jax.random.PRNGKey(seed), m)
+        ksub = min(self.ksub, n)
+        cents, _ = jax.vmap(lambda k, x: kmeans(k, x, ksub, train_iters))(
+            keys, sub.transpose(1, 0, 2)
+        )
+        if ksub < self.ksub:  # pad tiny training sets
+            pad = jnp.repeat(cents[:, :1], self.ksub - ksub, axis=1)
+            cents = jnp.concatenate([cents, pad], axis=1)
+        self.codebooks = cents  # (m, ksub, dsub)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def encode(self, data: jax.Array) -> jax.Array:
+        n, d = data.shape
+        sub = data.reshape(n, self.m, self.dsub).transpose(1, 0, 2)
+        d2 = jax.vmap(ops.pairwise_l2_xla)(sub, self.codebooks)  # (m, n, ksub)
+        return jnp.argmin(d2, axis=-1).T.astype(jnp.int32)       # (n, m)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def decode(self, codes: jax.Array) -> jax.Array:
+        gathered = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1))(
+            self.codebooks, codes
+        )  # (m, n, dsub)
+        return gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+
+    @partial(jax.jit, static_argnames=("self",))
+    def adc_lut(self, q: jax.Array) -> jax.Array:
+        """(B, d) -> (B, m, ksub) per-subspace distance tables."""
+        b = q.shape[0]
+        sub = q.reshape(b, self.m, self.dsub).transpose(1, 0, 2)  # (m, B, dsub)
+        lut = jax.vmap(ops.pairwise_l2_xla)(sub, self.codebooks)  # (m, B, ksub)
+        return lut.transpose(1, 0, 2)
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+class IVFPQIndex:
+    """Coarse IVF + PQ-coded residual-free storage + optional exact refine."""
+
+    def __init__(self, embeddings, nlist: int = 64, nprobe: int = 8,
+                 m: int = 8, refine: int = 4, seed: int = 0):
+        self.embeddings = jnp.asarray(embeddings, jnp.float32)
+        self.nlist, self.nprobe, self.refine = nlist, nprobe, refine
+        key = jax.random.PRNGKey(seed)
+        self.centroids, assign = kmeans(key, self.embeddings, nlist)
+        self.invlists = jnp.asarray(
+            build_invlists(np.asarray(assign), nlist), jnp.int32
+        )
+        self.codec = PQCodec(self.embeddings, m=m, seed=seed + 1)
+        self.codes = self.codec.encode(self.embeddings)  # (N, m)
+
+    @partial(jax.jit, static_argnames=("self", "k"))
+    def query(self, q: jax.Array, k: int):
+        q = jnp.atleast_2d(q)
+        b = q.shape[0]
+        dc = ops.pairwise_l2_xla(q, self.centroids)
+        _, probe = jax.lax.top_k(-dc, self.nprobe)
+        cand = self.invlists[probe].reshape(b, -1)          # (B, P)
+        valid = cand >= 0
+        safe = jnp.clip(cand, 0, None)
+
+        lut = self.codec.adc_lut(q)                          # (B, m, ksub)
+        codes = self.codes[safe]                             # (B, P, m)
+        # per-query ADC over its own candidate rows
+        d_adc = jax.vmap(lambda l, c: ops.pq_adc(l[None], c)[0])(lut, codes)
+        d_adc = jnp.where(valid, d_adc, jnp.inf)
+
+        if self.refine and self.refine > 1:
+            r = min(self.refine * k, d_adc.shape[1])
+            neg, pos = jax.lax.top_k(-d_adc, r)              # approx top-r
+            rid = jnp.take_along_axis(cand, pos, axis=1)
+            rvalid = jnp.isfinite(neg)
+            embs = self.embeddings[jnp.clip(rid, 0, None)]
+            diff = embs - q[:, None, :]
+            d_exact = jnp.sum(diff * diff, axis=-1)
+            d_exact = jnp.where(rvalid, d_exact, jnp.inf)
+            neg2, pos2 = jax.lax.top_k(-d_exact, k)
+            ids = jnp.take_along_axis(rid, pos2, axis=1)
+            return -neg2, jnp.where(jnp.isfinite(neg2), ids, -1)
+
+        neg, pos = jax.lax.top_k(-d_adc, k)
+        ids = jnp.take_along_axis(cand, pos, axis=1)
+        return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other

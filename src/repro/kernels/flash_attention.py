@@ -1,0 +1,115 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The §Perf analysis (EXPERIMENTS.md) shows prefill_32k memory-bound on the
+XLA flash path: every KV-chunk's (BQ, BK) logits block round-trips HBM
+(~10 TB/step for qwen2-72b).  This kernel keeps the entire online-softmax
+inner loop in VMEM: HBM traffic collapses to the q/k/v reads + out write.
+
+Layout: grid (B, H, S/BQ).  Per grid cell the kernel sees
+  q   (BQ, D)      — its query block
+  k,v (T, D)       — the full KV stream of its (b, kv-head) pair
+                     (T <= 32k: 8 MiB bf16 in VMEM — fits; longer T would
+                     stream via a 4th grid axis)
+and loops over T in BK-sized steps with a fori_loop carrying
+(m, l, acc) — classic FlashAttention-2 scheduling, MXU-shaped blocks.
+
+GQA: the k/v BlockSpec index_map folds the q-head onto its kv head
+(h // group).  Masking supports causal, sliding-window and a written-upto
+bound (decode prefill), driven by the absolute q_offset.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 512
+BK = 512
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(causal: bool, window: int, q_offset: int,
+                  written_upto: int | None, bk: int,
+                  q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0, 0].astype(jnp.float32)         # (BQ, D)
+    t = k_ref.shape[2]
+    bq, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    i = pl.program_id(2)
+    q_pos = q_offset + i * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = k_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        v_blk = v_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (BQ, BK)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= k_pos > q_pos - window
+        if written_upto is not None:
+            ok &= k_pos < written_upto
+        logits = jnp.where(ok, logits, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1))
+        shift = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - shift[:, None])
+        p = jnp.where(ok, p, 0.0)
+        rescale = jnp.where(jnp.isfinite(m), jnp.exp(m - shift), 0.0)
+        l_new = l * rescale + jnp.sum(p, axis=1)
+        acc_new = acc * rescale[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, v_ref.shape[3]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, t // bk, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0, q_offset: int = 0, written_upto: int | None = None,
+    bq: int = BQ, bk: int = BK, interpret: bool = False,
+) -> jax.Array:
+    """q (B, S, H, D); k/v (B, T, KV, D) -> (B, S, H, Dv).
+
+    S % bq == 0 and T % bk == 0 (the ops wrapper pads S; all assigned
+    shapes already satisfy T)."""
+    b, s, h, d = q.shape
+    t, kvh, dv = k.shape[1], k.shape[2], v.shape[3]
+    g = h // kvh
+    assert s % bq == 0 and t % bk == 0, (s, t)
+
+    qt = q.transpose(0, 2, 1, 3)      # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)      # (B, KV, T, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, causal, window, q_offset,
+                               written_upto, bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, t, d),
+                         lambda bi, hi, si, g=g: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, t, dv),
+                         lambda bi, hi, si, g=g: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda bi, hi, si: (bi, hi, si, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+        interpret=interpret,
+    )(qt[:, :, :, :], kt, vt)
+    return out.transpose(0, 2, 1, 3)  # (B, S, H, Dv)

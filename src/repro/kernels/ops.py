@@ -1,0 +1,91 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Handle padding to block multiples, dtype promotion, backend dispatch
+(interpret=True automatically on non-TPU backends so the same call sites
+run in CI/CPU and on real hardware), and the partial-top-k merge.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import l2 as l2_kernel
+from repro.kernels import l2_topk as l2_topk_kernel
+from repro.kernels import pq_adc as pq_adc_kernel
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(a: jax.Array, mult: int, value=0.0) -> jax.Array:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pairwise_l2(q: jax.Array, x: jax.Array, *, interpret: bool | None = None):
+    """(Q, D) x (N, D) -> (Q, N) squared L2 via the Pallas kernel."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qq, n = q.shape[0], x.shape[0]
+    qp = _pad_rows(q, l2_kernel.BQ)
+    xp = _pad_rows(x, l2_kernel.BN)
+    out = l2_kernel.pairwise_l2_pallas(qp, xp, interpret=interp)
+    return out[:qq, :n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pq_adc(lut: jax.Array, codes: jax.Array, *, interpret: bool | None = None):
+    """ADC scan: lut (Q, M, C) x codes (N, M) -> (Q, N)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qq, n = lut.shape[0], codes.shape[0]
+    lp = _pad_rows(lut, pq_adc_kernel.BQ)
+    cp = _pad_rows(codes, pq_adc_kernel.BN)
+    out = pq_adc_kernel.pq_adc_pallas(lp, cp, interpret=interp)
+    return out[:qq, :n]
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None):
+    """Fused blocked distance+top-k: returns (dists (Q,k), ids (Q,k))."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qq, n = q.shape[0], x.shape[0]
+    qp = _pad_rows(q, l2_topk_kernel.BQ)
+    xp = _pad_rows(x, l2_topk_kernel.BN)
+    pd, pi = l2_topk_kernel.l2_topk_pallas(qp, xp, k, n_valid=n, interpret=interp)
+    neg, pos = jax.lax.top_k(-pd, k)
+    ids = jnp.take_along_axis(pi, pos, axis=1)
+    return (-neg)[:qq], ids[:qq]
+
+
+# jnp fallbacks, exported for benchmarking kernel vs XLA-fused baseline.
+pairwise_l2_xla = jax.jit(ref.pairwise_l2_ref)
+pq_adc_xla = jax.jit(ref.pq_adc_ref)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                   "written_upto", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    written_upto=None, interpret: bool | None = None):
+    """Pallas flash attention: q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,Dv)."""
+    from repro.kernels import flash_attention as fa
+
+    interp = (not _on_tpu()) if interpret is None else interpret
+    s = q.shape[1]
+    bq = min(fa.BQ, s)
+    bk = min(fa.BK, k.shape[1])
+    pad = (-s) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset,
+                                    written_upto=written_upto,
+                                    bq=bq, bk=bk, interpret=interp)
+    return out[:, :s]

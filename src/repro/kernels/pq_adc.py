@@ -1,0 +1,70 @@
+"""PQ asymmetric-distance (ADC) scan — Pallas TPU kernel.
+
+FAISS's IVF-PQ scan on GPU gathers 8-bit codes against per-query lookup
+tables held in shared memory (one gather per (point, subspace)).  TPUs have
+no efficient per-lane gather, so we ADAPT rather than port (DESIGN.md §3):
+inside the kernel each subspace's codes are expanded to a one-hot matrix on
+the fly and contracted against the LUT slice on the MXU:
+
+    dist[q, n] = sum_m LUT[q, m, codes[n, m]]
+               = sum_m ( LUT[:, m, :] @ onehot(codes[:, m])^T )[q, n]
+
+This turns a memory-bound gather into C=256-wide matmuls — on TPU the MXU
+is idle during a scan anyway, so the extra FLOPs are free and the kernel
+stays HBM-bandwidth-bound on the (N, M) uint8 code stream, which is the
+same bottleneck (and byte count) as the GPU original.
+
+Blocks: (BQ=128 queries) x (BN=128 points); the full (BQ, M, 256) LUT tile
+lives in VMEM (M=16, fp32 -> 2 MiB).  The M-loop is a fori_loop inside the
+kernel so codes are touched once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+BN = 128
+
+
+def _adc_kernel(lut_ref, codes_ref, o_ref):
+    lut = lut_ref[...]          # (BQ, M, C) float32
+    codes = codes_ref[...]      # (BN, M) int32
+    m = lut.shape[1]
+    c = lut.shape[2]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], c), 1)
+
+    def body(mi, acc):
+        onehot = (cols == codes[:, mi][:, None]).astype(jnp.float32)  # (BN, C)
+        # (BQ, C) @ (C, BN) on the MXU
+        return acc + jax.lax.dot_general(
+            lut[:, mi, :], onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jnp.zeros((lut.shape[0], codes.shape[0]), jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, m, body, acc)
+
+
+def pq_adc_pallas(
+    lut: jax.Array, codes: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """lut (Q, M, C) float32, codes (N, M) int32 -> (Q, N) float32."""
+    q, m, c = lut.shape
+    n, m2 = codes.shape
+    assert m == m2, (m, m2)
+    assert q % BQ == 0 and n % BN == 0, (q, n)
+    grid = (q // BQ, n // BN)
+    return pl.pallas_call(
+        _adc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BQ, m, c), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((BN, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BQ, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.float32),
+        interpret=interpret,
+    )(lut, codes.astype(jnp.int32))

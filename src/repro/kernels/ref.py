@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(Q, D), (N, D) -> (Q, N) squared euclidean distances, float32."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    xn = jnp.sum(x * x, axis=-1)[None, :]
+    return jnp.maximum(qn - 2.0 * (q @ x.T) + xn, 0.0)
+
+
+def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric-distance computation.
+
+    lut:   (Q, M, C) per-query, per-subspace distance tables (float32)
+    codes: (N, M)    PQ codes, integer in [0, C)
+    out:   (Q, N)    dist[q, n] = sum_m lut[q, m, codes[n, m]]
+    """
+    q, m, c = lut.shape
+    onehot = jnp.equal(codes[..., None], jnp.arange(c)[None, None, :])
+    return jnp.einsum("qmc,nmc->qn", lut.astype(jnp.float32),
+                      onehot.astype(jnp.float32))
+
+
+def l2_topk_ref(q: jnp.ndarray, x: jnp.ndarray, k: int):
+    """Exact top-k smallest distances: returns (dists (Q,k), ids (Q,k))."""
+    import jax
+
+    d = pairwise_l2_ref(q, x)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process (the CLI), never from tests or library code.
+"""

@@ -1,0 +1,241 @@
+"""Loop-aware analysis of post-SPMD compiled HLO text.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, which
+under-reports FLOPs/bytes by the trip count (layer scans, grad-accum scans,
+flash-attention scans).  This module parses `compiled.as_text()` into its
+computation graph, reads trip counts from the `known_trip_count`
+backend_config on while ops (fallback: the loop-condition constant), and
+accumulates:
+
+  * dot FLOPs         2 * prod(result_dims) * prod(contracted lhs dims)
+  * HBM byte traffic  output bytes of every materialising instruction in
+                      top-level/loop-body computations (fusion internals
+                      excluded — they live in registers/VMEM; the fusion's
+                      own output is counted at the call site)
+  * collective bytes  per class (all-reduce / all-gather / reduce-scatter /
+                      all-to-all / collective-permute), per shard
+
+All quantities are PER DEVICE (the SPMD module is the per-partition
+program).  Validated in tests against hand-computed scan programs.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "u16": 2,
+                "s16": 2, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SIMPLE_TYPE_RE = re.compile(r"^([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def _split_instr(line: str):
+    """'%n = TYPE opcode(...)' -> (name, type_str, opcode) — robust to
+    tuple types containing /*index=k*/ comments and layout annotations."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, tail = rest[: i + 1], rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        mt = _SIMPLE_TYPE_RE.match(rest)
+        if not mt:
+            return None
+        type_str, tail = mt.group(1), rest[mt.end():]
+    mo = _OPCODE_RE.match(tail)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1)
+_NO_TRAFFIC_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+                   "constant", "iota", "after-all", "partition-id",
+                   "replica-id"}
+
+
+def _dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _bytes_of_type(type_str: str) -> float:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return float(total)
+
+
+@dataclass
+class Computation:
+    name: str
+    symbols: dict = field(default_factory=dict)     # instr name -> type str
+    whiles: list = field(default_factory=list)      # (body, cond, trip)
+    calls: list = field(default_factory=list)
+    dot_flops: float = 0.0
+    out_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: {c: 0.0
+                                                      for c in COLLECTIVES})
+    coll_counts: dict = field(default_factory=lambda: {c: 0
+                                                       for c in COLLECTIVES})
+    max_constant: int = 1
+
+
+def parse_hlo(text: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    body_lines: list[str] = []
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            if line.endswith("{") and ") -> " in line:
+                is_entry = line.startswith("ENTRY")
+                name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+                if name_m:
+                    cur = Computation(name_m.group(1))
+                    body_lines = []
+                    if is_entry:
+                        entry = cur.name
+            continue
+        if line == "}" or line.startswith("} "):
+            _analyse(cur, body_lines)
+            comps[cur.name] = cur
+            cur = None
+            continue
+        body_lines.append(line)
+    if cur is not None:
+        _analyse(cur, body_lines)
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _analyse(comp: Computation, lines: list[str]):
+    # pass 1: symbol table
+    for line in lines:
+        m = _split_instr(line)
+        if m:
+            comp.symbols[m[0]] = m[1]
+
+    for line in lines:
+        m = _split_instr(line)
+        if not m:
+            continue
+        name, type_str, opcode = m
+        for c in re.findall(r"constant\((\d+)\)", line):
+            comp.max_constant = max(comp.max_constant, int(c))
+        if opcode == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            trip = None
+            mt = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', line)
+            if mt:
+                trip = int(mt.group(1))
+            if body and cond:
+                comp.whiles.append((body.group(1), cond.group(1), trip))
+            comp.out_bytes += _bytes_of_type(type_str)
+            continue
+        if "calls=" in line or "to_apply=" in line:
+            for target in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                     line):
+                comp.calls.append(target)
+        if opcode == "dot":
+            args = line.split("dot(", 1)[1].split(")", 1)[0]
+            opnames = re.findall(r"%([\w\.\-]+)", args)
+            lhs_type = comp.symbols.get(opnames[0], "") if opnames else ""
+            ldims = _dims(lhs_type)
+            res = 1
+            for d in _dims(type_str):
+                res *= d
+            contracted = 1
+            mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            if mc and mc.group(1) and ldims:
+                for i in mc.group(1).split(","):
+                    contracted *= ldims[int(i)]
+            comp.dot_flops += 2.0 * res * contracted
+        coll_hit = False
+        for coll in COLLECTIVES:
+            if opcode in (coll, coll + "-start"):
+                arg_types = [comp.symbols.get(o, "") for o in re.findall(
+                    r"%([\w\.\-]+)", line.split("(", 1)[1])]
+                total = sum(_bytes_of_type(t) for t in arg_types if t)
+                if total == 0:
+                    total = _bytes_of_type(type_str)
+                comp.coll_bytes[coll] += total
+                comp.coll_counts[coll] += 1
+                coll_hit = True
+                break
+        if coll_hit:
+            continue
+        if opcode not in _NO_TRAFFIC_OPS:
+            comp.out_bytes += _bytes_of_type(type_str)
+
+
+@dataclass
+class HloSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = None
+    coll_counts: dict = None
+    loops: list = None
+
+
+def summarize(text: str) -> HloSummary:
+    comps, entry = parse_hlo(text)
+    s = HloSummary(coll_bytes={c: 0.0 for c in COLLECTIVES},
+                   coll_counts={c: 0 for c in COLLECTIVES}, loops=[])
+    if entry is None:
+        return s
+
+    fusion_targets = set()
+    for comp in comps.values():
+        fusion_targets.update(comp.calls)
+
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for body, cond, trip in comp.whiles:
+            if trip is None:
+                trip = comps[cond].max_constant if cond in comps else 1
+            s.loops.append((body, trip))
+            visit(body, m * trip)
+        for callee in comp.calls:
+            visit(callee, m)
+
+    visit(entry, 1.0)
+
+    for name, m in mult.items():
+        comp = comps[name]
+        s.flops += m * comp.dot_flops
+        for c in COLLECTIVES:
+            s.coll_bytes[c] += m * comp.coll_bytes[c]
+            s.coll_counts[c] += int(round(m * comp.coll_counts[c]))
+        if name not in fusion_targets or name == entry:
+            s.bytes += m * comp.out_bytes
+    return s

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+pure data parallelism across pods (gradient all-reduce over DCI), `model`
+stays intra-pod where ICI bandwidth lives.
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(multi_pod: bool) -> tuple:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,9 @@
+"""Model zoo: unified transformer/SSM/hybrid stacks for the 10 assigned
+architectures (see repro.configs)."""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (ForwardResult, cross_entropy, forward,
+                                init_cache, init_params, mtp_loss, unit_spec)
+
+__all__ = ["ForwardResult", "ModelConfig", "cross_entropy", "forward",
+           "init_cache", "init_params", "mtp_loss", "unit_spec"]

@@ -1,0 +1,312 @@
+"""Shared transformer layers: norms, rotary embeddings (RoPE + M-RoPE),
+GQA attention (bias / sliding-window / encoder variants), SwiGLU MLP.
+
+Functional style: params are plain nested dicts (pytrees); every layer is a
+pair (init_fn, apply_fn).  dtype policy: params in cfg.dtype (bf16),
+layernorm/softmax/rotary math in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the head-dim pair indices are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, D); positions3: (3, B, S).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # build per-pair position: section s of the half-dim uses positions3[s]
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )                                                   # (half,)
+    pos = positions3.astype(jnp.float32)                # (3, B, S)
+    pos_per_pair = pos[sec_id]                          # (half, B, S)
+    ang = jnp.moveaxis(pos_per_pair, 0, -1) * freqs     # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA family)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    return p
+
+
+def _attention_mask(q_len: int, kv_len: int, q_offset, cfg: ModelConfig,
+                    kv_positions: Optional[jax.Array] = None):
+    """(q_len, kv_len) additive mask in f32. q_offset = absolute position of
+    the first query row (decode: cache length)."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = (jnp.arange(kv_len)[None, :] if kv_positions is None
+             else kv_positions[None, :])
+    ok = jnp.ones((q_len, kv_len), bool)
+    if cfg.causal:
+        ok &= k_pos <= q_pos
+    if cfg.sliding_window:
+        ok &= k_pos > q_pos - cfg.sliding_window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,D) k,v: (B,T,KV,D) grouped; returns (B,S,H,D)."""
+    b, s, h, dd = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    qg = q.reshape(b, s, kvh, groups, dd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dd)
+    logits = logits + mask[None, None, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+# Above this KV length, prefill/train attention switches to the chunked
+# online-softmax (flash) path: O(S * CHUNK) live logits instead of O(S^2).
+FLASH_THRESHOLD = 8192
+FLASH_CHUNK = 2048
+
+
+def _sdpa_flash(q, k, v, q_offset, cfg: "ModelConfig", written_upto=None,
+                chunk: int | None = None):
+    """Flash-style attention: lax.scan over KV chunks with running
+    (max, denom, acc).  Linear memory in T — required for the 32k prefill
+    and 500k shapes.  Only used when T % chunk == 0 (all assigned shapes).
+    The body is checkpointed so the backward pass recomputes per-chunk
+    logits instead of storing them (O(S*chunk) residuals, not O(S*T))."""
+    b, s, h, dd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(s)
+    scale = 1.0 / jnp.sqrt(dd)
+    chunk = chunk or cfg.flash_chunk
+    nchunks = t // chunk
+
+    def body(carry, j):
+        m, l, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                            k_blk.astype(jnp.float32)) * scale
+        k_pos = j * chunk + jnp.arange(chunk)
+        ok = jnp.ones((s, chunk), bool)
+        if cfg.causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if cfg.sliding_window:
+            ok &= k_pos[None, :] > q_pos[:, None] - cfg.sliding_window
+        if written_upto is not None:
+            ok &= k_pos[None, :] < written_upto
+        logits = jnp.where(ok[None, None, None], logits, -jnp.inf)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # rows with no valid key yet keep m = -inf; guard the exp shift
+        shift = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - shift[..., None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        rescale = jnp.where(jnp.isfinite(m), jnp.exp(m - shift), 0.0)
+        l_new = l * rescale + jnp.sum(p, axis=-1)
+        acc_new = acc * rescale[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  jnp.arange(nchunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, -2, 1)  # (b,kvh,g,s,d) -> (b,s,kvh,g,d)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def attention_core(q, k, v, q_offset, cfg: "ModelConfig", kv_positions=None,
+                   written_upto=None):
+    """Dispatch between the dense-mask and flash paths."""
+    s, t = q.shape[1], k.shape[1]
+    thresh = cfg.flash_threshold or FLASH_THRESHOLD
+    use_flash = (s > 1 and t >= thresh and t % (cfg.flash_chunk or FLASH_CHUNK) == 0
+                 and kv_positions is None)
+    if use_flash:
+        if cfg.use_pallas_attention and jax.default_backend() == "tpu":
+            # VMEM-resident Pallas kernel: block logits never touch HBM
+            # (§Perf).  Static q_offset/written_upto only (prefill path).
+            from repro.kernels import ops as _kops
+            if not hasattr(q_offset, "aval") and (
+                    written_upto is None or not hasattr(written_upto, "aval")):
+                return _kops.flash_attention(
+                    q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+                    q_offset=int(q_offset),
+                    written_upto=None if written_upto is None
+                    else int(written_upto))
+        return _sdpa_flash(q, k, v, q_offset, cfg, written_upto)
+    mask = _attention_mask(s, t, q_offset, cfg, kv_positions=kv_positions)
+    if written_upto is not None:
+        mask = jnp.where(jnp.arange(t)[None, :] < written_upto, mask, -jnp.inf)
+    if kv_positions is not None:
+        mask = jnp.where(kv_positions[None, :] >= 0, mask, -jnp.inf)
+    return _sdpa(q, k, v, mask)
+
+
+def attention(p, x, positions, cfg: ModelConfig, cache=None,
+              cache_len=None, positions3=None):
+    """Full-sequence (training/prefill) or incremental (decode) attention.
+
+    cache: None, or dict {k: (B, S_max, KV, D), v: ...} updated in place
+           (functionally) at positions [cache_len, cache_len + S).
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos_emb == "mrope":
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache is None:
+        # training / cache-free forward (flash path kicks in for long S)
+        out = attention_core(q, k, v, 0, cfg)
+        new_cache = None
+    else:
+        s_max = cache["k"].shape[1]
+        ring = cfg.sliding_window and s_max <= cfg.sliding_window
+        last = cache_len + s - 1  # absolute position of the newest token
+        if ring:
+            # ring buffer: slot(p) = p mod W. After writing, slot j holds
+            # absolute position  p(j) = last - ((last - j) mod W)  (< 0 if
+            # the slot has never been written).
+            if s == 1:
+                slot = jnp.mod(cache_len, s_max)
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            else:
+                # prefill: place the last W tokens at their ring slots
+                j = jnp.arange(s_max)
+                src = last - jnp.mod(last - j, s_max)      # abs pos per slot
+                gather = jnp.clip(src, 0, s - 1)
+                ck = jnp.take(k, gather, axis=1).astype(cache["k"].dtype)
+                cv = jnp.take(v, gather, axis=1).astype(cache["v"].dtype)
+            new_cache = {"k": ck, "v": cv}
+            slot_pos = last - jnp.mod(last - jnp.arange(s_max), s_max)
+            if s > 1:
+                # prefill attention runs over the full (windowed) sequence;
+                # the ring above is only the cache for subsequent decode.
+                out = attention_core(q, k, v, 0, cfg)
+            else:
+                out = attention_core(q, new_cache["k"], new_cache["v"],
+                                     cache_len, cfg, kv_positions=slot_pos)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            out = attention_core(q, ck, cv, cache_len, cfg,
+                                 written_upto=cache_len + s)
+
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    dt = dtype_of(cfg)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, dt),
+    }
+    if cfg.ffn_act == "swiglu":
+        p["wg"] = dense_init(ks[1], cfg.d_model, d_ff, dt)
+    return p
+
+
+def mlp(p, x):
+    if "wg" in p:  # SwiGLU
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    h = jax.nn.relu(x @ p["wi"])  # squared-ReLU (nemotron family)
+    return (h * h) @ p["wo"]

@@ -1,0 +1,339 @@
+"""Model assembly: embedding -> (scanned) layer stack -> head, for all ten
+assigned architectures, with train (no-cache), prefill and decode paths.
+
+Scan strategy: layers are grouped into repeating *units* so heterogeneous
+stacks still scan (compile time stays flat in depth):
+  dense / mixtral / mamba2        unit = 1 layer
+  deepseek-v3                     3 dense-FFN MLA layers unrolled (prefix),
+                                  58 MoE MLA layers scanned
+  jamba                           unit = 8 layers (7 mamba + 1 attn at slot
+                                  4, MoE on odd slots), 9 units scanned
+
+Params are nested dicts; layer kinds are static (derived from cfg), so the
+scan body is homogeneous per unit.  Caches thread through the scan as
+stacked pytrees.  Remat wraps the unit body for training.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.sharding.ctx import annotate, mesh_active
+
+
+# --------------------------------------------------------------------------
+# Layer-kind schedule
+# --------------------------------------------------------------------------
+
+class UnitSpec(NamedTuple):
+    kinds: tuple            # tuple of (mixer_kind, ffn_kind) per slot
+    n_prefix: int           # unrolled prefix layers
+    n_units: int            # scanned units
+
+
+def _mixer_kind(cfg: ModelConfig, i: int) -> str:
+    if not cfg.is_attn_layer(i):
+        return "mamba"
+    return "mla" if cfg.attn_type == "mla" else "attn"
+
+
+def _ffn_kind(cfg: ModelConfig, i: int) -> str:
+    if cfg.is_moe_layer(i):
+        return "moe"
+    return "dense" if cfg.d_ff else "none"  # pure mamba2 blocks have no FFN
+
+
+def unit_spec(cfg: ModelConfig) -> UnitSpec:
+    kinds = [(_mixer_kind(cfg, i), _ffn_kind(cfg, i))
+             for i in range(cfg.n_layers)]
+    n_prefix = cfg.moe_layer_start if cfg.n_experts else 0
+    body = kinds[n_prefix:]
+    # the smallest period that tiles the body becomes the scan unit
+    for u in range(1, len(body) + 1):
+        if len(body) % u:
+            continue
+        unit = tuple(body[:u])
+        if all(tuple(body[j:j + u]) == unit for j in range(0, len(body), u)):
+            return UnitSpec(kinds=unit, n_prefix=n_prefix,
+                            n_units=len(body) // u)
+    raise AssertionError("unreachable: the full body is always a period")
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind) -> dict:
+    mixer_kind, ffn_kind = kind
+    k1, k2 = jax.random.split(key)
+    dt = L.dtype_of(cfg)
+    p: dict[str, Any] = {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+    }
+    if mixer_kind == "attn":
+        p["mixer"] = L.init_attention(k1, cfg)
+    elif mixer_kind == "mla":
+        p["mixer"] = MLA.init_mla(k1, cfg)
+    else:
+        p["mixer"] = SSM.init_mamba(k1, cfg)
+    if ffn_kind == "moe":
+        p["ffn"] = MOE.init_moe(k2, cfg)
+    elif ffn_kind == "dense":
+        p["ffn"] = L.init_mlp(k2, cfg)
+    else:
+        del p["norm2"]  # no FFN sub-block at all
+    return p
+
+
+def _init_unit(key, cfg: ModelConfig, kinds) -> dict:
+    ks = jax.random.split(key, len(kinds))
+    return {f"slot{j}": _init_layer(ks[j], cfg, kinds[j])
+            for j in range(len(kinds))}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    spec = unit_spec(cfg)
+    dt = L.dtype_of(cfg)
+    keys = jax.random.split(key, 4 + spec.n_prefix + spec.n_units)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab, dt)
+    kinds_all = [(_mixer_kind(cfg, i), _ffn_kind(cfg, i))
+                 for i in range(spec.n_prefix)]
+    if spec.n_prefix:
+        params["prefix"] = {
+            f"layer{i}": _init_layer(keys[2 + i], cfg, kinds_all[i])
+            for i in range(spec.n_prefix)
+        }
+    unit_params = [
+        _init_unit(keys[2 + spec.n_prefix + u], cfg, spec.kinds)
+        for u in range(spec.n_units)
+    ]
+    params["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *unit_params)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": L.dense_init(keys[3], 2 * cfg.d_model, cfg.d_model, dt),
+            "block": _init_layer(keys[3], cfg, (
+                _mixer_kind(cfg, cfg.n_layers - 1), "dense")),
+            "norm": jnp.ones((cfg.d_model,), dt),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, kind, batch: int, s_max: int, dtype):
+    mixer_kind, _ = kind
+    if mixer_kind == "attn":
+        t = min(s_max, cfg.sliding_window) if cfg.sliding_window else s_max
+        return {
+            "k": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    if mixer_kind == "mla":
+        return MLA.init_mla_cache(cfg, batch, s_max, dtype)
+    return SSM.init_mamba_cache(cfg, batch, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    dt = L.dtype_of(cfg)
+    spec = unit_spec(cfg)
+    cache: dict[str, Any] = {}
+    if spec.n_prefix:
+        kinds_all = [(_mixer_kind(cfg, i), _ffn_kind(cfg, i))
+                     for i in range(spec.n_prefix)]
+        cache["prefix"] = {
+            f"layer{i}": _init_layer_cache(cfg, kinds_all[i], batch, s_max, dt)
+            for i in range(spec.n_prefix)
+        }
+    unit_cache = {
+        f"slot{j}": _init_layer_cache(cfg, spec.kinds[j], batch, s_max, dt)
+        for j in range(len(spec.kinds))
+    }
+    cache["body"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (spec.n_units,) + x.shape).copy()
+        if spec.n_units else x[None][0:0],
+        unit_cache,
+    )
+    return cache
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _apply_layer(p, kind, x, positions, cfg: ModelConfig, cache, cache_len,
+                 positions3):
+    mixer_kind, ffn_kind = kind
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer_kind == "attn":
+        y, new_cache = L.attention(p["mixer"], h, positions, cfg,
+                                   cache=cache, cache_len=cache_len,
+                                   positions3=positions3)
+    elif mixer_kind == "mla":
+        y, new_cache = MLA.mla_attention(p["mixer"], h, positions, cfg,
+                                         cache=cache, cache_len=cache_len)
+    else:
+        y, new_cache = SSM.mamba_mixer(p["mixer"], h, cfg, cache=cache)
+    x = x + y
+    if ffn_kind == "none":
+        return x, new_cache, jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        y, aux = MOE.moe_ffn(p["ffn"], h, cfg)
+    else:
+        y, aux = L.mlp(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def _apply_unit(p_unit, kinds, x, positions, cfg, cache_unit, cache_len,
+                positions3):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for j, kind in enumerate(kinds):
+        c = None if cache_unit is None else cache_unit[f"slot{j}"]
+        x, nc, aux = _apply_layer(p_unit[f"slot{j}"], kind, x, positions,
+                                  cfg, c, cache_len, positions3)
+        if cache_unit is not None:
+            new_caches[f"slot{j}"] = nc
+        aux_total = aux_total + aux
+    return x, (new_caches if cache_unit is not None else None), aux_total
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Token-embedding lookup.
+
+    Under a mesh context the vocab axis is `model`-sharded; a plain gather
+    makes the SPMD partitioner replicate the whole table ("involuntary full
+    rematerialization", ~TBs of all-reduce on the large-vocab archs).  The
+    TPU-idiomatic form is a one-hot contraction: each shard contracts its
+    vocab slice locally and one small (tokens, d) all-reduce combines —
+    §Perf 'embed-onehot' iteration."""
+    if not mesh_active():
+        return embed[tokens]
+    flat = tokens.reshape(-1)
+    onehot = jax.nn.one_hot(flat, embed.shape[0], dtype=embed.dtype)
+    out = onehot @ embed
+    return out.reshape(tokens.shape + (embed.shape[1],))
+
+
+class ForwardResult(NamedTuple):
+    logits: jax.Array
+    cache: Optional[dict]
+    aux_loss: jax.Array
+    hidden: jax.Array
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None, positions3=None, cache=None, cache_len=None,
+            train: bool = False) -> ForwardResult:
+    """tokens: (B, S) int32 and/or embeds: (B, P, d) prefix (VLM/audio).
+
+    cache/cache_len: incremental mode (prefill writes at [0, S), decode at
+    cache_len)."""
+    spec = unit_spec(cfg)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(L.dtype_of(cfg)))
+    if tokens is not None:
+        parts.append(embed_lookup(params["embed"], tokens))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    x = annotate(x, ("batch", None, None))
+    b, s, _ = x.shape
+    if positions is None:
+        base = 0 if cache_len is None else cache_len
+        positions = base + jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    cl = jnp.asarray(0 if cache_len is None else cache_len, jnp.int32)
+
+    # prefix (unrolled)
+    new_prefix_cache = {}
+    kinds_all = [(_mixer_kind(cfg, i), _ffn_kind(cfg, i))
+                 for i in range(spec.n_prefix)]
+    for i in range(spec.n_prefix):
+        c = None if cache is None else cache["prefix"][f"layer{i}"]
+        x, nc, aux = _apply_layer(params["prefix"][f"layer{i}"], kinds_all[i],
+                                  x, positions, cfg, c, cl, positions3)
+        aux_total = aux_total + aux
+        if cache is not None:
+            new_prefix_cache[f"layer{i}"] = nc
+
+    # scanned body
+    def unit_body(carry, xs):
+        xcur, aux_sum = carry
+        p_unit, c_unit = xs
+        xcur, new_c, aux = _apply_unit(p_unit, spec.kinds, xcur, positions,
+                                       cfg, c_unit, cl, positions3)
+        return (xcur, aux_sum + aux), new_c
+
+    body_fn = jax.checkpoint(unit_body) if (cfg.remat and train) else unit_body
+    body_cache = None if cache is None else cache["body"]
+    if cache is None:
+        (x, aux_total), _ = jax.lax.scan(
+            lambda c, p: body_fn(c, (p, None)), (x, aux_total), params["body"])
+        new_body_cache = None
+    else:
+        (x, aux_total), new_body_cache = jax.lax.scan(
+            body_fn, (x, aux_total), (params["body"], body_cache))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head).astype(jnp.float32)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"body": new_body_cache}
+        if spec.n_prefix:
+            new_cache["prefix"] = new_prefix_cache
+    return ForwardResult(logits=logits, cache=new_cache, aux_loss=aux_total,
+                         hidden=x)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if mesh_active():
+        # one-hot contraction instead of a gather across the vocab-sharded
+        # logits (same rationale as embed_lookup)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
+        ll = jnp.sum(logp * onehot, axis=-1)
+    else:
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def mtp_loss(params, cfg: ModelConfig, hidden, tokens, positions):
+    """DeepSeek MTP (depth 1): predict token t+2 from [h_t ; emb(x_{t+1})]."""
+    if not cfg.mtp_depth:
+        return jnp.zeros((), jnp.float32)
+    p = params["mtp"]
+    b, s, d = hidden.shape
+    emb_next = embed_lookup(params["embed"], tokens[:, 1:])  # (B, S-1, d)
+    inp = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1) @ p["proj"]
+    kind = (_mixer_kind(cfg, cfg.n_layers - 1), "dense")
+    out, _, _ = _apply_layer(p["block"], kind, inp, positions[:, :-1], cfg,
+                             None, jnp.zeros((), jnp.int32), None)
+    out = L.rms_norm(out, p["norm"], cfg.norm_eps)
+    logits = (out @ params["embed"].T).astype(jnp.float32)  # shared head
+    return cross_entropy(logits[:, :-1], tokens[:, 2:])

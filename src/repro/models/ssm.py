@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer in pure JAX.
+
+Chunked SSD algorithm (the "minimal" formulation of the paper):
+  1. intra-chunk (quadratic within a Q-token chunk, matmul-friendly — this
+     is what lands on the MXU),
+  2. per-chunk final states,
+  3. inter-chunk linear recurrence on the chunk states,
+  4. state->output correction.
+
+Train/prefill run the chunked scan; decode is the O(1)-per-token recurrent
+update on (conv, ssm) caches — the reason mamba2/jamba serve the long_500k
+shape while full-attention models cannot.
+
+Head layout follows the reference: x (B,L,H,P), scalar A per head,
+B/C shared across heads (ngroups=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, rms_norm
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., q) -> (..., q, q): S[i, j] = sum_{k=j+1..i} x[k], -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{k=j+1..i} = cs_i - cs_j
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk: int):
+    """SSD scan.
+
+    x: (B, L, H, P)   inputs (already multiplied by dt)
+    a: (B, L, H)      per-step log-decay (dt * A, negative)
+    b: (B, L, N)      input projection (ngroups=1, shared across heads)
+    c: (B, L, N)      output projection
+    returns y: (B, L, H, P), final_state: (B, H, P, N)
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    ac = a.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,Q)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)                      # (B,H,C,Q)
+
+    # 1. intra-chunk
+    el = jnp.exp(_segsum(ac))                               # (B,H,C,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)          # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcqs,bhcqs,bcshp->bcqhp",
+                        scores.astype(jnp.float32), el, xc.astype(jnp.float32))
+
+    # 2. chunk final states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)   # (B,H,C,Q)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn",
+                        bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))             # (B,C,H,P,N)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cumsum[..., -1])                # (B,H,C)
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                       # (B,H,P,N), (B,H)
+        new = prev * dec[..., None, None] + st
+        return new, prev                                    # emit state BEFORE chunk
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,C,H,P,N)
+
+    # 4. state -> output
+    state_decay = jnp.exp(a_cumsum)                         # (B,H,C,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp",
+                       cc.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bs, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def init_mamba(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    conv_ch = di + 2 * ns
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ns + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_ch)) * 0.1
+                   ).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[3], di, d, dt),
+    }
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv1d. xbc: (B, L, CH); w: (K, CH).
+
+    conv_state: (B, K-1, CH) history for incremental mode (or None)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                # (B, L+K-1, CH)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out + b[None, None, :], new_state
+
+
+def mamba_mixer(p, x, cfg: ModelConfig, cache=None):
+    """x: (B, L, d_model). cache: None or {'conv': (B,K-1,CH), 'ssm': (B,H,P,N)}.
+
+    Returns (y, new_cache)."""
+    bs, l, _ = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = x @ p["in_proj"]
+    z, xin, b_, c_, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+
+    xbc = jnp.concatenate([xin, b_, c_], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, b_, c_ = jnp.split(xbc, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    xh = xin.reshape(bs, l, nh, hp)
+
+    if cache is None or l > 1:
+        # chunked scan (train / prefill); pad L to a chunk multiple
+        chunk = min(cfg.ssd_chunk, l) if l % cfg.ssd_chunk else cfg.ssd_chunk
+        pad = (-l) % chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, b_, c_
+        y, final = ssd_chunked(
+            xh_p * dt_p[..., None].astype(xh.dtype),
+            dt_p * a[None, None, :], b_p, c_p, chunk)
+        y = y[:, :l]
+        new_cache = (None if cache is None
+                     else {"conv": new_conv, "ssm": final})
+    else:
+        # O(1) decode: state' = state*exp(dt a) + dt * (b ⊗ x); y = c·state'
+        st = cache["ssm"]                                     # (B,H,P,N)
+        dt1 = dt[:, 0]                                        # (B,H)
+        decay = jnp.exp(dt1 * a[None, :])                     # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, b_[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        st = st * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_[:, 0].astype(jnp.float32), st)
+        y = y[:, None].astype(x.dtype)                        # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": st}
+
+    y = y + (p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(bs, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state), jnp.float32),
+    }

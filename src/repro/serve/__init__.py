@@ -1,0 +1,8 @@
+"""Serving substrate: prefill/decode engine with KV/SSM caches, continuous
+batching, and the AÇAI semantic cache tier."""
+
+from repro.serve.engine import ServeEngine, generate, make_decode_step, make_prefill
+from repro.serve.semantic_cache import SemanticCachedLM, embed_prompt
+
+__all__ = ["SemanticCachedLM", "ServeEngine", "embed_prompt", "generate",
+           "make_decode_step", "make_prefill"]

@@ -1,0 +1,145 @@
+"""Serving engine: prefill + decode with KV/SSM caches, continuous batching.
+
+`make_prefill` / `make_decode_step` return pure jittable functions — these
+are exactly what launch/dryrun.py lowers for the decode_32k / long_500k
+shapes.  `ServeEngine` wraps them with slot-based continuous batching:
+a fixed batch of B slots, each carrying its own cache_len; finished slots
+are refilled from the request queue without recompiling (static shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache
+from repro.models.config import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig, s_max: int) -> Callable:
+    def prefill(params, batch, cache):
+        kw = {k: batch[k] for k in ("tokens", "embeds", "positions3")
+              if k in batch}
+        out = forward(params, cfg, cache=cache, cache_len=0, **kw)
+        return out.logits, out.cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, temperature: float = 0.0) -> Callable:
+    def decode_step(params, cache, last_tokens, cache_len, key=None,
+                    positions3=None):
+        """last_tokens: (B, 1) -> (next (B, 1), logits, new cache)."""
+        out = forward(params, cfg, tokens=last_tokens, cache=cache,
+                      cache_len=cache_len, positions3=positions3)
+        logits = out.logits[:, -1]
+        if temperature > 0 and key is not None:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, out.cache
+
+    return decode_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
+             s_max: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0):
+    """Greedy/temperature generation: prefill + lax.scan'd decode."""
+    b, s = prompt.shape
+    s_max = s_max or (s + steps)
+    cache = init_cache(cfg, b, s_max)
+    prefill = make_prefill(cfg, s_max)
+    decode = make_decode_step(cfg, temperature)
+
+    logits, cache = jax.jit(prefill)(params, {"tokens": prompt}, cache)
+    last = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    def step(carry, key):
+        last, cache, pos = carry
+        nxt, _, cache = decode(params, cache, last, pos, key)
+        return (nxt, cache, pos + 1), nxt[:, 0]
+
+    if steps <= 1:
+        return last
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps - 1)
+    (_, _, _), tokens = jax.jit(
+        lambda c, k: jax.lax.scan(step, c, k))((last, cache, jnp.asarray(s)),
+                                               keys)
+    # emitted sequence: the prefill-argmax token + the scanned decode tokens
+    return jnp.concatenate([last, tokens.T], axis=1)
+
+
+@dataclasses.dataclass
+class Slot:
+    active: bool = False
+    request_id: int = -1
+    cache_len: int = 0
+    budget: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Continuous batching over B fixed slots (static shapes, no recompiles)."""
+
+    def __init__(self, params, cfg: ModelConfig, batch: int, s_max: int,
+                 temperature: float = 0.0):
+        self.params, self.cfg = params, cfg
+        self.batch, self.s_max = batch, s_max
+        self.cache = init_cache(cfg, batch, s_max)
+        self.slots = [Slot() for _ in range(batch)]
+        self.queue: list[tuple[int, jax.Array, int]] = []
+        self.done: dict[int, list[int]] = {}
+        self._prefill1 = jax.jit(make_prefill(cfg, s_max))
+        self._decode = jax.jit(make_decode_step(cfg, temperature))
+        self._last = jnp.zeros((batch, 1), jnp.int32)
+        self._lens = jnp.zeros((batch,), jnp.int32)
+
+    def submit(self, request_id: int, prompt: jax.Array, max_tokens: int):
+        self.queue.append((request_id, prompt, max_tokens))
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            rid, prompt, budget = self.queue.pop(0)
+            # single-slot prefill: runs as a batch-1 jit (own compile), then
+            # the cache row is written into the engine batch.
+            cache1 = init_cache(self.cfg, 1, self.s_max)
+            logits, cache1 = self._prefill1(
+                self.params, {"tokens": prompt[None]}, cache1)
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), i, axis=0),
+                self.cache, cache1)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self._last = self._last.at[i, 0].set(nxt)
+            self._lens = self._lens.at[i].set(prompt.shape[0])
+            self.slots[i] = Slot(active=True, request_id=rid,
+                                 cache_len=prompt.shape[0], budget=budget,
+                                 tokens=[nxt])
+
+    def step(self):
+        """One decode step for every active slot."""
+        self._admit()
+        if not any(s.active for s in self.slots):
+            return False
+        # NOTE: slots share a common cache_len frontier per decode call;
+        # per-slot lens are handled by the attention write offsets.
+        pos = int(max(s.cache_len for s in self.slots if s.active))
+        nxt, _, self.cache = self._decode(
+            self.params, self.cache, self._last, jnp.asarray(pos))
+        self._last = nxt
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            slot.tokens.append(int(nxt[i, 0]))
+            slot.cache_len += 1
+            slot.budget -= 1
+            if slot.budget <= 0:
+                self.done[slot.request_id] = slot.tokens
+                self.slots[i] = Slot()
+        return True

@@ -1,0 +1,79 @@
+"""Semantic cache: AÇAI as the retrieval tier in front of LM inference.
+
+The deployment the paper motivates (refs [3]-[6], [20], [49]): an edge
+server receives prompts, embeds them, and runs a similarity search over a
+catalog of previously computed results.  AÇAI decides per-object whether
+to serve from the local store (cost = dissimilarity only) or compute /
+fetch remotely (cost = dissimilarity + c_f, where c_f is calibrated to the
+inference cost), and updates the local store with OMA.
+
+`embed_prompt` derives the request embedding from the LM's own token
+embedding table (mean pooled + normalised) — no extra encoder needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oma as oma_lib
+from repro.core import policy as acai
+from repro.models.config import ModelConfig
+
+
+def embed_prompt(params, tokens: jax.Array) -> jax.Array:
+    """(S,) int32 -> (d,) normalised mean-pooled embedding."""
+    e = params["embed"][tokens].astype(jnp.float32)
+    v = jnp.mean(e, axis=0)
+    return v / jnp.maximum(jnp.linalg.norm(v), 1e-6)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    served_local: int = 0
+    generated: int = 0
+    total_gain: float = 0.0
+
+
+class SemanticCachedLM:
+    """AÇAI similarity cache wrapping a generate() callable."""
+
+    def __init__(self, params, cfg: ModelConfig, catalog_embs: jax.Array,
+                 catalog_payloads: list, generate_fn: Callable,
+                 h: int = 64, k: int = 4, c_f: Optional[float] = None,
+                 eta: Optional[float] = None, seed: int = 0):
+        from repro.core.costs import calibrate_fetch_cost
+
+        self.params, self.cfg = params, cfg
+        self.payloads = catalog_payloads
+        self.generate_fn = generate_fn
+        c_f = c_f if c_f is not None else float(
+            calibrate_fetch_cost(catalog_embs, kth=min(50, len(catalog_payloads) - 1)))
+        acfg = acai.AcaiConfig(
+            h=h, k=k, c_f=c_f, c_remote=max(4 * k, 16), c_local=max(k, 8),
+            oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f))
+        self.cache = acai.AcaiCache(catalog_embs, acfg, seed=seed)
+        self.stats = ServeStats()
+
+    def query(self, prompt_tokens: jax.Array):
+        """Returns (payloads, metrics): the k most similar cached results,
+        each tagged local/remote; remote ones trigger generation."""
+        r = embed_prompt(self.params, prompt_tokens)
+        m = self.cache.serve_update(r)
+        self.stats.requests += 1
+        self.stats.served_local += int(m.served_local)
+        self.stats.total_gain += float(m.gain_int)
+        if int(m.served_local) < self.cache.cfg.k:
+            # at least one object must be produced/fetched remotely
+            self.stats.generated += 1
+            _ = self.generate_fn(prompt_tokens)
+        return m
+
+    @property
+    def nag(self) -> float:
+        return self.cache.normalized_gain(self.stats.total_gain,
+                                          self.stats.requests)

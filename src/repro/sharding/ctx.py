@@ -1,0 +1,72 @@
+"""Sharding-annotation context.
+
+Model code stays mesh-agnostic: layers call `annotate(x, axes)` with
+*logical* axes; when a launcher activates a mesh context the call becomes
+jax.lax.with_sharding_constraint (guiding the SPMD partitioner at the
+places XLA's default propagation is weak — MoE dispatch buffers,
+activation boundaries); otherwise it is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+def mesh_active() -> bool:
+    return _current() is not None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, batch_axes: tuple):
+    """batch_axes: mesh axes carrying the batch dim, e.g. ('pod', 'data')."""
+    prev = _current()
+    _STATE.ctx = {"mesh": mesh, "batch_axes": batch_axes}
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _resolve(axis, ctx):
+    if axis == "batch":
+        return ctx["batch_axes"]
+    return axis
+
+
+def annotate(x: jax.Array, axes: Sequence) -> jax.Array:
+    """axes entries: None | 'model' | 'data' | 'batch' (logical).  Axes whose
+    size does not divide the mesh axis are dropped silently."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ax_size(a):
+        if isinstance(a, tuple):
+            n = 1
+            for t in a:
+                n *= sizes[t]
+            return n
+        return sizes[a]
+
+    resolved = []
+    for dim, axis in zip(x.shape, axes):
+        axis = _resolve(axis, ctx)
+        if axis is None or dim % ax_size(axis) != 0:
+            resolved.append(None)
+        else:
+            resolved.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

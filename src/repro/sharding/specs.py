@@ -1,0 +1,192 @@
+"""PartitionSpec rules for params, optimizer state, batches and caches.
+
+TP: head/FFN/expert dims shard over `model`.  FSDP (cfg.fsdp): the other
+matrix dim additionally shards over `data` (XLA all-gathers params per
+layer — ZeRO-3 semantics under pjit).  EP: expert-stacked weights shard E
+over `model` when E >= mesh model size, otherwise expert-internal FFN dims
+shard (TP-within-expert).  DP: the batch dim shards over ('pod','data').
+
+Every rule passes through a divisibility check: an axis that does not
+divide the dimension is dropped (replicated) — this is what makes one rule
+set serve all ten architectures (e.g. mamba2's 24 SSD heads do not divide
+a 16-way model axis; its head-indexed vectors replicate while its big
+matrices still shard).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# param-name -> (axis per dim) templates; 'F' = fsdp axis (data, if enabled)
+_RULES_2D = {
+    "embed": ("model", "F"),
+    "lm_head": ("F", "model"),
+    "wq": ("F", "model"), "wk": ("F", "model"), "wv": ("F", "model"),
+    "wo": ("model", "F"),
+    "wi": ("F", "model"), "wg": ("F", "model"),
+    "in_proj": ("F", "model"), "out_proj": ("model", "F"),
+    "wq_a": ("F", "model"), "wq_b": ("F", "model"),
+    "wkv_a": ("F", "model"), "wk_b": ("F", "model"), "wv_b": ("F", "model"),
+    "router": ("F", None),
+    "proj": ("F", "model"),
+    "conv_w": (None, "model"),
+}
+_RULES_1D_MODEL = {"bq", "bk", "bv", "conv_b", "a_log", "dt_bias", "d_skip",
+                   "norm_w"}
+
+
+def _axis_size(mesh_shape: dict, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh_shape.get(a, 1)
+        return n
+    return mesh_shape.get(axis, 1)
+
+
+def _check(spec_axes, shape, mesh_shape):
+    out = []
+    for dim, axis in zip(shape, spec_axes):
+        out.append(axis if axis and dim % _axis_size(mesh_shape, axis) == 0
+                   else None)
+    return tuple(out)
+
+
+def param_pspec(path_keys, shape, cfg: ModelConfig, mesh_shape: dict) -> P:
+    name = path_keys[-1]
+    stacked = path_keys[0] == "body"  # leading n_units axis from the scan
+    core_shape = shape[1:] if stacked else shape
+    fsdp = "data" if cfg.fsdp else None
+
+    def t(axes):
+        axes = tuple(fsdp if a == "F" else a for a in axes)
+        axes = _check(axes, core_shape, mesh_shape)
+        return P(*((None,) + axes)) if stacked else P(*axes)
+
+    if len(core_shape) == 3 and name in ("wi", "wg", "wo"):
+        e = core_shape[0]
+        if e % _axis_size(mesh_shape, "model") == 0:
+            axes = ("model", fsdp, None) if name in ("wi", "wg") else \
+                   ("model", None, fsdp)
+        else:  # few experts: TP inside each expert instead
+            axes = (None, fsdp, "model") if name in ("wi", "wg") else \
+                   (None, "model", fsdp)
+        axes = _check(axes, core_shape, mesh_shape)
+        return P(*((None,) + axes)) if stacked else P(*axes)
+    if len(core_shape) == 2 and name in _RULES_2D:
+        # attention projections: if the HEAD counts do not divide the model
+        # axis (e.g. qwen2-vl's 28H/kv4 on a 16-way axis), sharding the
+        # flattened head*dim axis forces a reshard at every (B,S,H,D)
+        # reshape — per-layer all-gathers.  Fall back to data-only sharding
+        # for those matrices (§Perf 'head-alignment' iteration).
+        if cfg.replicate_misaligned_heads and name in ("wq", "wk", "wv",
+                                                       "wo"):
+            msize = _axis_size(mesh_shape, "model")
+            heads = cfg.n_kv_heads if name in ("wk", "wv") else cfg.n_heads
+            if heads and msize > 1 and heads % msize != 0:
+                axes = (fsdp, None) if name != "wo" else (None, fsdp)
+                axes = _check(axes, core_shape, mesh_shape)
+                return P(*((None,) + axes)) if stacked else P(*axes)
+        return t(_RULES_2D[name])
+    if len(core_shape) == 1 and name in _RULES_1D_MODEL:
+        return t(("model",))
+    # norms, scalars, everything else: replicated
+    return P(*((None,) * len(shape)))
+
+
+def _path_keys(path) -> tuple:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh_shape: dict):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(_path_keys(path), leaf.shape, cfg,
+                                       mesh_shape),
+        params_shape)
+
+
+def opt_pspecs(name: str, params_shape, pspecs, cfg: ModelConfig,
+               mesh_shape: dict):
+    """Optimizer-state specs mirroring the param specs.
+
+    AdamW: master/m/v share the param spec.  Adafactor: vr drops the last
+    dim's axis, vc drops the second-to-last."""
+    if name == "adamw":
+        return {"master": pspecs, "m": pspecs, "v": pspecs, "count": P()}
+
+    def factored(leaf, spec):
+        axes = tuple(spec)
+        # pad the spec to the leaf's rank (trailing dims replicated)
+        axes = axes + (None,) * (len(leaf.shape) - len(axes))
+        if len(leaf.shape) >= 2:
+            return {"vr": P(*axes[:-1]), "vc": P(*(axes[:-2] + axes[-1:]))}
+        return {"v": P(*axes)}
+
+    # params_shape drives the structure; the pspec tree matches it leafwise
+    v = jax.tree.map(factored, params_shape, pspecs)
+    return {"v": v, "count": P()}
+
+
+def batch_pspecs(cfg: ModelConfig, batch_specs: dict, multi_pod: bool,
+                 mesh_shape: dict | None = None):
+    """Batch dims shard over ('pod','data'); any dim that does not divide
+    (e.g. global_batch=1 in long_500k) falls back: for caches/tokens the
+    sequence dim takes the batch axes instead when it divides (handled in
+    cache_pspecs); here the axis is simply dropped."""
+    batch_ax = ("pod", "data") if multi_pod else ("data",)
+    mesh_shape = mesh_shape or {}
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions3":
+            axes = (None, batch_ax) + (None,) * (len(v.shape) - 2)
+        else:
+            axes = (batch_ax,) + (None,) * (len(v.shape) - 1)
+        out[k] = P(*_check(axes, v.shape, mesh_shape))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, mesh_shape: dict,
+                 multi_pod: bool):
+    """KV caches: batch over ('pod','data'), kv-head/feature dim over
+    'model' when divisible."""
+    batch_ax = ("pod", "data") if multi_pod else ("data",)
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        stacked = keys[0] == "body"
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        name = keys[-1]
+        bsz = _axis_size(mesh_shape, batch_ax)
+        # long-context decode (global_batch=1): shard the SEQUENCE dim of
+        # the KV/latent caches over the batch axes instead.
+        seq_shard = shape[0] % bsz != 0 if shape else False
+        if name in ("k", "v"):            # (B, S, KV, D)
+            axes = ((None, batch_ax, "model", None) if seq_shard
+                    else (batch_ax, None, "model", None))
+        elif name in ("ckv", "krope"):    # (B, S, R)
+            axes = ((None, batch_ax, None) if seq_shard
+                    else (batch_ax, None, None))
+        elif name == "conv":              # (B, K-1, CH)
+            axes = (batch_ax, None, "model")
+        elif name == "ssm":               # (B, H, P, N)
+            axes = (batch_ax, "model", None, None)
+        else:
+            axes = (None,) * len(shape)
+        axes = _check(axes, shape, mesh_shape)
+        return P(*((None,) + axes)) if stacked else P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def as_shardings(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs, is_leaf=lambda x: isinstance(x, P))

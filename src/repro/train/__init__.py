@@ -1,0 +1,10 @@
+"""Training substrate: optimizers (AdamW/Adafactor from scratch), train
+step with grad-accum + remat, synthetic data pipeline, checkpointing with
+elastic restore, fault-tolerant loop + straggler monitor."""
+
+from repro.train.optimizer import OptConfig, apply_opt, init_opt
+from repro.train.train_step import (TrainMetrics, init_train_state, loss_fn,
+                                    make_train_step)
+
+__all__ = ["OptConfig", "TrainMetrics", "apply_opt", "init_opt",
+           "init_train_state", "loss_fn", "make_train_step"]

@@ -1,0 +1,83 @@
+"""Per-arch batch construction + ShapeDtypeStruct input specs.
+
+The modality frontends are STUBS per the assignment: audio/vision batches
+carry precomputed frame/patch embeddings next to (or instead of) tokens.
+A batch is a flat dict of arrays; `input_specs` mirrors it with
+ShapeDtypeStructs for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+N_PATCHES = 1024   # vision prefix length inside seq_len (stubbed frontend)
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeSpec, kind: str | None = None):
+    """Returns {name: (shape, dtype)} for one *global* batch."""
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        out = {"tokens": ((b, 1), jnp.int32)}
+        if cfg.pos_emb == "mrope":
+            out["positions3"] = ((3, b, 1), jnp.int32)
+        return out
+    if cfg.modality == "audio":
+        out = {"embeds": ((b, s, cfg.d_model), dt)}
+        if kind == "train":
+            out["labels"] = ((b, s), jnp.int32)
+            out["loss_mask"] = ((b, s), jnp.float32)
+        return out
+    if cfg.modality == "vision":
+        p = min(N_PATCHES, s // 2)
+        out = {
+            "tokens": ((b, s - p), jnp.int32),
+            "embeds": ((b, p, cfg.d_model), dt),
+            "positions3": ((3, b, s), jnp.int32),
+        }
+        if kind == "train":
+            out["labels"] = ((b, s), jnp.int32)
+            out["loss_mask"] = ((b, s), jnp.float32)
+        return out
+    out = {"tokens": ((b, s), jnp.int32)}
+    if kind == "train":
+        out["labels"] = ((b, s), jnp.int32)
+        out["loss_mask"] = ((b, s), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, kind: str | None = None):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in batch_shapes(cfg, shape, kind).items()}
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0,
+                    kind: str | None = None):
+    """Materialised random batch with the same structure (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (sh, dt) in batch_shapes(cfg, shape, kind).items():
+        if dt == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else max(sh[-1], 2)
+            out[k] = jnp.asarray(rng.integers(0, hi, sh), jnp.int32)
+        elif k == "loss_mask":
+            out[k] = jnp.ones(sh, jnp.float32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, sh), dt)
+    return out
+
+
+def forward_kwargs(cfg: ModelConfig, batch: dict) -> dict:
+    """Split a batch dict into forward() inputs (labels stay behind)."""
+    kw = {}
+    for k in ("tokens", "embeds", "positions3"):
+        if k in batch:
+            kw[k] = batch[k]
+    return kw

@@ -1,0 +1,93 @@
+"""Fault tolerance + straggler mitigation for long-running training.
+
+* `TrainLoop` — checkpoint-every-N steps, automatic resume-from-latest on
+  (re)start, bounded restart budget.  Failures are whatever the step
+  function raises (on real fleets: device loss / preemption surfaced as
+  XlaRuntimeError; in tests: injected exceptions).
+* `StragglerMonitor` — EMA step timing; flags steps slower than
+  `threshold x` the running median.  On TPU pods, persistent stragglers
+  are handled by checkpoint + restart without the slow host (elastic
+  resume on a smaller mesh — `checkpoint.restore` already re-shards);
+  the monitor provides the detection signal and the decision log.
+* `reshard` — move a whole state tree onto a new mesh (elastic scaling).
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.train import checkpoint
+
+log = logging.getLogger("repro.fault")
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.times = collections.deque(maxlen=window)
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        med = sorted(self.times)[len(self.times) // 2]
+        slow = len(self.times) >= 5 and seconds > self.threshold * med
+        if slow:
+            self.flagged.append((step, seconds))
+            log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                        step, seconds, med)
+        return slow
+
+
+def reshard(tree, shardings):
+    """Elastic re-shard: device_put every leaf onto the new sharding tree."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+class TrainLoop:
+    """Restartable training loop around a pure step function."""
+
+    def __init__(self, step_fn: Callable, state, ckpt_dir: str,
+                 ckpt_every: int = 50, max_restarts: int = 3,
+                 monitor: Optional[StragglerMonitor] = None):
+        self.step_fn = step_fn
+        self.state = state
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.monitor = monitor or StragglerMonitor()
+        self.restarts = 0
+
+    def _resume_step(self) -> int:
+        latest = checkpoint.latest_step(self.ckpt_dir)
+        if latest is None:
+            return 0
+        self.state = checkpoint.restore(self.ckpt_dir, latest, self.state)
+        log.info("resumed from step %d", latest)
+        return latest
+
+    def run(self, num_steps: int, batch_fn: Callable):
+        """Runs to `num_steps`, restarting from the latest checkpoint on
+        failure (up to max_restarts)."""
+        step = self._resume_step()
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                self.state = self.step_fn(self.state, batch_fn(step), step)
+                jax.block_until_ready(self.state)
+                self.monitor.record(step, time.time() - t0)
+                step += 1
+                if step % self.ckpt_every == 0 or step == num_steps:
+                    checkpoint.save(self.ckpt_dir, step, self.state)
+            except Exception:  # noqa: BLE001 — restart path
+                self.restarts += 1
+                log.exception("step %d failed (restart %d/%d)", step,
+                              self.restarts, self.max_restarts)
+                if self.restarts > self.max_restarts:
+                    raise
+                step = self._resume_step()
+        return self.state

@@ -1,0 +1,151 @@
+"""Optimizers, built from scratch (no optax): AdamW and Adafactor.
+
+AdamW keeps fp32 master weights + two fp32 moments (12 bytes/param) — used
+for the small/medium archs.  Adafactor keeps a factored second moment
+(row + col vectors for >=2-D params) and no momentum — O(sum of dims)
+state, mandatory for the 100B+ archs where fp32 Adam state exceeds the
+aggregate HBM of the assigned meshes (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay: float = 0.8
+    clip_threshold: float = 1.0
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+    return {
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: OptConfig):
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * master
+        new_master = master - cfg.lr * step
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, {"master": master, "m": m, "v": v, "count": count}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments, momentum-free)
+# --------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),   # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, jnp.float32)}
+
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig):
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(g.shape):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta * v["v"] + (1 - beta) * g2
+            new_v = {"v": vhat}
+        update = g / jnp.sqrt(vhat + 1e-30)
+        # update clipping (Shazeer & Stern)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * update).astype(p.dtype)
+        return new_p, new_v
+
+    out = jax.tree.map(upd, grads, state["v"], params,
+                       is_leaf=lambda x: isinstance(x, jax.Array))
+    is_pair = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    new_v = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return new_params, {"v": new_v, "count": count}
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def init_opt(name: str, params):
+    return adamw_init(params) if name == "adamw" else adafactor_init(params)
+
+
+def apply_opt(name: str, grads, state, params, cfg: OptConfig):
+    if name == "adamw":
+        return adamw_update(grads, state, params, cfg)
+    return adafactor_update(grads, state, params, cfg)

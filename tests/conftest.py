@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_instance(rng, n=24, k=4, c_f=0.7, scale=2.0):
+    d = (rng.random(n) * scale).astype(np.float32)
+    y = rng.random(n).astype(np.float32)
+    x = (rng.random(n) < 0.4).astype(np.float32)
+    return d, y, x, k, c_f

@@ -1,0 +1,52 @@
+"""Distributed AÇAI retrieval step == single-device reference (subprocess
+with 8 placeholder devices; same discipline as launch/dryrun.py)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core.distributed import make_retrieval_step, reference_step
+
+    rng = np.random.default_rng(0)
+    N, d, B, C, k, h = 512, 16, 8, 24, 4, 32
+    catalog = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    y0 = jnp.full((N,), h / N, jnp.float32)
+    reqs = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    step = make_retrieval_step(mesh, n_shard=N // 4, d=d, c=C, k=k,
+                               c_f=1.0, h=h, eta=0.05, top_a=h + 16,
+                               batch_axes=("data",))
+    y1, ans, metrics = jax.jit(step)(catalog, y0, reqs)
+    y_ref, ans_ref = reference_step(catalog, y0, reqs, c=C, k=k, c_f=1.0,
+                                    h=h, eta=0.05, top_a=h + 16)
+    err = float(jnp.abs(y1 - y_ref).max())
+    # answers: compare the (sorted) candidate object sets per request
+    same = all(set(np.array(a).tolist()) == set(np.array(b).tolist())
+               for a, b in zip(np.array(ans), np.array(ans_ref)))
+    print(json.dumps({"yerr": err, "answers_match": bool(same),
+                      "gain": float(metrics["gain"]),
+                      "ndev": jax.device_count()}))
+""")
+
+
+def test_distributed_matches_reference():
+    out = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, timeout=600,
+                         env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert res["yerr"] < 2e-4, res
+    assert res["answers_match"], res
+    # uniform init y = h/N < 0.5 => thresholded cache starts empty => zero
+    # gain on the first step; it must never be negative.
+    assert res["gain"] >= 0

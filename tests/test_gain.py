@@ -1,0 +1,92 @@
+"""Unit tests: gain / cost / serve vs the pure-numpy oracle (paper App. A/B)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gain as G
+from repro.core import ref
+from conftest import make_instance
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_gain_fractional_matches_eq7(seed, k):
+    rng = np.random.default_rng(seed)
+    d, y, x, _, c_f = make_instance(rng, n=30, k=k)
+    got = float(G.gain_value(jnp.array(d), jnp.array(y), k, c_f))
+    want = ref.gain_fractional(d, y, k, c_f)
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_gain_integral_matches_lemma6(seed):
+    """Eq. (7) at integral x == empty_cost - Eq. (5) cost (Lemma 6)."""
+    rng = np.random.default_rng(seed)
+    d, y, x, k, c_f = make_instance(rng)
+    got = float(G.gain_value(jnp.array(d), jnp.array(x), k, c_f))
+    want = ref.gain_integral(d, x, k, c_f)
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_serve_cost_matches_eq5(seed):
+    rng = np.random.default_rng(seed)
+    d, y, x, k, c_f = make_instance(rng)
+    res = G.serve(jnp.array(d), jnp.array(x), k, c_f)
+    assert float(res.cost) == pytest.approx(ref.cost_integral(d, x, k, c_f), abs=1e-4)
+    assert float(res.gain) == pytest.approx(ref.gain_integral(d, x, k, c_f), abs=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_serve_is_optimal_composition_eq2(seed):
+    """Greedy augmented-entry selection == brute-force arg min of Eq. (2)."""
+    rng = np.random.default_rng(seed)
+    d = rng.random(10).astype(np.float32)
+    x = (rng.random(10) < 0.5).astype(np.float32)
+    res = G.serve(jnp.array(d), jnp.array(x), 3, 0.3)
+    assert float(res.cost) == pytest.approx(
+        ref.best_answer_bruteforce(d, x, 3, 0.3), abs=1e-5
+    )
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lemma1_bounds(seed):
+    rng = np.random.default_rng(seed)
+    d, y, x, k, c_f = make_instance(rng)
+    g = float(G.gain_value(jnp.array(d), jnp.array(y), k, c_f))
+    low = float(G.lower_bound_l(jnp.array(d), jnp.array(y), k, c_f))
+    low_ref = ref.lower_bound(d, y, k, c_f)
+    assert low == pytest.approx(low_ref, rel=1e-4, abs=1e-4)
+    assert low <= g + 1e-4
+    assert g <= low / (1 - 1 / np.e) + 1e-3
+
+
+def test_gain_with_padded_candidates():
+    """Padding/duplicate slots (BIG cost, zero weight) must be neutral."""
+    rng = np.random.default_rng(3)
+    d, y, x, k, c_f = make_instance(rng, n=20)
+    from repro.core.costs import BIG_COST
+
+    d_pad = np.concatenate([d, np.full(12, BIG_COST, np.float32)])
+    y_pad = np.concatenate([y, np.zeros(12, np.float32)])
+    a = float(G.gain_value(jnp.array(d), jnp.array(y), k, c_f))
+    b = float(G.gain_value(jnp.array(d_pad), jnp.array(y_pad), k, c_f))
+    assert a == pytest.approx(b, rel=1e-5)
+
+
+def test_empty_cache_zero_gain():
+    rng = np.random.default_rng(4)
+    d, y, x, k, c_f = make_instance(rng)
+    zero = jnp.zeros_like(jnp.array(y))
+    assert float(G.gain_value(jnp.array(d), zero, k, c_f)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_full_cache_max_gain():
+    """Caching everything ⇒ gain = k*c_f (all fetch costs saved)."""
+    rng = np.random.default_rng(5)
+    d, y, x, k, c_f = make_instance(rng)
+    ones = jnp.ones_like(jnp.array(y))
+    assert float(G.gain_value(jnp.array(d), ones, k, c_f)) == pytest.approx(
+        k * c_f, rel=1e-5
+    )

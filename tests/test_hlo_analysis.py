@@ -1,0 +1,64 @@
+"""Loop-aware HLO analyzer vs hand-computed programs (dry-run substrate)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import summarize
+
+SDS = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    s = summarize(_text(lambda a, b: a @ b, SDS, SDS))
+    assert s.flops == 2 * 64 ** 3
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=9)[0]
+    s = summarize(_text(f, SDS, SDS))
+    assert s.flops == 9 * 2 * 64 ** 3
+    assert any(trip == 9 for _, trip in s.loops)
+
+
+def test_nested_scans_multiply():
+    def f(x, w):
+        def outer(c, _):
+            inner = jax.lax.scan(lambda ci, _: (ci @ w, None), c, None,
+                                 length=3)[0]
+            return inner, None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    s = summarize(_text(f, SDS, SDS))
+    assert s.flops == 15 * 2 * 64 ** 3
+
+
+def test_bytes_scale_with_loop():
+    def f(x):
+        return jax.lax.scan(lambda c, _: (jnp.tanh(c), None), x, None,
+                            length=4)[0]
+    s4 = summarize(_text(f, SDS))
+
+    def f8(x):
+        return jax.lax.scan(lambda c, _: (jnp.tanh(c), None), x, None,
+                            length=8)[0]
+    s8 = summarize(_text(f8, SDS))
+    assert s8.bytes > s4.bytes
+
+
+def test_remat_increases_flops():
+    w = SDS
+
+    def loss(p, x):
+        h = x
+        for _ in range(3):
+            h = jnp.tanh(h @ p)
+        return jnp.sum(h)
+
+    plain = summarize(_text(jax.grad(loss), SDS, SDS))
+    remat = summarize(_text(jax.grad(jax.checkpoint(loss)), SDS, SDS))
+    assert remat.flops >= plain.flops

@@ -1,0 +1,77 @@
+"""ANN index substrate: recall, integrity, PQ codec behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import trace
+from repro.index import (FlatIndex, IVFFlatIndex, IVFPQIndex, LSHIndex,
+                         NSWIndex, PQCodec)
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    catalog, reqs, _ = trace.amazon_like(n=4000, d=32, t=64, seed=0)
+    cat = jnp.array(catalog)
+    q = jnp.array(reqs[:64])
+    truth = np.array(FlatIndex(cat).query(q, 10)[1])
+    return cat, q, truth
+
+
+def _recall(index, q, truth, k=10):
+    ids = np.array(index.query(q, k)[1])
+    return np.mean([len(set(ids[b]) & set(truth[b])) / k for b in range(q.shape[0])])
+
+
+def test_flat_exact(clustered):
+    cat, q, truth = clustered
+    d, i = FlatIndex(cat).query(q, 10)
+    assert (np.array(d) >= -1e-5).all()
+    assert np.array_equal(np.array(i), truth)
+
+
+def test_ivf_recall(clustered):
+    cat, q, truth = clustered
+    assert _recall(IVFFlatIndex(cat, nlist=64, nprobe=12), q, truth) > 0.9
+
+
+def test_ivfpq_recall(clustered):
+    cat, q, truth = clustered
+    assert _recall(IVFPQIndex(cat, nlist=64, nprobe=12, m=8, refine=4),
+                   q, truth) > 0.8
+
+
+def test_lsh_recall(clustered):
+    cat, q, truth = clustered
+    assert _recall(LSHIndex(cat, tables=16, bits=8), q, truth) > 0.8
+
+
+def test_nsw_recall(clustered):
+    cat, q, truth = clustered
+    assert _recall(NSWIndex(cat, degree=16, beam=64, steps=32), q, truth) > 0.85
+
+
+def test_nsw_recall_uniform():
+    catalog, reqs, _ = trace.sift_like(n=4000, d=32, t=64, seed=1)
+    cat, q = jnp.array(catalog), jnp.array(reqs[:64])
+    truth = np.array(FlatIndex(cat).query(q, 10)[1])
+    assert _recall(NSWIndex(cat, degree=16, beam=48, steps=24), q, truth) > 0.85
+
+
+def test_pq_codec_roundtrip_error_decreases_with_m():
+    rng = np.random.default_rng(0)
+    data = jnp.array(rng.normal(size=(1500, 32)).astype(np.float32))
+    errs = []
+    for m in (2, 4, 8):
+        codec = PQCodec(data, m=m)
+        rec = codec.decode(codec.encode(data))
+        errs.append(float(jnp.mean(jnp.sum((rec - data) ** 2, -1))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_ivf_probes_more_lists_higher_recall(clustered):
+    cat, q, truth = clustered
+    r1 = _recall(IVFFlatIndex(cat, nlist=64, nprobe=1, seed=3), q, truth)
+    r8 = _recall(IVFFlatIndex(cat, nlist=64, nprobe=16, seed=3), q, truth)
+    assert r8 >= r1
+    assert r8 > 0.9

@@ -1,0 +1,137 @@
+"""End-to-end behaviour: AÇAI replay, baselines comparison, regret decay."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import baselines as B
+from repro.core import oma, policy, trace
+from repro.core.costs import calibrate_fetch_cost
+from repro.index.candidates import index_candidate_fn
+from repro.index import IVFFlatIndex
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog, reqs, ids = trace.sift_like(n=1500, d=16, t=2500, seed=0)
+    cat = jnp.array(catalog)
+    c_f = float(calibrate_fetch_cost(cat, kth=50, sample=256))
+    return catalog, reqs, cat, c_f
+
+
+def _run_acai(cat, reqs, c_f, h=80, k=10, **oma_kw):
+    cfg = policy.AcaiConfig(
+        h=h, k=k, c_f=c_f, c_remote=64, c_local=16,
+        oma=oma.OMAConfig(eta=oma_kw.pop("eta", 0.05 / c_f), **oma_kw),
+    )
+    fn = policy.exact_candidate_fn(cat, cfg.c_remote, cfg.c_local)
+    replay = policy.make_replay(cfg, fn)
+    state, m = replay(policy.init_state(cat.shape[0], cfg), jnp.array(reqs))
+    return np.array(m.gain_int), state, m, cfg
+
+
+def test_acai_beats_all_baselines(setup):
+    catalog, reqs, cat, c_f = setup
+    h, k = 80, 10
+    gains, _, m, cfg = _run_acai(cat, reqs, c_f, h=h, k=k)
+    nag_acai = B.nag(gains, k, c_f)[-1]
+
+    oracle = B.ServerOracle(catalog, reqs, kmax=64)
+    for name, cls in B.POLICIES.items():
+        kwargs = dict(h=h, k=k, c_f=c_f)
+        if name in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
+            kwargs.update(k_prime=2 * k, c_theta=1.5 * c_f)
+        mtr = B.run_policy(cls(catalog, oracle, **kwargs), reqs)
+        nag_p = B.nag(mtr["gain"], k, c_f)[-1]
+        assert nag_acai > nag_p, (name, nag_acai, nag_p)
+
+
+def test_gain_curve_stabilises(setup):
+    catalog, reqs, cat, c_f = setup
+    gains, _, m, cfg = _run_acai(cat, reqs, c_f)
+    nag = B.nag(gains, 10, c_f)
+    # paper Fig. 1: almost stationary after a few thousand requests,
+    # and far above the cold start
+    assert nag[-1] > nag[100]
+    assert abs(nag[-1] - nag[-500]) < 0.05
+
+
+def test_served_answers_increasingly_local(setup):
+    catalog, reqs, cat, c_f = setup
+    _, _, m, cfg = _run_acai(cat, reqs, c_f)
+    served = np.array(m.served_local)
+    assert served[-500:].mean() > served[:200].mean()
+    assert served[-500:].mean() > 5  # most of k=10 served locally at steady state
+
+
+def test_depround_occupancy_exact(setup):
+    catalog, reqs, cat, c_f = setup
+    _, _, m, cfg = _run_acai(cat, reqs[:400], c_f, rounding="depround",
+                             round_every=10)
+    occ = np.array(m.occupancy)
+    np.testing.assert_array_equal(occ, 80)
+
+
+def test_coupled_occupancy_concentrates(setup):
+    catalog, reqs, cat, c_f = setup
+    _, _, m, cfg = _run_acai(cat, reqs, c_f, rounding="coupled")
+    occ = np.array(m.occupancy)
+    assert abs(occ.mean() - 80) < 8
+    assert (np.abs(occ - 80) < 24).mean() > 0.99  # within ~5%·sqrt relax
+
+
+def test_negentropy_at_least_euclidean(setup):
+    """Paper Fig. 6: negative entropy >= Euclidean map (each at its best
+    learning rate — the paper tunes eta per map over a grid)."""
+    catalog, reqs, cat, c_f = setup
+    best_ne = max(
+        B.nag(_run_acai(cat, reqs, c_f, mirror="negentropy", eta=e)[0], 10, c_f)[-1]
+        for e in (0.02 / c_f, 0.1 / c_f, 0.5 / c_f)
+    )
+    best_eu = max(
+        B.nag(_run_acai(cat, reqs, c_f, mirror="euclidean", eta=e)[0], 10, c_f)[-1]
+        for e in (0.1 / (c_f * 80), 0.5 / (c_f * 80), 2.0 / (c_f * 80))
+    )
+    assert best_ne >= best_eu - 0.01
+
+
+def test_index_candidate_fn_close_to_exact(setup):
+    catalog, reqs, cat, c_f = setup
+    cfg = policy.AcaiConfig(h=80, k=10, c_f=c_f, c_remote=64, c_local=16,
+                            oma=oma.OMAConfig(eta=0.05 / c_f))
+    index = IVFFlatIndex(cat, nlist=48, nprobe=10)
+    fn_approx = index_candidate_fn(index, cat, cfg.c_remote, cfg.c_local)
+    replay = policy.make_replay(cfg, fn_approx)
+    state, m = replay(policy.init_state(cat.shape[0], cfg), jnp.array(reqs[:1200]))
+    g_approx = B.nag(np.array(m.gain_int), 10, c_f)[-1]
+    g_exact, _, _, _ = _run_acai(cat, reqs[:1200], c_f)
+    assert g_approx > 0.8 * B.nag(g_exact, 10, c_f)[-1]
+
+
+def test_time_average_regret_decays(setup):
+    """Theorem IV.1: time-averaged regret ~ O(1/sqrt(T)) against the best
+    static allocation in hindsight (approximated greedily)."""
+    catalog, reqs, cat, c_f = setup
+    k, h = 10, 80
+    gains, _, m, cfg = _run_acai(cat, reqs, c_f, h=h, k=k)
+    # best static-in-hindsight approx: cache the h most popular objects
+    # (popularity = exact nearest catalog object of each request)
+    d = np.linalg.norm(catalog[None, :, :] - reqs[:, None, :], axis=-1).argmin(1)
+    top = np.bincount(d, minlength=catalog.shape[0]).argsort()[::-1][:h]
+    x_static = np.zeros(catalog.shape[0], np.float32)
+    x_static[top] = 1.0
+
+    from repro.core import gain as G
+    # evaluate static gain over a subsample
+    sub = slice(0, 2500, 5)
+    static_gain = []
+    for r in reqs[sub]:
+        dfull = jnp.sum((cat - jnp.array(r)[None, :]) ** 2, -1)
+        static_gain.append(float(G.gain_value(dfull, jnp.array(x_static), k, c_f)))
+    static_avg = np.mean(static_gain)
+    avg_first = gains[:500].mean()
+    avg_last = gains[-500:].mean()
+    # regret per step shrinks: late average gain approaches the static optimum
+    assert (static_avg - avg_last) < (static_avg - avg_first) + 1e-6
+    assert avg_last > 0.85 * (1 - 1 / np.e) * static_avg

@@ -1,0 +1,59 @@
+"""Bregman projections onto the capped simplex vs the bisection oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import projection as P
+from repro.core import ref
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_negentropy_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 400))
+    h = int(rng.integers(1, n))
+    z = (rng.random(n) ** 3 * rng.choice([0.1, 1, 10])).astype(np.float32) + 1e-8
+    y = np.array(P.capped_simplex_negentropy(jnp.array(z), h))
+    yo = ref.project_capped_simplex_bisect(z.astype(np.float64), h, "negentropy")
+    assert abs(y.sum() - h) < 2e-3 * h
+    np.testing.assert_allclose(y, yo, atol=2e-3)
+    assert (y >= -1e-7).all() and (y <= 1 + 1e-6).all()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_euclidean_matches_oracle(seed):
+    rng = np.random.default_rng(50 + seed)
+    n = int(rng.integers(10, 400))
+    h = int(rng.integers(1, n))
+    z = rng.normal(0, 1, n).astype(np.float32)
+    y = np.array(P.capped_simplex_euclidean(jnp.array(z), h))
+    yo = ref.project_capped_simplex_bisect(z.astype(np.float64), h, "euclidean")
+    assert abs(y.sum() - h) < 1e-2
+    np.testing.assert_allclose(y, yo, atol=2e-3)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_topk_variant_equals_full_sort(seed):
+    rng = np.random.default_rng(99 + seed)
+    n = int(rng.integers(50, 500))
+    h = int(rng.integers(1, n // 2))
+    z = (rng.random(n) ** 2).astype(np.float32) + 1e-8
+    full = np.array(P.capped_simplex_negentropy(jnp.array(z), h))
+    fast = np.array(
+        P.capped_simplex_negentropy_topk(jnp.array(z), h, min(n, h + 16))
+    )
+    np.testing.assert_allclose(fast, full, atol=1e-3)
+
+
+def test_identity_when_feasible():
+    """Projecting a point already in B_h returns it (Bregman projection
+    optimality: D(y, z) = 0 iff y = z)."""
+    rng = np.random.default_rng(5)
+    n, h = 64, 8
+    z = rng.random(n).astype(np.float32)
+    z = np.minimum(z / z.sum() * h, 1.0)
+    z += (h - z.sum()) * (1 - z) / (1 - z).sum()
+    z = np.clip(z, 1e-6, 1.0)
+    y = np.array(P.capped_simplex_negentropy(jnp.array(z), h))
+    np.testing.assert_allclose(y, z, atol=5e-3)

@@ -1,0 +1,91 @@
+"""Property-based (hypothesis) tests on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import gain as G
+from repro.core import projection as P
+
+
+def _dists(n):
+    return hnp.arrays(
+        np.float32, (n,),
+        elements=st.floats(0.0, 10.0, width=32, allow_nan=False),
+    )
+
+
+def _fracs(n):
+    return hnp.arrays(
+        np.float32, (n,),
+        elements=st.floats(0.0, 1.0, width=32, allow_nan=False),
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=_dists(20), y=_fracs(20), z=_fracs(20),
+       lam=st.floats(0.0, 1.0, width=32),
+       k=st.integers(1, 5), c_f=st.floats(0.05, 3.0))
+def test_gain_concave_along_segments(d, y, z, lam, k, c_f):
+    """G(lam y + (1-lam) z) >= lam G(y) + (1-lam) G(z)  (Sec. IV-D)."""
+    dj = jnp.array(d)
+    gy = float(G.gain_value(dj, jnp.array(y), k, c_f))
+    gz = float(G.gain_value(dj, jnp.array(z), k, c_f))
+    mid = lam * y + (1 - lam) * z
+    gm = float(G.gain_value(dj, jnp.array(mid), k, c_f))
+    assert gm >= lam * gy + (1 - lam) * gz - 1e-3 * (1 + abs(gm))
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=_dists(20), y=_fracs(20), k=st.integers(1, 5), c_f=st.floats(0.05, 3.0))
+def test_lemma1_sandwich(d, y, k, c_f):
+    dj, yj = jnp.array(d), jnp.array(y)
+    g = float(G.gain_value(dj, yj, k, c_f))
+    low = float(G.lower_bound_l(dj, yj, k, c_f))
+    assert low <= g + 1e-3 * (1 + abs(g))
+    assert g <= low / (1 - 1 / np.e) + 1e-3 * (1 + abs(g))
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=_dists(20), y=_fracs(20), k=st.integers(1, 5), c_f=st.floats(0.05, 3.0),
+       i=st.integers(0, 19), delta=st.floats(0.0, 1.0, width=32))
+def test_gain_monotone_in_cache_state(d, y, k, c_f, i, delta):
+    """Storing more of any object never decreases the gain."""
+    y2 = y.copy()
+    y2[i] = min(1.0, y2[i] + delta)
+    g1 = float(G.gain_value(jnp.array(d), jnp.array(y), k, c_f))
+    g2 = float(G.gain_value(jnp.array(d), jnp.array(y2), k, c_f))
+    assert g2 >= g1 - 1e-3 * (1 + abs(g1))
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=_dists(24), k=st.integers(1, 5), c_f=st.floats(0.05, 3.0),
+       bits=st.integers(0, 2 ** 24 - 1))
+def test_serve_cost_never_exceeds_empty_cost(d, k, c_f, bits):
+    x = np.array([(bits >> i) & 1 for i in range(24)], np.float32)
+    res = G.serve(jnp.array(d), jnp.array(x), k, c_f)
+    empty = float(G.empty_cache_cost(jnp.array(d), k, c_f))
+    assert float(res.cost) <= empty + 1e-4
+    assert float(res.gain) >= -1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(z=hnp.arrays(np.float32, (60,),
+                    elements=st.floats(0.0, 100.0, width=32, allow_nan=False)),
+       h=st.integers(1, 59))
+def test_projection_feasibility(z, h):
+    z = z + np.float32(1e-6)  # keep strictly inside the entropy domain
+    y = np.array(P.capped_simplex_negentropy(jnp.array(z), h))
+    assert (y >= -1e-6).all() and (y <= 1 + 1e-5).all()
+    assert abs(y.sum() - h) < 2e-3 * h + 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(z=hnp.arrays(np.float32, (60,),
+                    elements=st.floats(-10.0, 10.0, width=32)),
+       h=st.integers(1, 59))
+def test_euclidean_projection_feasibility(z, h):
+    y = np.array(P.capped_simplex_euclidean(jnp.array(z), h))
+    assert (y >= -1e-6).all() and (y <= 1 + 1e-5).all()
+    assert abs(y.sum() - h) < 1e-2

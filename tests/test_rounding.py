@@ -1,0 +1,94 @@
+"""DepRound + CoupledRounding properties (paper Lemma 2/3, Theorem F.1)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import rounding as R
+
+
+def _feasible_y(rng, n, h):
+    z = rng.random(n)
+    z = np.minimum(z / z.sum() * h, 1.0)
+    for _ in range(8):
+        z = np.clip(z + (h - z.sum()) * (1 - z) / max((1 - z).sum(), 1e-9), 0, 1)
+    return z.astype(np.float32)
+
+
+def test_depround_cardinality_exact():
+    rng = np.random.default_rng(0)
+    for n, h in [(32, 5), (100, 20), (7, 3)]:
+        y = jnp.array(_feasible_y(rng, n, h))
+        keys = jax.random.split(jax.random.PRNGKey(1), 200)
+        xs = np.array(jax.vmap(lambda k: R.depround(k, y))(keys))
+        assert set(np.unique(xs)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(xs.sum(1), h)
+
+
+def test_depround_marginals():
+    rng = np.random.default_rng(1)
+    n, h, trials = 64, 12, 4000
+    y = jnp.array(_feasible_y(rng, n, h))
+    keys = jax.random.split(jax.random.PRNGKey(2), trials)
+    xs = np.array(jax.vmap(lambda k: R.depround(k, y))(keys))
+    err = np.abs(xs.mean(0) - np.array(y)).max()
+    assert err < 4.0 / np.sqrt(trials), err  # ~4 sigma
+
+
+def test_depround_negative_correlation():
+    """Property (3): E prod_{i in S}(1 - x_i) <= prod (1 - y_i)."""
+    rng = np.random.default_rng(2)
+    n, h, trials = 48, 10, 4000
+    y = _feasible_y(rng, n, h)
+    keys = jax.random.split(jax.random.PRNGKey(3), trials)
+    xs = np.array(jax.vmap(lambda k: R.depround(k, jnp.array(y)))(keys))
+    viol = 0
+    for _ in range(40):
+        s = rng.choice(n, size=5, replace=False)
+        lhs = np.prod(1 - xs[:, s], axis=1).mean()
+        rhs = np.prod(1 - y[s])
+        if lhs > rhs + 4 * np.sqrt(rhs * (1 - rhs) / trials + 1e-9):
+            viol += 1
+    assert viol <= 2, viol
+
+
+def test_coupled_rounding_theorem_f1():
+    """E[x_{t+1}] = y_{t+1} and E||x_{t+1}-x_t||_1 = ||y_{t+1}-y_t||_1."""
+    rng = np.random.default_rng(3)
+    n, h, trials = 64, 12, 3000
+    y0 = _feasible_y(rng, n, h)
+    y1 = np.clip(y0 + rng.normal(0, 0.08, n).astype(np.float32), 0.01, 0.99)
+    keys = jax.random.split(jax.random.PRNGKey(4), trials)
+    x0 = np.array(
+        jax.vmap(lambda k: R.depround(k, jnp.array(y0)))(keys[: trials // 2])
+    )
+    x0 = np.concatenate([x0, x0])
+    keys2 = jax.random.split(jax.random.PRNGKey(5), trials)
+    x1 = np.array(
+        jax.vmap(lambda k, x: R.coupled_rounding(k, x, jnp.array(y0), jnp.array(y1)))(
+            keys2, jnp.array(x0)
+        )
+    )
+    assert np.abs(x1.mean(0) - y1).max() < 5.0 / np.sqrt(trials)
+    move = np.abs(x1 - x0).sum(1).mean()
+    target = np.abs(y1 - y0).sum()
+    assert move == pytest.approx(target, rel=0.15)
+
+
+def test_independent_rounding_occupancy_concentration():
+    """Chernoff Eq. (81): occupancy within (1 ± delta) h w.h.p."""
+    rng = np.random.default_rng(4)
+    n, h = 2000, 200
+    y = _feasible_y(rng, n, h)
+    keys = jax.random.split(jax.random.PRNGKey(6), 200)
+    xs = np.array(jax.vmap(lambda k: R.independent_rounding(k, jnp.array(y)))(keys))
+    occ = xs.sum(1)
+    assert np.abs(occ.mean() - h) < 0.05 * h
+    assert (np.abs(occ - h) < 0.25 * h).mean() > 0.99
+
+
+def test_movement_counts_fetches_only():
+    x_old = jnp.array([1.0, 0.0, 1.0, 0.0])
+    x_new = jnp.array([0.0, 1.0, 1.0, 1.0])
+    assert float(R.movement(x_new, x_old)) == 2.0

@@ -1,0 +1,46 @@
+"""Subgradient (Eq. 55) correctness: finite differences + subgradient inequality."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gain as G
+from repro.core import ref
+from conftest import make_instance
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("k", [1, 4])
+def test_matches_finite_differences(seed, k):
+    rng = np.random.default_rng(seed)
+    d, y, x, _, c_f = make_instance(rng, n=25, k=k)
+    _, g = G.gain_and_subgradient(jnp.array(d), jnp.array(y), k, c_f)
+    fd = ref.subgrad_fd(d, y, k, c_f)
+    np.testing.assert_allclose(np.array(g), fd, atol=2e-2)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_subgradient_inequality(seed):
+    """Concavity: G(z) <= G(y) + g(y).(z - y) for all z — the defining
+    property of a supergradient of a concave function."""
+    rng = np.random.default_rng(100 + seed)
+    d, y, x, k, c_f = make_instance(rng, n=25)
+    dj, yj = jnp.array(d), jnp.array(y)
+    gy, g = G.gain_and_subgradient(dj, yj, k, c_f)
+    for _ in range(20):
+        z = rng.random(25).astype(np.float32)
+        gz = float(G.gain_value(dj, jnp.array(z), k, c_f))
+        bound = float(gy) + float(jnp.dot(g, jnp.array(z) - yj))
+        assert gz <= bound + 1e-3
+
+
+def test_subgradient_nonnegative_and_bounded():
+    """0 <= g_l <= L = c_d^k + c_f (Lemma 7)."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        d, y, x, k, c_f = make_instance(rng, n=30)
+        _, g = G.gain_and_subgradient(jnp.array(d), jnp.array(y), k, c_f)
+        g = np.array(g)
+        assert (g >= -1e-6).all()
+        c_dk = np.sort(d)[k - 1]  # dissimilarity of the k-th closest
+        assert (g <= c_dk + c_f + 1e-4).all()

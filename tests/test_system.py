@@ -1,0 +1,41 @@
+"""End-to-end system behaviour: the full AÇAI stack (indexes -> policy ->
+rounding) on a trace, exercised through the public object API."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import oma, policy, trace
+from repro.core.costs import calibrate_fetch_cost
+
+
+def test_acai_cache_object_api():
+    catalog, reqs, _ = trace.amazon_like(n=1200, d=16, t=300, seed=2)
+    cat = jnp.array(catalog)
+    c_f = float(calibrate_fetch_cost(cat, kth=20, sample=128))
+    cfg = policy.AcaiConfig(h=60, k=5, c_f=c_f, c_remote=32, c_local=8,
+                            oma=oma.OMAConfig(eta=0.1 / c_f))
+    cache = policy.AcaiCache(cat, cfg, seed=0)
+    gains = []
+    for r in reqs:
+        m = cache.serve_update(jnp.array(r))
+        gains.append(float(m.gain_int))
+    nag = cache.normalized_gain(sum(gains), len(gains))
+    assert 0.0 < nag <= 1.0
+    assert np.isfinite(np.array(gains)).all()
+    late = np.mean(gains[-100:])
+    early = np.mean(gains[:50])
+    assert late >= early  # learns
+    ids = np.array(cache.cached_ids)
+    assert 30 <= len(ids) <= 90  # coupled rounding: occupancy ~ h
+
+
+def test_state_is_reproducible():
+    catalog, reqs, _ = trace.sift_like(n=800, d=8, t=200, seed=3)
+    cat = jnp.array(catalog)
+    cfg = policy.AcaiConfig(h=40, k=5, c_f=1.0, c_remote=32, c_local=8)
+    fn = policy.exact_candidate_fn(cat, 32, 8)
+    replay = policy.make_replay(cfg, fn)
+    s1, m1 = replay(policy.init_state(800, cfg, seed=5), jnp.array(reqs))
+    s2, m2 = replay(policy.init_state(800, cfg, seed=5), jnp.array(reqs))
+    np.testing.assert_array_equal(np.array(s1.x), np.array(s2.x))
+    np.testing.assert_allclose(np.array(m1.gain_int), np.array(m2.gain_int))
