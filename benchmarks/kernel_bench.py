@@ -19,9 +19,8 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(
-        *args
-    ).block_until_ready()
+    out = fn(*args)  # single warmup/compile call
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.time()
     for _ in range(reps):
         out = fn(*args)
@@ -42,6 +41,17 @@ def main(full: bool = False, kind: str = "sift") -> None:
     us = _time(lambda a, b: ops.topk_l2(a, b, 16, interpret=True)[0], q[:8], x[:2048])
     common.emit("kernel/l2_topk/pallas-interpret(8x2048)", us, "correctness-path")
 
+    us = _time(lambda a, b: ops.topk_l2_xla(a, b, 16)[0], q, x)
+    common.emit("kernel/l2_topk/xla", us, f"GFLOPs={flops / us / 1e3:.1f}")
+
+    cand = jnp.array(rng.integers(0, 2048, (8, 256)).astype(np.int32))
+    us = _time(lambda a, b, c: ops.ivf_scan_topk(a, b, c, 16, interpret=True)[0],
+               q[:8], x[:2048], cand)
+    common.emit("kernel/ivf_scan/pallas-interpret(8x256)", us, "correctness-path")
+    us = _time(lambda a, b, c: ops.ivf_scan_xla(a, b, c, 16)[0],
+               q[:8], x[:2048], cand)
+    common.emit("kernel/ivf_scan/xla(8x256)", us, "gather+l2+topk")
+
     m, c = 16, 256
     lut = jnp.array(rng.random((q_n, m, c)).astype(np.float32))
     codes = jnp.array(rng.integers(0, c, (db_n, m)).astype(np.int32))
@@ -53,5 +63,7 @@ def main(full: bool = False, kind: str = "sift") -> None:
 
 
 if __name__ == "__main__":
+    # kernel sizes are synthetic: --trace picks a dataset, not a kernel shape,
+    # so it must not be forwarded into the `kind` parameter
     args = common.std_args(__doc__).parse_args()
-    main(args.full, args.trace)
+    main(args.full)

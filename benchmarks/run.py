@@ -28,28 +28,31 @@ def main() -> None:
                             kernel_bench, regret, serve_bench)
 
     suites = {
-        "fig1": (fig1_gain_vs_requests, ["sift", "amazon"]),
-        "fig2": (fig2_gain_vs_h, ["sift"]),
-        "fig3": (fig3_gain_vs_cf, ["sift"]),
-        "fig4": (fig4_gain_vs_k, ["sift"]),
-        "fig5": (fig5_sensitivity, ["sift"]),
-        "fig6": (fig6_mirror_maps, ["sift"]),
-        "fig7": (fig7_dissect, ["sift", "amazon"]),
-        "fig8": (fig8_rounding, ["amazon"]),
-        "regret": (regret, ["sift"]),
-        "kernels": (kernel_bench, ["sift"]),
-        "serve": (serve_bench, ["sift"]),
+        "fig1": (fig1_gain_vs_requests.main, ["sift", "amazon"]),
+        "fig2": (fig2_gain_vs_h.main, ["sift"]),
+        "fig3": (fig3_gain_vs_cf.main, ["sift"]),
+        "fig4": (fig4_gain_vs_k.main, ["sift"]),
+        "fig5": (fig5_sensitivity.main, ["sift"]),
+        "fig6": (fig6_mirror_maps.main, ["sift"]),
+        "fig7": (fig7_dissect.main, ["sift", "amazon"]),
+        "fig8": (fig8_rounding.main, ["amazon"]),
+        "regret": (regret.main, ["sift"]),
+        "kernels": (kernel_bench.main, ["sift"]),
+        "serve": (serve_bench.main, ["sift"]),
+        # batched request pipeline: emits BENCH_pipeline.json at the repo
+        # root so the B∈{1,8,64} throughput trajectory is tracked per PR
+        "pipeline": (serve_bench.pipeline_main, ["sift"]),
     }
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, (mod, kinds) in suites.items():
+    for name, (fn, kinds) in suites.items():
         if args.only and args.only != name:
             continue
         for kind in ([args.trace] if args.trace else kinds):
             t0 = time.time()
             try:
-                mod.main(args.full, kind)
+                fn(args.full, kind)
                 print(f"# {name}/{kind} done in {time.time() - t0:.0f}s",
                       file=sys.stderr)
             except Exception:  # noqa: BLE001 — keep the suite running

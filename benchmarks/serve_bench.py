@@ -1,8 +1,13 @@
 """Serving-engine throughput microbenchmark (CPU, smoke-size model):
-continuous batching tokens/s and semantic-cache hit economics."""
+continuous batching tokens/s, semantic-cache hit economics, and the
+batched AÇAI request pipeline (B ∈ {1, 8, 64}, exact vs IVF candidates —
+written to BENCH_pipeline.json so the perf trajectory is tracked across
+PRs)."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -13,6 +18,8 @@ from benchmarks import common
 from repro.configs import SMOKE_ARCHS
 from repro.models import init_params
 from repro.serve import SemanticCachedLM, ServeEngine, generate
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
 
 
 def main(full: bool = False, kind: str = "sift") -> None:
@@ -53,7 +60,73 @@ def main(full: bool = False, kind: str = "sift") -> None:
     common.emit("serve/semantic_cache/local_share", 0.0,
                 f"{s.served_local / (s.requests * 4):.2f}")
 
+    # batched semantic-cache path: same request mix, B=8 mini-batches.
+    # Fresh cache so NAG@B8 measures only the batched path (no dilution by
+    # the sequential phase above).
+    lm_b = SemanticCachedLM(
+        params, cfg, catalog, [str(i) for i in range(400)],
+        generate_fn=lambda p: generate(params, cfg, p[None], steps=2),
+        h=40, k=4)
+    t0 = time.time()
+    for _ in range(n_req // 2):
+        lm_b.query_batch([pool[i] for i in rng.choice(20, size=8, p=w / w.sum())])
+    dt_b = (time.time() - t0) / (n_req // 2 * 8)
+    common.emit("serve/semantic_cache/NAG@B8", dt_b * 1e6, f"{lm_b.nag:.3f}")
+
+
+def pipeline_main(full: bool = False, kind: str = "sift") -> None:
+    """Batched AÇAI replay throughput: requests/sec and µs/request for
+    B ∈ {1, 8, 64}, exact vs IVF candidate generation, NAG alongside so
+    speed is never reported without quality.  Results land in
+    BENCH_pipeline.json at the repo root."""
+    from repro.core import oma, policy, trace
+    from repro.core.costs import calibrate_fetch_cost
+    from repro.index import IVFFlatIndex
+    from repro.index.candidates import index_candidate_fn_batched
+
+    n, t, d = (20000, 16384, 32) if full else (2000, 2048, 16)
+    gen = trace.sift_like if kind == "sift" else trace.amazon_like
+    catalog, reqs, _ = gen(n=n, d=d, t=t, seed=0)
+    cat, reqs_j = jnp.array(catalog), jnp.array(reqs)
+    c_f = float(calibrate_fetch_cost(cat, kth=min(50, n - 1), sample=256))
+    cfg = policy.AcaiConfig(h=64, k=8, c_f=c_f, c_remote=32, c_local=16,
+                            oma=oma.OMAConfig(eta=0.05 / c_f))
+
+    index = IVFFlatIndex(cat, nlist=48, nprobe=10)
+    fns = {
+        "exact": policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local),
+        "ivf": index_candidate_fn_batched(index, cat, cfg.c_remote, cfg.c_local,
+                                          h=cfg.h),
+    }
+    rows = []
+    for cand_name, fnb in fns.items():
+        for b in (1, 8, 64):
+            replay = policy.make_replay_batched(cfg, fnb, b)
+            state = policy.init_state(n, cfg)
+            tt = (t // b) * b
+            r = reqs_j[:tt]
+            _, m = replay(state, r)                       # compile + warmup
+            m.gain_int.block_until_ready()
+            t0 = time.time()
+            _, m = replay(state, r)
+            m.gain_int.block_until_ready()
+            dt = time.time() - t0
+            nag = float(np.sum(np.asarray(m.gain_int))) / (cfg.k * c_f * tt)
+            rows.append({
+                "batch": b, "candidates": cand_name,
+                "requests_per_s": round(tt / dt, 1),
+                "us_per_request": round(dt / tt * 1e6, 2),
+                "nag": round(nag, 4), "requests": tt,
+            })
+            common.emit(f"pipeline/{kind}/{cand_name}/B{b}", dt / tt * 1e6,
+                        f"NAG={nag:.4f};rps={tt / dt:.0f}")
+    BENCH_JSON.write_text(json.dumps(
+        {"kind": kind, "full": full, "n": n, "d": d,
+         "backend": jax.default_backend(), "rows": rows}, indent=2) + "\n")
+    common.emit("pipeline/json", 0.0, str(BENCH_JSON.name))
+
 
 if __name__ == "__main__":
     args = common.std_args(__doc__).parse_args()
     main(args.full, args.trace)
+    pipeline_main(args.full, args.trace)

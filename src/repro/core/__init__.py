@@ -15,7 +15,9 @@
 from repro.core.costs import CostModel, calibrate_fetch_cost, pairwise_dissimilarity
 from repro.core.gain import gain_and_subgradient, gain_value, serve
 from repro.core.oma import OMAConfig, oma_update, theoretical_eta, uniform_state
-from repro.core.policy import AcaiCache, AcaiConfig, init_state, make_replay, make_step
+from repro.core.policy import (AcaiCache, AcaiConfig, init_state, make_replay,
+                               make_replay_batched, make_step,
+                               make_step_batched)
 from repro.core.rounding import coupled_rounding, depround, independent_rounding
 
 __all__ = [
@@ -31,7 +33,9 @@ __all__ = [
     "independent_rounding",
     "init_state",
     "make_replay",
+    "make_replay_batched",
     "make_step",
+    "make_step_batched",
     "oma_update",
     "pairwise_dissimilarity",
     "serve",

@@ -1,15 +1,22 @@
 """AÇAI policy: request serving + OMA cache updates (paper Sec. IV).
 
-Two entry points:
+Three entry points:
 
 * `make_replay(...)` — a fully-jitted `lax.scan` over a request trace,
-  carrying (y_t, x_t, key).  This is the benchmark/experiment hot path:
-  per request it (1) builds the candidate set from the two indexes,
-  (2) serves per Eq. (2) from x_t, (3) computes the subgradient Eq. (55)
-  at y_t, (4) applies OMA + projection, (5) rounds to x_{t+1}.
+  carrying (y_t, x_t, key).  Per request it (1) builds the candidate set
+  from the two indexes, (2) serves per Eq. (2) from x_t, (3) computes the
+  subgradient Eq. (55) at y_t, (4) applies OMA + projection, (5) rounds to
+  x_{t+1}.
 
-* `AcaiCache` — an object wrapper over the same jitted step for the serving
-  tier (repro.serve.semantic_cache) where requests arrive one by one.
+* `make_replay_batched(...)` — the benchmark/serving hot path: scans the
+  trace in request *mini-batches* of size B, vmapping serve/gain/
+  subgradient per request and folding the batch into a single OMA +
+  projection + rounding update (mini-batch mirror ascent, DESIGN.md §6).
+  Bit-exact with make_replay at B = 1.
+
+* `AcaiCache` — an object wrapper over the same jitted steps for the
+  serving tier (repro.serve.semantic_cache) where requests arrive one by
+  one (`serve_update`) or in batches (`serve_update_batch`).
 
 Candidate sets: the union of kNN(r, local catalog) and kNN(r, remote
 catalog) as returned by the two (approximate) indexes, deduplicated by
@@ -58,32 +65,64 @@ def dedup_mask(ids: jax.Array, n: int) -> jax.Array:
     return (ids < n) & ~dup
 
 
-def exact_candidate_fn(
+dedup_mask_batched = jax.vmap(dedup_mask, in_axes=(0, None))
+
+
+def exact_candidate_fn_batched(
     catalog: jax.Array, c_remote: int, c_local: int, metric: str = "sqeuclidean"
 ) -> Callable:
-    """Candidate generator backed by exact (flat) search on both sides.
+    """Batched candidate generator backed by exact (flat) search on both
+    sides: (B, d) requests x (N,) cache state -> (B, C) candidate slabs.
 
     Models *perfect-recall* indexes; the approximate variants live in
-    repro.index.candidates (same signature) and plug in here.
+    repro.index.candidates (same signatures) and plug in here.  One (B, N)
+    distance GEMM feeds both the remote top-k and the cached-row top-k, so
+    the MXU sees the whole mini-batch at once (DESIGN.md §6).
     """
     n = catalog.shape[0]
 
-    def fn(r: jax.Array, x: jax.Array):
-        d_full = pairwise_dissimilarity(r[None, :], catalog, metric)[0]
+    def fn(rs: jax.Array, x: jax.Array):
+        b = rs.shape[0]
+        d_full = pairwise_dissimilarity(rs, catalog, metric)     # (B, N)
         _, ids_remote = jax.lax.top_k(-d_full, c_remote)
-        d_cached = jnp.where(x > 0.5, d_full, jnp.inf)
+        d_cached = jnp.where(x[None, :] > 0.5, d_full, jnp.inf)
         _, ids_local = jax.lax.top_k(-d_cached, c_local)
-        ids = jnp.concatenate([ids_remote, ids_local])
-        valid = dedup_mask(ids, n)
+        ids = jnp.concatenate([ids_remote, ids_local], axis=1)
+        valid = dedup_mask_batched(ids, n)
         # a "local" candidate slot is only valid if that object is cached
         cached_ok = jnp.concatenate(
-            [jnp.ones((c_remote,), bool), x[ids_local] > 0.5]
+            [jnp.ones((b, c_remote), bool), x[ids_local] > 0.5], axis=1
         )
         valid = valid & cached_ok
-        d = jnp.where(valid, d_full[jnp.clip(ids, 0, n - 1)], BIG_COST)
+        d = jnp.where(
+            valid,
+            jnp.take_along_axis(d_full, jnp.clip(ids, 0, n - 1), axis=1),
+            BIG_COST,
+        )
         return ids, d, valid
 
     return fn
+
+
+def per_request_view(candidate_fn_batched: Callable) -> Callable:
+    """Adapt a batched candidate generator to the per-request signature
+    fn(r (d,), x (N,)) -> (ids (C,), d (C,), valid (C,)) as its B = 1 view,
+    so sequential and batched replays share one code path bit-for-bit."""
+
+    def fn(r: jax.Array, x: jax.Array):
+        ids, d, valid = candidate_fn_batched(r[None, :], x)
+        return ids[0], d[0], valid[0]
+
+    return fn
+
+
+def exact_candidate_fn(
+    catalog: jax.Array, c_remote: int, c_local: int, metric: str = "sqeuclidean"
+) -> Callable:
+    """Per-request view of exact_candidate_fn_batched (B = 1)."""
+    return per_request_view(
+        exact_candidate_fn_batched(catalog, c_remote, c_local, metric)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +135,7 @@ class AcaiConfig:
     oma: oma_lib.OMAConfig = dataclasses.field(default_factory=oma_lib.OMAConfig)
 
 
-def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t):
+def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t, width=1):
     mode = cfg.oma.rounding
     if mode == "coupled":
         return rounding_lib.coupled_rounding(key, x_old, y_old, y_new)
@@ -104,8 +143,11 @@ def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t):
         return rounding_lib.independent_rounding(key, y_new)
     if mode == "depround":
         # Re-round every M requests (Alg. 1 lines 7-9), freeze in between.
+        # A batched step covers requests [t, t + width); fire iff a multiple
+        # of M lands in that window, so the cadence stays ~M (not
+        # lcm(M, width)).  width = 1 reduces to t % M == 0.
         return jax.lax.cond(
-            (t % cfg.oma.round_every) == 0,
+            ((-t) % cfg.oma.round_every) < width,
             lambda _: rounding_lib.depround(key, y_new),
             lambda _: x_old,
             None,
@@ -169,18 +211,140 @@ def make_replay(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
     return replay
 
 
-class AcaiCache:
-    """Object API over the jitted step, for the online serving tier."""
+def make_step_batched(
+    cfg: AcaiConfig, candidate_fn_batched: Callable, batch: int,
+    eta_scale: float | None = None,
+) -> Callable:
+    """Mini-batch step: (state, requests (B, d)) -> (state', StepMetrics (B,)).
 
-    def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None, seed=0):
+    Mini-batch online mirror ascent (DESIGN.md §6): all B requests are
+    served and differentiated against the *same* state x_t / y_t (candidate
+    generation, serve and gain/subgradient vmap per request), the
+    subgradients are batch-averaged, and a single OMA + projection +
+    rounding update advances the state — the delayed-subgradient form whose
+    regret the paper's analysis tolerates.  `eta_scale` (default: B)
+    multiplies the learning rate so one averaged step moves as far as B
+    sequential steps to first order; at B = 1 everything reduces
+    bit-exactly to make_step.
+
+    Metric reduction keeps figures B-invariant: serve metrics are per
+    request (vs x_t); `fetched` books the batch's cache-update traffic on
+    its last request (zero on the rest); `occupancy` repeats the
+    post-update value.
+    """
+    scale = float(batch) if eta_scale is None else float(eta_scale)
+    cfg_up = dataclasses.replace(
+        cfg, oma=dataclasses.replace(cfg.oma, eta=cfg.oma.eta * scale)
+    )
+
+    def step(state: CacheState, rs: jax.Array):
+        key, k_round = jax.random.split(state.key)
+        n = state.y.shape[0]
+        ids, d, valid = candidate_fn_batched(rs, state.x)     # (B, C)
+        ids_c = jnp.clip(ids, None, n - 1)
+        x_cand = jnp.where(valid, state.x[ids_c], 0.0)
+        y_cand = jnp.where(valid, state.y[ids_c], 0.0)
+
+        served = gain_lib.serve_batch(d, x_cand, cfg.k, cfg.c_f)
+        gain_frac, g_cand = gain_lib.gain_and_subgradient_batch(
+            d, y_cand, cfg.k, cfg.c_f
+        )
+
+        g_full = (
+            jnp.zeros_like(state.y)
+            .at[ids_c.reshape(-1)]
+            .add(jnp.where(valid, g_cand, 0.0).reshape(-1) / batch)
+        )
+        y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg_up.oma)
+        x_new = _round_state(cfg_up, k_round, y_new, state.y, state.x, state.t,
+                             width=batch)
+
+        moved = rounding_lib.movement(x_new, state.x)
+        metrics = StepMetrics(
+            gain_int=served.gain,
+            gain_frac=gain_frac,
+            cost=served.cost,
+            served_local=jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
+            fetched=jnp.concatenate(
+                [jnp.zeros((batch - 1,), moved.dtype), moved[None]]
+            ),
+            occupancy=jnp.full((batch,), jnp.sum(x_new)),
+        )
+        return CacheState(y_new, x_new, state.t + batch, key), metrics
+
+    return step
+
+
+def make_replay_batched(
+    cfg: AcaiConfig, candidate_fn_batched: Callable, batch: int,
+    eta_scale: float | None = None,
+) -> Callable:
+    """Mini-batched whole-trace replay.
+
+    (state, requests (T, d)) -> (state', StepMetrics (T,)): the trace is
+    scanned in (T / batch) mini-batches (T must divide), metrics come back
+    flattened per request so downstream figure code is unchanged.  At
+    batch = 1 this is bit-exact with make_replay.
+    """
+    step = make_step_batched(cfg, candidate_fn_batched, batch, eta_scale)
+
+    @jax.jit
+    def replay(state: CacheState, requests: jax.Array):
+        t, dim = requests.shape
+        assert t % batch == 0, (
+            f"trace length {t} must divide by batch size {batch}"
+        )
+        state, m = jax.lax.scan(
+            step, state, requests.reshape(t // batch, batch, dim)
+        )
+        return state, jax.tree_util.tree_map(
+            lambda a: a.reshape(t, *a.shape[2:]), m
+        )
+
+    return replay
+
+
+class AcaiCache:
+    """Object API over the jitted step, for the online serving tier.
+
+    Accepts either a per-request `candidate_fn` or a batched
+    `candidate_fn_batched` (preferred — the per-request path is derived
+    from it, and `serve_update_batch` amortises one OMA update over a whole
+    request mini-batch)."""
+
+    def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None,
+                 candidate_fn_batched=None, seed=0):
         self.cfg = cfg
         self.catalog = catalog
-        fn = candidate_fn or exact_candidate_fn(catalog, cfg.c_remote, cfg.c_local)
-        self._step = jax.jit(make_step(cfg, fn))
+        if candidate_fn_batched is None:
+            if candidate_fn is None:
+                candidate_fn_batched = exact_candidate_fn_batched(
+                    catalog, cfg.c_remote, cfg.c_local
+                )
+            else:
+                candidate_fn_batched = jax.vmap(candidate_fn, in_axes=(0, None))
+        self._fn_batched = candidate_fn_batched
+        if candidate_fn is None:
+            candidate_fn = per_request_view(candidate_fn_batched)
+        self._step = jax.jit(make_step(cfg, candidate_fn))
+        self._bsteps: dict[int, Callable] = {}
         self.state = init_state(catalog.shape[0], cfg, seed=seed)
 
     def serve_update(self, r: jax.Array) -> StepMetrics:
         self.state, metrics = self._step(self.state, r)
+        return metrics
+
+    def serve_update_batch(self, rs: jax.Array) -> StepMetrics:
+        """Serve a request mini-batch (B, d): one OMA + rounding update for
+        the whole batch, per-request StepMetrics (B,).  The jitted step is
+        cached per batch size."""
+        rs = jnp.atleast_2d(rs)
+        b = rs.shape[0]
+        step = self._bsteps.get(b)
+        if step is None:
+            step = jax.jit(make_step_batched(self.cfg, self._fn_batched, b))
+            self._bsteps[b] = step
+        self.state, metrics = step(self.state, rs)
         return metrics
 
     @property

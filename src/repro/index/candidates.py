@@ -1,12 +1,20 @@
 """Candidate-set builders wiring the ANN indexes into the AÇAI policy.
 
-Same signature as repro.core.policy.exact_candidate_fn:
-    fn(r, x) -> (ids (C,), dists (C,), valid (C,))
-Remote candidates come from the (approximate) remote-catalog index with an
-exact re-rank of the retrieved embeddings (AÇAI evaluates true costs on the
-retrieved set); local candidates come from a flat scan of the cached
-objects (h is small — this *is* the local index at bench scale; an NSWIndex
-drops in for larger local catalogs).
+Batched-first (DESIGN.md §6): `index_candidate_fn_batched` maps a whole
+request mini-batch (B, d) to (ids, dists, valid) of shape (B, C); the
+per-request `index_candidate_fn` (same signature as
+repro.core.policy.exact_candidate_fn: fn(r, x) -> ids (C,), dists (C,),
+valid (C,)) is just its B = 1 view, so sequential and batched replays share
+one code path bit-for-bit.
+
+Remote candidates come from the (approximate) remote-catalog index with a
+*single* exact re-rank of the retrieved ids through the fused
+gather+L2+top-k scan (AÇAI evaluates true costs on the retrieved set).
+Local candidates are a top-k over *only the cached rows*: the cache
+indicator x is turned into an id list (one O(N) mask pass, no distance
+arithmetic), those ≤ local_cap embeddings are gathered once for the whole
+batch, and a (B, cap) distance GEMM + top-k picks the candidates — the
+full-catalog O(N·d) per-request scan of the seed implementation is gone.
 """
 
 from __future__ import annotations
@@ -15,37 +23,81 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.costs import BIG_COST
-from repro.core.policy import dedup_mask
+from repro.core.policy import dedup_mask_batched, per_request_view
+from repro.kernels import ops
 
 
-def index_candidate_fn(index, catalog: jax.Array, c_remote: int, c_local: int):
+def _local_cap(n: int, c_local: int, h: int | None, local_cap: int | None) -> int:
+    """Static bound on how many cached rows the local scan gathers.
+
+    DepRound keeps occupancy at exactly h; coupled/independent rounding
+    concentrate around h (App. F), so 2h + a small slack covers every
+    rounding mode.  Without h we fall back to a generous multiple of
+    c_local — but callers should pass h (or local_cap): if occupancy ever
+    exceeds the cap, `nonzero` silently keeps the lowest-id cached rows,
+    hiding the rest from local serving (quality loss, not an error)."""
+    if local_cap is not None:
+        return min(n, local_cap)
+    if h is not None:
+        return min(n, 2 * h + 64)
+    return min(n, max(8 * c_local, 512))
+
+
+def index_candidate_fn_batched(
+    index, catalog: jax.Array, c_remote: int, c_local: int,
+    h: int | None = None, local_cap: int | None = None,
+):
+    """(B, d) requests x (N,) cache state -> (B, C) candidate slabs."""
     n = catalog.shape[0]
+    cap = _local_cap(n, c_local, h, local_cap)
 
-    def fn(r: jax.Array, x: jax.Array):
-        _, ids_remote = index.query(r[None, :], c_remote)
-        ids_remote = ids_remote[0]
-        # exact re-rank distances on the retrieved candidates
-        d_full_remote = jnp.sum(
-            (catalog[jnp.clip(ids_remote, 0, None)] - r[None, :]) ** 2, axis=-1
-        )
-        miss = ids_remote < 0
-        ids_remote = jnp.where(miss, n, ids_remote)  # n = invalid sentinel
+    # Indexes whose query() already returns exact distances on the shared
+    # catalog embeddings (FlatIndex, IVFFlat, LSH, NSW, IVFPQ with refine)
+    # advertise `exact_distances = True`; only approximate-distance indexes
+    # (e.g. refine-less IVFPQ ADC) pay the exact re-rank.
+    rerank = not getattr(index, "exact_distances", False)
 
-        d_all = jnp.sum((catalog - r[None, :]) ** 2, axis=-1)
-        d_cached = jnp.where(x > 0.5, d_all, jnp.inf)
-        _, ids_local = jax.lax.top_k(-d_cached, c_local)
+    def fn(rs: jax.Array, x: jax.Array):
+        b = rs.shape[0]
+        d_remote, ids_remote = index.query(rs, c_remote)     # (B, c_remote)
+        if rerank:
+            # single exact re-rank of the retrieved candidates (fused
+            # scan); -1 misses stay -1 (dist = +inf) through the scan.
+            d_remote, ids_remote = ops.ivf_scan_auto(
+                rs, catalog, ids_remote, c_remote
+            )
+        rmiss = ids_remote < 0
+        ids_remote = jnp.where(rmiss, n, ids_remote)         # n = invalid
+        d_remote = jnp.where(rmiss, BIG_COST, d_remote)
 
-        ids = jnp.concatenate([ids_remote, ids_local])
-        valid = dedup_mask(ids, n)
-        cached_ok = jnp.concatenate(
-            [jnp.ones((c_remote,), bool), x[ids_local] > 0.5]
-        )
-        valid = valid & cached_ok
-        d = jnp.where(
-            valid,
-            jnp.sum((catalog[jnp.clip(ids, 0, n - 1)] - r[None, :]) ** 2, -1),
-            BIG_COST,
-        )
+        # local side: gather the cached rows *once* (shared across the
+        # batch), then one (B, cap) distance GEMM + top-k — never an (N,)
+        # distance scan, and no per-query duplicate of the cached slab.
+        cached = jnp.nonzero(x > 0.5, size=cap, fill_value=-1)[0]  # (cap,)
+        cached_embs = catalog[jnp.clip(cached, 0, n - 1)]          # (cap, d)
+        d_loc = ops.pairwise_l2_xla(rs, cached_embs)               # (B, cap)
+        d_loc = jnp.where((cached >= 0)[None, :], d_loc, jnp.inf)
+        neg, pos = jax.lax.top_k(-d_loc, c_local)
+        ids_local = jnp.where(jnp.isfinite(neg), cached[pos], -1)
+        d_local = -neg
+        lmiss = ids_local < 0
+        ids_local = jnp.where(lmiss, n, ids_local)
+        d_local = jnp.where(lmiss, BIG_COST, d_local)
+
+        ids = jnp.concatenate([ids_remote, ids_local], axis=1)
+        d = jnp.concatenate([d_remote, d_local], axis=1)
+        valid = dedup_mask_batched(ids, n)
+        d = jnp.where(valid, d, BIG_COST)
         return ids, d, valid
 
     return fn
+
+
+def index_candidate_fn(
+    index, catalog: jax.Array, c_remote: int, c_local: int,
+    h: int | None = None, local_cap: int | None = None,
+):
+    """Per-request view of index_candidate_fn_batched (B = 1)."""
+    return per_request_view(index_candidate_fn_batched(
+        index, catalog, c_remote, c_local, h=h, local_cap=local_cap
+    ))

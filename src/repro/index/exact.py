@@ -14,18 +14,20 @@ from repro.kernels import ops
 
 class FlatIndex:
     """Brute-force index.  kernel='xla' uses the fused-XLA distance path,
-    'pallas' the Pallas kernel (interpret-mode on CPU), 'auto' picks by
-    backend (pallas on TPU)."""
+    'pallas' the Pallas kernel (interpret-mode on CPU), 'auto' dispatches
+    by backend (pallas on TPU) via ops.topk_l2_auto."""
+
+    exact_distances = True  # query() distances need no re-rank
 
     def __init__(self, embeddings: jax.Array, kernel: str = "auto"):
         self.embeddings = jnp.asarray(embeddings, jnp.float32)
-        if kernel == "auto":
-            kernel = "pallas" if jax.default_backend() == "tpu" else "xla"
         self.kernel = kernel
 
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
         q = jnp.atleast_2d(q)
+        if self.kernel == "auto":
+            return ops.topk_l2_auto(q, self.embeddings, k)
         if self.kernel == "pallas":
             return ops.topk_l2(q, self.embeddings, k)
         d = ops.pairwise_l2_xla(q, self.embeddings)

@@ -33,6 +33,8 @@ def build_invlists(assign: np.ndarray, nlist: int, cap: int | None = None):
 
 
 class IVFFlatIndex:
+    exact_distances = True  # probed lists are scanned with exact L2
+
     def __init__(
         self,
         embeddings,
@@ -51,20 +53,16 @@ class IVFFlatIndex:
 
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
-        """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow."""
+        """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow.
+
+        The probed lists go through the fused gather+L2+top-k scan
+        (repro.kernels.ivf_scan on TPU, its XLA oracle elsewhere), so the
+        (B, P, d) gathered embeddings never materialise in HBM."""
         q = jnp.atleast_2d(q)
         dc = ops.pairwise_l2_xla(q, self.centroids)        # (B, nlist)
         _, probe = jax.lax.top_k(-dc, self.nprobe)          # (B, nprobe)
         cand = self.invlists[probe].reshape(q.shape[0], -1)  # (B, nprobe*cap)
-        valid = cand >= 0
-        embs = self.embeddings[jnp.clip(cand, 0, None)]     # (B, P, d)
-        diff = embs - q[:, None, :]
-        d = jnp.sum(diff * diff, axis=-1)
-        d = jnp.where(valid, d, jnp.inf)
-        neg, pos = jax.lax.top_k(-d, k)
-        ids = jnp.take_along_axis(cand, pos, axis=1)
-        ids = jnp.where(jnp.isfinite(neg), ids, -1)
-        return -neg, ids
+        return ops.ivf_scan_auto(q, self.embeddings, cand, k)
 
     def __hash__(self):
         return id(self)

@@ -10,6 +10,8 @@ import numpy as np
 
 
 class LSHIndex:
+    exact_distances = True  # candidates scored with exact L2
+
     def __init__(self, embeddings, tables: int = 8, bits: int = 10,
                  cap: int | None = None, seed: int = 0):
         emb = np.asarray(embeddings, np.float32)

@@ -39,6 +39,8 @@ def build_nsw_graph(emb: np.ndarray, degree: int = 16, shortcuts: int = 2,
 
 
 class NSWIndex:
+    exact_distances = True  # candidates scored with exact L2
+
     def __init__(self, embeddings, degree: int = 16, beam: int = 32,
                  steps: int = 12, seed: int = 0):
         emb = np.asarray(embeddings, np.float32)

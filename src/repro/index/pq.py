@@ -76,6 +76,9 @@ class IVFPQIndex:
                  m: int = 8, refine: int = 4, seed: int = 0):
         self.embeddings = jnp.asarray(embeddings, jnp.float32)
         self.nlist, self.nprobe, self.refine = nlist, nprobe, refine
+        # with refine the final top-k is exactly re-ranked; without it the
+        # returned distances are ADC approximations (re-rank downstream)
+        self.exact_distances = bool(refine and refine > 1)
         key = jax.random.PRNGKey(seed)
         self.centroids, assign = kmeans(key, self.embeddings, nlist)
         self.invlists = jnp.asarray(
@@ -104,14 +107,9 @@ class IVFPQIndex:
             r = min(self.refine * k, d_adc.shape[1])
             neg, pos = jax.lax.top_k(-d_adc, r)              # approx top-r
             rid = jnp.take_along_axis(cand, pos, axis=1)
-            rvalid = jnp.isfinite(neg)
-            embs = self.embeddings[jnp.clip(rid, 0, None)]
-            diff = embs - q[:, None, :]
-            d_exact = jnp.sum(diff * diff, axis=-1)
-            d_exact = jnp.where(rvalid, d_exact, jnp.inf)
-            neg2, pos2 = jax.lax.top_k(-d_exact, k)
-            ids = jnp.take_along_axis(rid, pos2, axis=1)
-            return -neg2, jnp.where(jnp.isfinite(neg2), ids, -1)
+            rid = jnp.where(jnp.isfinite(neg), rid, -1)
+            # exact re-rank through the fused gather+L2+top-k scan
+            return ops.ivf_scan_auto(q, self.embeddings, rid, k)
 
         neg, pos = jax.lax.top_k(-d_adc, k)
         ids = jnp.take_along_axis(cand, pos, axis=1)

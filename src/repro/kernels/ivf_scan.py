@@ -1,0 +1,95 @@
+"""Fused IVF list scan: gather + L2 + per-block partial top-k, one pass.
+
+FAISS's IVF scan kernels walk the probed inverted lists, compute distances
+on the fly and keep a per-thread-block heap of the k best.  The TPU
+adaptation (DESIGN.md §3) mirrors `l2_topk.py`'s two-level scheme but
+replaces the dense catalog tile with a *gathered* one: the candidate id
+table (B, P) — the concatenation of each query's probed inverted lists,
+padded with -1 — indexes into the catalog held resident in VMEM, so the
+gathered embeddings never round-trip through HBM.  Each (BQ, BP) tile of
+the candidate table emits its k smallest distances (iterative masked-min
+extraction) plus their *positions along the P axis*; the host-side wrapper
+(ops.ivf_scan_topk) merges the per-block partials with one `lax.top_k`
+and maps positions back to catalog ids.
+
+Memory: the catalog block is (N, d) in VMEM — fine up to N*d ≈ 4M floats
+(~16 MB/core, DESIGN.md §4); larger catalogs shard row-wise over the
+`model` mesh axis before this kernel sees them.
+
+Invalid slots (id < 0: list padding or dedup sentinels) read row 0 but are
+masked to +inf before selection, so they can never displace a real
+candidate; queries with fewer than k valid candidates surface +inf
+distances, which the wrapper turns into id = -1 (underflow contract shared
+with IVFFlatIndex.query).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.l2_topk import extract_block_topk
+
+BQ = 8
+BP = 128
+_INF = float("inf")  # python literal: avoids captured-constant tracing in Pallas
+
+
+def _ivf_scan_kernel(k: int, q_ref, x_ref, cand_ref, od_ref, oi_ref):
+    q = q_ref[...].astype(jnp.float32)        # (BQ, d)
+    x = x_ref[...].astype(jnp.float32)        # (N, d) catalog, VMEM-resident
+    cand = cand_ref[...]                      # (BQ, BP) int32, -1 = invalid
+    n = x.shape[0]
+
+    safe = jnp.clip(cand, 0, n - 1)
+    embs = jnp.take(x, safe.reshape(-1), axis=0).reshape(
+        cand.shape + (x.shape[1],)
+    )                                         # (BQ, BP, d) gathered rows
+    diff = embs - q[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)         # (BQ, BP)
+    d = jnp.where(cand < 0, _INF, d)
+
+    j = pl.program_id(1)
+    base = j * BP
+    od_ref[...], oi_ref[...] = extract_block_topk(d, base, k)
+
+
+def ivf_scan_pallas(
+    q: jax.Array, x: jax.Array, cand: jax.Array, k: int, *,
+    interpret: bool = False
+):
+    """Per-block partial results over gathered candidates.
+
+    q (B, d), x (N, d), cand (B, P) int32 (-1 = invalid slot).
+    Returns (dists (B, nblocks*k), positions (B, nblocks*k)) where positions
+    index the P axis of `cand`; callers merge with lax.top_k and gather the
+    catalog ids with take_along_axis (see ops.ivf_scan_topk).
+    """
+    b, d = q.shape
+    n = x.shape[0]
+    bb, p = cand.shape
+    assert b == bb, (b, bb)
+    assert b % BQ == 0 and p % BP == 0 and k <= BP
+    grid = (b // BQ, p // BP)
+    nb = p // BP
+    return pl.pallas_call(
+        functools.partial(_ivf_scan_kernel, k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BQ, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((BQ, BP), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BQ, k), lambda i, j: (i, j)),
+            pl.BlockSpec((BQ, k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb * k), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x, cand.astype(jnp.int32))

@@ -22,6 +22,29 @@ BN = 128
 _INF = float("inf")  # python literal: avoids captured-constant tracing in Pallas
 
 
+def extract_block_topk(d: jax.Array, base, k: int):
+    """Per-tile k smallest of d (BQ, BN) by iterative masked-min extraction
+    (k is small; no warp shuffles on TPU).  Returns (dists (BQ, k),
+    positions (BQ, k)) with positions offset by `base` — the shared
+    second-level contract of l2_topk and ivf_scan: callers merge the
+    per-block partials with one lax.top_k.  Exhausted tiles yield +inf."""
+
+    def body(t, carry):
+        d_cur, outd, outi = carry
+        m = jnp.min(d_cur, axis=1)                        # (BQ,)
+        a = jnp.argmin(d_cur, axis=1).astype(jnp.int32)   # (BQ,)
+        outd = outd.at[:, t].set(m)
+        outi = outi.at[:, t].set(base + a)
+        cols = jax.lax.broadcasted_iota(jnp.int32, d_cur.shape, 1)
+        d_cur = jnp.where(cols == a[:, None], _INF, d_cur)
+        return d_cur, outd, outi
+
+    outd = jnp.full((d.shape[0], k), _INF, jnp.float32)
+    outi = jnp.zeros((d.shape[0], k), jnp.int32)
+    _, outd, outi = jax.lax.fori_loop(0, k, body, (d, outd, outi))
+    return outd, outi
+
+
 def _l2_topk_kernel(k: int, n_valid: int, q_ref, x_ref, od_ref, oi_ref):
     q = q_ref[...].astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)
@@ -38,21 +61,7 @@ def _l2_topk_kernel(k: int, n_valid: int, q_ref, x_ref, od_ref, oi_ref):
     gcol = base + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     d = jnp.where(gcol >= n_valid, _INF, d)
 
-    def body(t, carry):
-        d_cur, outd, outi = carry
-        m = jnp.min(d_cur, axis=1)                        # (BQ,)
-        a = jnp.argmin(d_cur, axis=1).astype(jnp.int32)   # (BQ,)
-        outd = outd.at[:, t].set(m)
-        outi = outi.at[:, t].set(base + a)
-        cols = jax.lax.broadcasted_iota(jnp.int32, d_cur.shape, 1)
-        d_cur = jnp.where(cols == a[:, None], _INF, d_cur)
-        return d_cur, outd, outi
-
-    outd = jnp.full((d.shape[0], k), _INF, jnp.float32)
-    outi = jnp.zeros((d.shape[0], k), jnp.int32)
-    _, outd, outi = jax.lax.fori_loop(0, k, body, (d, outd, outi))
-    od_ref[...] = outd
-    oi_ref[...] = outi
+    od_ref[...], oi_ref[...] = extract_block_topk(d, base, k)
 
 
 def l2_topk_pallas(

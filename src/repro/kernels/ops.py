@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ivf_scan as ivf_scan_kernel
 from repro.kernels import l2 as l2_kernel
 from repro.kernels import l2_topk as l2_topk_kernel
 from repro.kernels import pq_adc as pq_adc_kernel
@@ -65,9 +66,58 @@ def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None
     return (-neg)[:qq], ids[:qq]
 
 
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_scan_topk(q: jax.Array, x: jax.Array, cand: jax.Array, k: int, *,
+                  interpret: bool | None = None):
+    """Fused gather + L2 + top-k over per-query candidate id lists.
+
+    q (B, d), x (N, d) catalog, cand (B, P) int32 with -1 = invalid slot
+    (inverted-list padding, dedup sentinels).  Returns (dists (B, k),
+    ids (B, k)); underflowing slots come back as dist = +inf, id = -1.
+
+    The fused kernel's per-block extraction handles k up to its tile width
+    (BP = 128); larger k falls back to the XLA reference, which has no
+    such limit.
+    """
+    if k > ivf_scan_kernel.BP:
+        return ref.ivf_scan_ref(q, x, cand, k)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, p = cand.shape
+    qp = _pad_rows(q, ivf_scan_kernel.BQ)
+    cp = _pad_rows(cand, ivf_scan_kernel.BQ, value=-1)
+    padp = (-p) % ivf_scan_kernel.BP
+    if padp:
+        cp = jnp.pad(cp, ((0, 0), (0, padp)), constant_values=-1)
+    pd, pi = ivf_scan_kernel.ivf_scan_pallas(qp, x, cp, k, interpret=interp)
+    neg, pos = jax.lax.top_k(-pd, k)
+    ppos = jnp.take_along_axis(pi, pos, axis=1)          # positions in P axis
+    ids = jnp.take_along_axis(cp, ppos, axis=1)
+    ids = jnp.where(jnp.isfinite(neg), ids, -1)
+    return (-neg)[:b], ids[:b]
+
+
 # jnp fallbacks, exported for benchmarking kernel vs XLA-fused baseline.
 pairwise_l2_xla = jax.jit(ref.pairwise_l2_ref)
 pq_adc_xla = jax.jit(ref.pq_adc_ref)
+topk_l2_xla = jax.jit(ref.l2_topk_ref, static_argnames=("k",))
+ivf_scan_xla = jax.jit(ref.ivf_scan_ref, static_argnames=("k",))
+
+
+def topk_l2_auto(q: jax.Array, x: jax.Array, k: int):
+    """Hot-path dispatch: compiled Pallas kernel on TPU, fused XLA reference
+    elsewhere (interpret-mode Pallas is a correctness harness, not a perf
+    path — see kernel_bench)."""
+    if _on_tpu():
+        return topk_l2(q, x, k)
+    return topk_l2_xla(q, x, k)
+
+
+def ivf_scan_auto(q: jax.Array, x: jax.Array, cand: jax.Array, k: int):
+    """Hot-path dispatch for the fused IVF scan (same policy as
+    topk_l2_auto)."""
+    if _on_tpu():
+        return ivf_scan_topk(q, x, cand, k)
+    return ivf_scan_xla(q, x, cand, k)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "q_offset",

@@ -34,3 +34,24 @@ def l2_topk_ref(q: jnp.ndarray, x: jnp.ndarray, k: int):
     d = pairwise_l2_ref(q, x)
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx
+
+
+def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int):
+    """Gathered-candidate top-k: the oracle for kernels.ivf_scan.
+
+    q (B, d), x (N, d), cand (B, P) int32 with -1 marking invalid slots.
+    Returns (dists (B, k), ids (B, k)); ids = -1 (dist = +inf) when a query
+    has fewer than k valid candidates.
+    """
+    import jax
+
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    embs = x[jnp.clip(cand, 0, None)]                  # (B, P, d)
+    diff = embs - q[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)
+    d = jnp.where(cand >= 0, d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    ids = jnp.where(jnp.isfinite(neg), ids, -1)
+    return -neg, ids

@@ -58,6 +58,7 @@ class SemanticCachedLM:
             oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f))
         self.cache = acai.AcaiCache(catalog_embs, acfg, seed=seed)
         self.stats = ServeStats()
+        self._embed_batch = jax.jit(jax.vmap(embed_prompt, in_axes=(None, 0)))
 
     def query(self, prompt_tokens: jax.Array):
         """Returns (payloads, metrics): the k most similar cached results,
@@ -71,6 +72,27 @@ class SemanticCachedLM:
             # at least one object must be produced/fetched remotely
             self.stats.generated += 1
             _ = self.generate_fn(prompt_tokens)
+        return m
+
+    def query_batch(self, prompts: list):
+        """Batched entry point: embeds a whole request batch, runs one
+        AÇAI mini-batch step (single OMA + rounding update, DESIGN.md §6)
+        and triggers generation for each request not fully served locally.
+        Returns StepMetrics with a (B,) leading axis."""
+        if len({p.shape[0] for p in prompts}) == 1:
+            # equal-length prompts: one vmapped embed dispatch
+            rs = self._embed_batch(self.params, jnp.stack(prompts))
+        else:
+            rs = jnp.stack([embed_prompt(self.params, p) for p in prompts])
+        m = self.cache.serve_update_batch(rs)
+        served = [int(s) for s in m.served_local]
+        self.stats.requests += len(prompts)
+        self.stats.served_local += sum(served)
+        self.stats.total_gain += float(jnp.sum(m.gain_int))
+        for p, s in zip(prompts, served):
+            if s < self.cache.cfg.k:
+                self.stats.generated += 1
+                _ = self.generate_fn(p)
         return m
 
     @property

@@ -1,0 +1,151 @@
+"""Batched AÇAI pipeline: B=1 bit-exactness, mini-batch quality, serving tier."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import oma, policy, trace
+from repro.core.costs import calibrate_fetch_cost
+from repro.index import IVFFlatIndex
+from repro.index.candidates import index_candidate_fn, index_candidate_fn_batched
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog, reqs, _ = trace.sift_like(n=800, d=16, t=512, seed=0)
+    cat = jnp.array(catalog)
+    c_f = float(calibrate_fetch_cost(cat, kth=50, sample=256))
+    cfg = policy.AcaiConfig(h=48, k=8, c_f=c_f, c_remote=32, c_local=16,
+                            oma=oma.OMAConfig(eta=0.05 / c_f))
+    return cat, jnp.array(reqs), cfg
+
+
+def _nag(m, k, c_f):
+    g = np.asarray(m.gain_int)
+    return float(g.sum()) / (k * c_f * g.shape[0])
+
+
+def test_b1_bit_exact_vs_sequential(setup):
+    """make_replay_batched at B=1 is make_replay, bit for bit (512 reqs)."""
+    cat, reqs, cfg = setup
+    fn = policy.exact_candidate_fn(cat, cfg.c_remote, cfg.c_local)
+    fnb = policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local)
+    s0 = policy.init_state(cat.shape[0], cfg)
+    st_a, m_a = policy.make_replay(cfg, fn)(s0, reqs)
+    st_b, m_b = policy.make_replay_batched(cfg, fnb, 1)(s0, reqs)
+    for name in policy.StepMetrics._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(m_a, name)), np.asarray(getattr(m_b, name)),
+            err_msg=name,
+        )
+    np.testing.assert_array_equal(np.asarray(st_a.y), np.asarray(st_b.y))
+    np.testing.assert_array_equal(np.asarray(st_a.x), np.asarray(st_b.x))
+    assert int(st_a.t) == int(st_b.t)
+
+
+def test_b8_nag_comparable(setup):
+    """Mini-batch (B=8) replay reaches NAG comparable to sequential."""
+    cat, reqs, cfg = setup
+    fn = policy.exact_candidate_fn(cat, cfg.c_remote, cfg.c_local)
+    fnb = policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local)
+    s0 = policy.init_state(cat.shape[0], cfg)
+    _, m_seq = policy.make_replay(cfg, fn)(s0, reqs)
+    _, m_b8 = policy.make_replay_batched(cfg, fnb, 8)(s0, reqs)
+    nag_seq = _nag(m_seq, cfg.k, cfg.c_f)
+    nag_b8 = _nag(m_b8, cfg.k, cfg.c_f)
+    assert nag_b8 > 0.95 * nag_seq, (nag_b8, nag_seq)
+
+
+def test_batched_metrics_shapes_and_occupancy(setup):
+    cat, reqs, cfg = setup
+    fnb = policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local)
+    s0 = policy.init_state(cat.shape[0], cfg)
+    st, m = policy.make_replay_batched(cfg, fnb, 64)(s0, reqs)
+    assert m.gain_int.shape == (512,)
+    assert int(st.t) == 512
+    # fetched books per batch (on its last request); occupancy stays near h
+    occ = np.asarray(m.occupancy)
+    assert abs(occ.mean() - cfg.h) < 0.25 * cfg.h
+
+
+def test_index_candidates_batched_matches_per_request(setup):
+    cat, reqs, cfg = setup
+    index = IVFFlatIndex(cat, nlist=32, nprobe=8)
+    fnb = index_candidate_fn_batched(index, cat, cfg.c_remote, cfg.c_local,
+                                     h=cfg.h)
+    fn = index_candidate_fn(index, cat, cfg.c_remote, cfg.c_local, h=cfg.h)
+    rng = np.random.default_rng(0)
+    x = jnp.zeros(cat.shape[0]).at[rng.choice(cat.shape[0], 48, False)].set(1.0)
+    ids_b, d_b, v_b = fnb(reqs[:8], x)
+    for i in range(8):
+        ids_s, d_s, v_s = fn(reqs[i], x)
+        np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_b[i]))
+        np.testing.assert_array_equal(np.asarray(d_s), np.asarray(d_b[i]))
+        np.testing.assert_array_equal(np.asarray(v_s), np.asarray(v_b[i]))
+
+
+def test_index_local_candidates_only_cached(setup):
+    """The local slab points exclusively at cached rows (no full-catalog
+    scan can sneak uncached objects in)."""
+    cat, reqs, cfg = setup
+    n = cat.shape[0]
+    index = IVFFlatIndex(cat, nlist=32, nprobe=8)
+    fnb = index_candidate_fn_batched(index, cat, cfg.c_remote, cfg.c_local,
+                                     h=cfg.h)
+    rng = np.random.default_rng(1)
+    x = jnp.zeros(n).at[rng.choice(n, 48, False)].set(1.0)
+    ids, d, valid = fnb(reqs[:16], x)
+    loc = np.asarray(ids[:, cfg.c_remote:])
+    vloc = np.asarray(valid[:, cfg.c_remote:])
+    assert (np.asarray(x)[np.clip(loc, 0, n - 1)][vloc] > 0.5).all()
+
+
+def test_ivf_batched_replay_close_to_exact(setup):
+    cat, reqs, cfg = setup
+    index = IVFFlatIndex(cat, nlist=32, nprobe=8)
+    fnb_ivf = index_candidate_fn_batched(index, cat, cfg.c_remote, cfg.c_local,
+                                         h=cfg.h)
+    fnb_ex = policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local)
+    s0 = policy.init_state(cat.shape[0], cfg)
+    _, m_ivf = policy.make_replay_batched(cfg, fnb_ivf, 8)(s0, reqs)
+    _, m_ex = policy.make_replay_batched(cfg, fnb_ex, 8)(s0, reqs)
+    assert _nag(m_ivf, cfg.k, cfg.c_f) > 0.8 * _nag(m_ex, cfg.k, cfg.c_f)
+
+
+def test_depround_cadence_survives_batching(setup):
+    """The depround re-round period stays ~round_every at B>1 (a multiple
+    of M inside the batch window triggers it), not lcm(B, round_every)."""
+    cat, reqs, cfg = setup
+    import dataclasses
+    cfg_dr = dataclasses.replace(
+        cfg, oma=dataclasses.replace(cfg.oma, rounding="depround",
+                                     round_every=20))
+    fnb = policy.exact_candidate_fn_batched(cat, cfg.c_remote, cfg.c_local)
+    step = policy.make_step_batched(cfg_dr, fnb, 8)
+    s0 = policy.init_state(cat.shape[0], cfg_dr, start="empty")
+    # t=16: 20 ∈ [16, 24) -> must re-round (occupancy jumps 0 -> h)
+    st = policy.CacheState(s0.y, s0.x, jnp.asarray(16, jnp.int32), s0.key)
+    st_fire, _ = step(st, reqs[:8])
+    assert float(jnp.sum(st_fire.x)) == cfg_dr.h
+    # t=8 with M=20: no multiple of 20 in [8, 16) -> x stays frozen
+    st = policy.CacheState(s0.y, s0.x, jnp.asarray(8, jnp.int32), s0.key)
+    st_frozen, _ = step(st, reqs[:8])
+    assert float(jnp.sum(st_frozen.x)) == 0.0
+    # full replay keeps depround's exact-occupancy invariant on every
+    # re-rounded state
+    _, m = policy.make_replay_batched(cfg_dr, fnb, 8)(
+        policy.init_state(cat.shape[0], cfg_dr), reqs)
+    occ = np.asarray(m.occupancy)
+    np.testing.assert_array_equal(occ, cfg_dr.h)
+
+
+def test_acai_cache_serve_update_batch(setup):
+    cat, reqs, cfg = setup
+    cache = policy.AcaiCache(cat, cfg, seed=0)
+    m1 = cache.serve_update(reqs[0])
+    assert m1.gain_int.shape == ()
+    mb = cache.serve_update_batch(reqs[1:9])
+    assert mb.gain_int.shape == (8,)
+    assert mb.served_local.shape == (8,)
+    assert int(cache.state.t) == 9
+    assert float(jnp.sum(cache.state.x)) > 0

@@ -47,6 +47,49 @@ def test_pq_adc(q, n, m, c):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("b,n,p,d,k", [(4, 200, 64, 16, 8), (5, 300, 37, 16, 8),
+                                       (12, 500, 130, 32, 16), (1, 100, 9, 8, 4)])
+def test_ivf_scan(b, n, p, d, k):
+    """Fused gather+L2+top-k (interpret mode) vs the XLA oracle, with
+    padded lists and -1 sentinels."""
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(n, d)).astype(np.float32))
+    q = jnp.array(rng.normal(size=(b, d)).astype(np.float32))
+    cand = rng.integers(0, n, (b, p)).astype(np.int32)
+    cand[rng.random((b, p)) < 0.3] = -1  # inverted-list padding
+    cand = jnp.array(cand)
+    gd, gi = ops.ivf_scan_topk(q, x, cand, k, interpret=True)
+    wd, wi = ref.ivf_scan_ref(q, x, cand, k)
+    np.testing.assert_allclose(np.array(gd), np.array(wd), rtol=1e-4, atol=1e-4)
+    # ids may differ under ties: distances of the returned ids must agree,
+    # and underflow sentinels must land in the same slots
+    got_i, want_i = np.array(gi), np.array(wi)
+    np.testing.assert_array_equal(got_i == -1, want_i == -1)
+    dmat = np.array(ref.pairwise_l2_ref(q, x))
+    sel = got_i >= 0
+    np.testing.assert_allclose(
+        dmat[np.nonzero(sel)[0], got_i[sel]], np.array(wd)[sel],
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_ivf_scan_k_underflow():
+    """Queries with fewer than k valid candidates surface -1 ids, +inf."""
+    rng = np.random.default_rng(5)
+    x = jnp.array(rng.normal(size=(50, 8)).astype(np.float32))
+    q = jnp.array(rng.normal(size=(3, 8)).astype(np.float32))
+    cand = np.full((3, 20), -1, np.int32)
+    cand[0, :2] = [7, 31]          # 2 valid < k
+    cand[1, :] = -1                # no valid candidates at all
+    cand[2, :6] = [1, 1, 2, 3, 4, 5]  # duplicates allowed, 6 slots
+    gd, gi = ops.ivf_scan_topk(q, x, jnp.array(cand), 5, interpret=True)
+    wd, wi = ref.ivf_scan_ref(q, x, jnp.array(cand), 5)
+    np.testing.assert_allclose(np.array(gd), np.array(wd), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.array(gi) == -1, np.array(wi) == -1)
+    assert (np.array(gi)[1] == -1).all()
+    assert np.isinf(np.array(gd)[0, 2:]).all()
+
+
 def test_l2_nonnegative_and_zero_diagonal():
     rng = np.random.default_rng(3)
     x = jnp.array(rng.normal(size=(64, 32)).astype(np.float32))

@@ -101,7 +101,8 @@ def test_index_candidate_fn_close_to_exact(setup):
     cfg = policy.AcaiConfig(h=80, k=10, c_f=c_f, c_remote=64, c_local=16,
                             oma=oma.OMAConfig(eta=0.05 / c_f))
     index = IVFFlatIndex(cat, nlist=48, nprobe=10)
-    fn_approx = index_candidate_fn(index, cat, cfg.c_remote, cfg.c_local)
+    fn_approx = index_candidate_fn(index, cat, cfg.c_remote, cfg.c_local,
+                                   h=cfg.h)
     replay = policy.make_replay(cfg, fn_approx)
     state, m = replay(policy.init_state(cat.shape[0], cfg), jnp.array(reqs[:1200]))
     g_approx = B.nag(np.array(m.gain_int), 10, c_f)[-1]

@@ -2,8 +2,11 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import gain as G
 from repro.core import projection as P
