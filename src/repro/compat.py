@@ -1,0 +1,48 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets the current jax API surface but must run on the pinned
+environment (jax 0.4.x).  Policy: every shim resolves the NEW name first,
+falls back to the old location, and keeps the new-API keyword spelling at
+the call sites so that dropping a shim is a one-line change.
+
+`shard_map` history:
+  * jax <= 0.4.x / 0.5.x: ``jax.experimental.shard_map.shard_map`` with the
+    replication-check keyword spelled ``check_rep``;
+  * jax >= 0.6: promoted to ``jax.shard_map`` with the keyword renamed to
+    ``check_vma`` (varying-manual-axes).
+
+Call sites import from here — never from ``jax`` / ``jax.experimental``
+directly — so `core/distributed.py`, `models/moe.py` and the dry-run all
+lower on every supported jax version.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    SHARD_MAP_IMPL = "jax.shard_map"
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    SHARD_MAP_IMPL = "jax.experimental.shard_map.shard_map"
+
+# The promotion to jax.shard_map and the check_rep -> check_vma keyword
+# rename happened in different releases, so key the keyword spelling off
+# the resolved function's actual signature, not its location.
+_REP_KW = ("check_vma"
+           if "check_vma" in inspect.signature(_shard_map).parameters
+           else "check_rep")
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True, **kw: Any) -> Callable:
+    """New-API signature (``check_vma``) mapped onto whichever
+    implementation and keyword spelling this jax provides."""
+    kw[_REP_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -4,8 +4,10 @@ At production scale the catalog (10^8 x d embeddings) and the fractional
 cache state y live SHARDED over the `model` mesh axis; the request batch is
 data-parallel.  One serve+update step per request batch:
 
-  1. every chip scans its catalog shard with the (Pallas) distance kernel
-     and takes a local top-C            -> compute-bound, no comms
+  1. every chip scans its catalog shard with the fused distance+top-k
+     kernel (Pallas `topk_l2` on TPU, the chunked XLA oracle elsewhere, or
+     the sharded-IVF probe) and takes a local top-C
+                                          -> compute-bound, no comms
   2. all-gather of per-shard top-C over `model` (tiny: C ids+dists/request)
      and a top-C re-merge               -> the only quadratic-free exchange
   3. per-request gain/subgradient on the merged candidates (Eq. 55)
@@ -17,96 +19,248 @@ data-parallel.  One serve+update step per request batch:
      applied shard-wise — the O(N log N) sort of Sec. IV-F becomes
      O(N/P log A) + an O(A.P) scalar exchange.
 
-The serve answer (ids/costs of the k cheapest augmented copies) comes out
-of the same merged candidate set.  This file is lowered by the dry-run as
-the paper-representative roofline cell (`acai-retrieval`).
+The serve answer (global ids of the k cheapest augmented copies) comes out
+of the same merged candidate set.  `make_retrieval_step` is the
+paper-representative roofline cell (`acai-retrieval`) lowered by the
+dry-run; `make_replay_sharded` is the serving-stack twin of
+`repro.core.policy.make_replay_batched` — same mini-batch OMA semantics,
+state carried as (y, x, t, key), bit-consistent with the batched replay on
+a 1-device mesh (see DESIGN.md §7).
+
+All shard_map usage goes through `repro.compat` so the module lowers on
+every supported jax version.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import gain as gain_lib
-from repro.core.costs import BIG_COST
+from repro.core import mirror as mirror_maps
+from repro.core import oma as oma_lib
+from repro.core import policy as policy_lib
+from repro.core.costs import BIG_COST, pairwise_dissimilarity
 from repro.core.projection import _negentropy_scale_from_sorted
+from repro.kernels import ops
 
 
-def _local_topk_scan(requests, catalog, c: int, chunk: int):
-    """Fused distance+top-k over catalog chunks: never materialises the
-    (B, N_shard) distance matrix in HBM (the XLA analogue of the Pallas
-    l2_topk kernel — §Perf optimization for the retrieval cell)."""
+def _axis_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for ax in ([axes] if isinstance(axes, str) else axes):
+        total *= sizes[ax]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Sharded IVF: per-shard coarse quantizer + inverted lists (local row ids)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIVF:
+    """Per-shard IVF structures, stacked along the (sharded) row axis.
+
+    centroids: (P * nlist, d)  — shard p owns rows [p*nlist, (p+1)*nlist)
+    invlists:  (P * nlist, cap) int32 — ids are LOCAL row offsets into the
+               owning catalog shard, -1 padded
+    """
+
+    centroids: jax.Array
+    invlists: jax.Array
+    nlist: int
+    nprobe: int
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+def build_sharded_ivf(catalog, n_shards: int, *, nlist: int = 32,
+                      nprobe: int = 8, train_iters: int = 12,
+                      seed: int = 0) -> ShardedIVF:
+    """Train one IVF coarse quantizer per catalog shard.
+
+    Each shard gets its own k-means over its rows — exactly what a chip
+    would do at scale (the invlist table shards row-wise, DESIGN.md §4) —
+    so the sharded retrieval step probes only shard-local lists.
+    """
+    from repro.index.ivf import build_invlists
+    from repro.index.kmeans import kmeans
+
+    catalog = jnp.asarray(catalog, jnp.float32)
     n = catalog.shape[0]
-    qn = jnp.sum(requests * requests, axis=1, keepdims=True)
-    nchunks = max(n // chunk, 1)
+    assert n % n_shards == 0, (n, n_shards)
+    n_shard = n // n_shards
+    cents, tables = [], []
+    for p in range(n_shards):
+        shard = catalog[p * n_shard:(p + 1) * n_shard]
+        key = jax.random.PRNGKey(seed + p)
+        c, assign = kmeans(key, shard, nlist, train_iters)
+        cents.append(np.asarray(c))
+        tables.append(build_invlists(np.asarray(assign), nlist))
+    cap = max(t.shape[1] for t in tables)
+    tables = [np.pad(t, ((0, 0), (0, cap - t.shape[1])), constant_values=-1)
+              for t in tables]
+    return ShardedIVF(
+        centroids=jnp.asarray(np.concatenate(cents, 0), jnp.float32),
+        invlists=jnp.asarray(np.concatenate(tables, 0), jnp.int32),
+        nlist=nlist, nprobe=nprobe)
 
-    def body(carry, j):
-        best_d, best_i = carry
-        blk = jax.lax.dynamic_slice_in_dim(catalog, j * chunk, chunk, 0)
-        cn = jnp.sum(blk * blk, axis=1)[None, :]
-        d2 = jnp.maximum(qn - 2.0 * requests @ blk.T + cn, 0.0)
-        ids = j * chunk + jnp.arange(chunk)[None, :]
-        cat_d = jnp.concatenate([best_d, d2], axis=1)
-        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(
-            ids, (requests.shape[0], chunk))], axis=1)
-        neg, pos = jax.lax.top_k(-cat_d, c)
-        return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
 
-    init = (jnp.full((requests.shape[0], c), jnp.inf, jnp.float32),
-            jnp.zeros((requests.shape[0], c), jnp.int32))
-    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(nchunks))
-    return -best_d, best_i  # (neg-dist convention of lax.top_k callers)
+def _check_ivf_matches_mesh(ivf: "ShardedIVF | None", n_model: int) -> None:
+    """A ShardedIVF built for P shards only makes sense on a P-way model
+    axis: the P(model, None) in_spec would otherwise silently hand each
+    mesh shard centroid/invlist rows belonging to a different catalog
+    sub-shard (local row ids reinterpreted against the wrong shard — wrong
+    candidates, no shape error)."""
+    if ivf is None:
+        return
+    built_for = ivf.centroids.shape[0] // ivf.nlist
+    if built_for != n_model:
+        raise ValueError(
+            f"ShardedIVF was built for {built_for} shards "
+            f"(centroids {ivf.centroids.shape}, nlist {ivf.nlist}) but the "
+            f"mesh's model axis has {n_model} devices — rebuild with "
+            f"build_sharded_ivf(catalog, {n_model}, ...)")
 
+
+def _local_scan(requests, catalog, c: int, scan_chunk: int, ivf_shard):
+    """Per-shard local top-c scan: (dists (b, c), local ids (b, c)).
+
+    Three variants (DESIGN.md §7): paper-faithful full matrix
+    (scan_chunk = 0, ivf = None), the fused kernel path (`ops.topk_l2_fused`
+    — Pallas on TPU, chunked XLA oracle elsewhere), and the sharded-IVF
+    probe that scans only this shard's probed inverted lists.  Underflowing
+    slots (IVF only) come back as dist = +inf, id = -1.
+    """
+    if ivf_shard is not None:
+        centroids, invlists, nprobe = ivf_shard
+        dc = pairwise_dissimilarity(requests, centroids)
+        _, probe = jax.lax.top_k(-dc, nprobe)                # (b, nprobe)
+        cand = invlists[probe].reshape(requests.shape[0], -1)
+        return ops.ivf_scan_auto(requests, catalog, cand, c)
+    if scan_chunk:
+        return ops.topk_l2_fused(requests, catalog, c, chunk=scan_chunk)
+    d2 = pairwise_dissimilarity(requests, catalog)
+    neg, ids = jax.lax.top_k(-d2, c)
+    return -neg, ids
+
+
+def _merge_topc(d_loc, ids_loc, miss, count: int, off, n: int, model_axis):
+    """All-gather each shard's local top candidates over `model` and
+    re-top-k to the global top-`count` (step 2 of the module docstring).
+
+    `miss` marks invalid local slots (IVF underflow): they become
+    (dist = +inf, id = n) and sort to the tail.  Returns (dists (b, count)
+    with +inf on unfilled slots, global ids (b, count))."""
+    gids = jnp.where(miss, n, ids_loc + off)
+    dd = jnp.where(miss, jnp.inf, d_loc)
+    all_d = jax.lax.all_gather(dd, model_axis, axis=1, tiled=True)
+    all_i = jax.lax.all_gather(gids, model_axis, axis=1, tiled=True)
+    negm, pos = jax.lax.top_k(-all_d, count)
+    return -negm, jnp.take_along_axis(all_i, pos, axis=1)
+
+
+def _route_subgradients(g_cand, ids, valid, off, n_shard: int, batch_axes,
+                        denom: float = 1.0):
+    """All-gather per-request candidate subgradients over the batch axes
+    and scatter-add the slots this shard owns into its (n_shard,) slice
+    (step 4 of the module docstring).  `valid` (optional) additionally
+    masks invalid candidate slots; `denom` is the mini-batch averaging
+    divisor."""
+    g_all = jax.lax.all_gather(g_cand, batch_axes, axis=0, tiled=True)
+    ids_all = jax.lax.all_gather(ids, batch_axes, axis=0, tiled=True)
+    mine = (ids_all >= off) & (ids_all < off + n_shard)
+    if valid is not None:
+        mine &= jax.lax.all_gather(valid, batch_axes, axis=0, tiled=True)
+    lidx = jnp.clip(ids_all - off, 0, n_shard - 1)
+    val = jnp.where(mine, g_all, 0.0).reshape(-1)
+    if denom != 1.0:
+        val = val / denom
+    return jnp.zeros((n_shard,), g_cand.dtype).at[lidx.reshape(-1)].add(val)
+
+
+def _gather_sharded(vec_shard, gids, my_shard, n_shard, model_axis):
+    """Look up sharded (N,) state at global ids: masked local gather +
+    psum over `model`.  Out-of-range ids (>= N, the invalid sentinel)
+    return 0."""
+    local = (gids >= my_shard * n_shard) & (gids < (my_shard + 1) * n_shard)
+    safe = jnp.clip(gids - my_shard * n_shard, 0, n_shard - 1)
+    return jax.lax.psum(jnp.where(local, vec_shard[safe], 0.0), model_axis)
+
+
+def _distributed_projection(z, h, top_a: int, n_model: int, model_axis):
+    """Distributed negentropy Bregman projection (Sec. IV-F water-filling).
+
+    Per shard: top-A heads + exact tail sum (scatter-zero, no total-minus-
+    top cancellation).  Exchange: the (P·A,) heads all-gather + one scalar
+    psum.  The global scale s is then solved redundantly on every shard
+    from the same sorted head array — bitwise identical across shards — and
+    applied locally.  At P = 1 this IS `capped_simplex_negentropy_topk`.
+    """
+    z = jnp.maximum(z, 0.0)
+    ztop, idx = jax.lax.top_k(z, top_a)
+    tail = jnp.sum(z.at[idx].set(0.0))
+    heads = jax.lax.all_gather(ztop, model_axis, tiled=True)   # (P*A,)
+    tails = jax.lax.psum(tail, model_axis)
+    if n_model > 1:
+        heads = jnp.sort(heads)[::-1]
+    s, _ = _negentropy_scale_from_sorted(heads, tails, h)
+    return jnp.minimum(1.0, z * s)
+
+
+# ---------------------------------------------------------------------------
+# The roofline cell: stateless retrieval + OMA step on thresholded y
+# ---------------------------------------------------------------------------
 
 def make_retrieval_step(mesh, *, n_shard: int, d: int, c: int, k: int,
                         c_f: float, h: int, eta: float, top_a: int,
                         batch_axes=("data",), model_axis: str = "model",
-                        scan_chunk: int = 0):
+                        scan_chunk: int = 0, ivf: ShardedIVF | None = None):
     """Returns step(catalog_shard, y, requests) -> (y_new, answer, metrics)
     wrapped in shard_map over `mesh`.
 
     catalog: (N, d) sharded P(model, None);  y: (N,) sharded P(model);
     requests: (B, d) sharded P(batch_axes, None).
-    scan_chunk > 0 switches the local scan to the fused chunked top-k
-    (memory-roofline optimization; 0 = paper-faithful full matrix).
-    """
-    n_model = 1
-    for ax in ([model_axis] if isinstance(model_axis, str) else model_axis):
-        n_model *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+    scan_chunk > 0 routes the local scan through the fused kernels
+    (`ops.topk_l2_fused`: Pallas l2_topk on TPU, chunked XLA oracle
+    elsewhere — memory-roofline optimization; 0 = paper-faithful full
+    matrix).  `ivf` switches each shard to probing only its own inverted
+    lists (`ops.ivf_scan_topk` / oracle) — the approximate-index serving
+    configuration of Sec. IV-B at pod scale.
 
-    def step(catalog, y, requests):
+    The answer is the (B, k) global object ids of the k cheapest augmented
+    copies per request (Eq. 2 on the merged candidates); -1 marks answer
+    slots a starved IVF probe could not fill with a real candidate.
+    """
+    n_model = _axis_size(mesh, model_axis)
+    n = n_shard * n_model
+    _check_ivf_matches_mesh(ivf, n_model)
+
+    def step(catalog, y, requests, *ivf_args):
         # ---- 1. local distance scan + top-C (per shard) -----------------
-        if scan_chunk:
-            neg, loc_ids = _local_topk_scan(requests, catalog, c, scan_chunk)
-            neg = -neg
-        else:
-            qn = jnp.sum(requests * requests, axis=1, keepdims=True)
-            cn = jnp.sum(catalog * catalog, axis=1)[None, :]
-            d2 = jnp.maximum(qn - 2.0 * requests @ catalog.T + cn, 0.0)
-            neg, loc_ids = jax.lax.top_k(-d2, c)             # (b, C)
+        ivf_shard = (ivf_args[0], ivf_args[1], ivf.nprobe) if ivf else None
+        loc_d, loc_ids = _local_scan(requests, catalog, c, scan_chunk,
+                                     ivf_shard)
         my_shard = jax.lax.axis_index(model_axis)
-        glob_ids = loc_ids + my_shard * n_shard
 
         # ---- 2. merge shards' candidates over `model` --------------------
-        all_d = jax.lax.all_gather(-neg, model_axis, axis=1,
-                                   tiled=True)                # (b, P*C)
-        all_ids = jax.lax.all_gather(glob_ids, model_axis, axis=1,
-                                     tiled=True)
-        negm, pos = jax.lax.top_k(-all_d, c)                  # global top-C
-        cand_ids = jnp.take_along_axis(all_ids, pos, axis=1)
-        cand_d = -negm
+        cand_d, cand_ids = _merge_topc(loc_d, loc_ids, loc_ids < 0, c,
+                                       my_shard * n_shard, n, model_axis)
+        cand_d = jnp.where(jnp.isfinite(cand_d), cand_d, BIG_COST)
 
-        # candidate y values: gather from the sharded y via gather-all
-        # (y is (n_shard,) per chip; candidates span shards, so gather the
-        # candidate y's with a masked local lookup + psum over model)
-        local = (cand_ids >= my_shard * n_shard) & \
-                (cand_ids < (my_shard + 1) * n_shard)
-        safe = jnp.clip(cand_ids - my_shard * n_shard, 0, n_shard - 1)
-        y_cand = jnp.where(local, y[safe], 0.0)
-        y_cand = jax.lax.psum(y_cand, model_axis)             # (b, C)
+        # candidate y values: masked local lookup + psum over model (ids
+        # >= N, the underflow sentinel, read as y = 0)
+        y_cand = _gather_sharded(y, cand_ids, my_shard, n_shard, model_axis)
 
         # ---- 3. serve + subgradient (Eq. 2 / Eq. 55) ---------------------
         serve = jax.vmap(lambda dd, xx: gain_lib.serve(dd, xx, k, c_f))(
@@ -114,27 +268,23 @@ def make_retrieval_step(mesh, *, n_shard: int, d: int, c: int, k: int,
         _, g_cand = jax.vmap(
             lambda dd, yy: gain_lib.gain_and_subgradient(dd, yy, k, c_f))(
             cand_d, y_cand)
+        answers = jnp.take_along_axis(cand_ids, serve.answer_ids, axis=1)
+        # IVF underflow can leave < k real candidates; those answer slots
+        # carry the out-of-range sentinel — surface them as id = -1 (the
+        # kernels' underflow convention) rather than a clamping-prone n.
+        answers = jnp.where(answers < n, answers, -1)
 
         # ---- 4. route subgradients to owning shards ----------------------
-        g_all = jax.lax.all_gather(g_cand, batch_axes, axis=0, tiled=True)
-        ids_all = jax.lax.all_gather(cand_ids, batch_axes, axis=0,
-                                     tiled=True)               # (B, C)
-        mine = (ids_all >= my_shard * n_shard) & \
-               (ids_all < (my_shard + 1) * n_shard)
-        local_idx = jnp.clip(ids_all - my_shard * n_shard, 0, n_shard - 1)
-        g_shard = jnp.zeros((n_shard,), y.dtype).at[
-            local_idx.reshape(-1)].add(
-            jnp.where(mine, g_all, 0.0).reshape(-1))
+        g_shard = _route_subgradients(g_cand, cand_ids, None,
+                                      my_shard * n_shard, n_shard,
+                                      batch_axes)
 
         # ---- 5. OMA + distributed projection -----------------------------
-        z = y * jnp.exp(jnp.clip(eta * g_shard, -60.0, 60.0))
-        ztop, _ = jax.lax.top_k(z, top_a)
-        tail = jnp.sum(z) - jnp.sum(ztop)
-        heads = jax.lax.all_gather(ztop, model_axis, tiled=True)  # (P*A,)
-        tails = jax.lax.psum(tail, model_axis)
-        heads = jnp.sort(heads)[::-1]
-        s, _ = _negentropy_scale_from_sorted(heads, tails, float(h))
-        y_new = jnp.clip(jnp.minimum(1.0, z * s), 1e-12, 1.0)
+        z = mirror_maps.dual_ascent_step(y, g_shard, eta,
+                                         mirror_maps.NEGENTROPY)
+        y_new = jnp.clip(
+            _distributed_projection(z, float(h), top_a, n_model, model_axis),
+            1e-12, 1.0)
 
         metrics = {
             "gain": jax.lax.pmean(jnp.mean(serve.gain), batch_axes),
@@ -142,24 +292,29 @@ def make_retrieval_step(mesh, *, n_shard: int, d: int, c: int, k: int,
                 jnp.mean(jnp.sum(serve.from_cache, axis=1).astype(jnp.float32)),
                 batch_axes),
         }
-        return y_new, serve.answer_ids, metrics
+        return y_new, answers, metrics
 
-    return jax.shard_map(
+    in_specs = [P(model_axis, None), P(model_axis), P(batch_axes, None)]
+    if ivf is not None:
+        in_specs += [P(model_axis, None), P(model_axis, None)]
+    mapped = shard_map(
         step, mesh=mesh,
-        in_specs=(P(model_axis, None), P(model_axis), P(batch_axes, None)),
+        in_specs=tuple(in_specs),
         out_specs=(P(model_axis), P(batch_axes, None),
                    {"gain": P(), "served_local": P()}),
         check_vma=False,
     )
+    if ivf is None:
+        return mapped
+    return lambda catalog, y, requests: mapped(
+        catalog, y, requests, ivf.centroids, ivf.invlists)
 
 
 def reference_step(catalog, y, requests, *, c, k, c_f, h, eta, top_a):
     """Single-device oracle with identical semantics (for tests)."""
     from repro.core import projection
 
-    d2 = jnp.maximum(
-        jnp.sum(requests ** 2, 1, keepdims=True)
-        - 2 * requests @ catalog.T + jnp.sum(catalog ** 2, 1)[None], 0.0)
+    d2 = pairwise_dissimilarity(requests, catalog)
     neg, ids = jax.lax.top_k(-d2, c)
     cand_d = -neg
     y_cand = y[ids]
@@ -171,4 +326,170 @@ def reference_step(catalog, y, requests, *, c, k, c_f, h, eta, top_a):
     g = jnp.zeros_like(y).at[ids.reshape(-1)].add(g_cand.reshape(-1))
     z = y * jnp.exp(jnp.clip(eta * g, -60.0, 60.0))
     y_new = projection.capped_simplex_negentropy_topk(z, h, top_a)
-    return jnp.clip(y_new, 1e-12, 1.0), serve.answer_ids
+    answers = jnp.take_along_axis(ids, serve.answer_ids, axis=1)
+    return jnp.clip(y_new, 1e-12, 1.0), answers
+
+
+# ---------------------------------------------------------------------------
+# The serving twin: sharded make_step_batched / make_replay_batched
+# ---------------------------------------------------------------------------
+
+def make_step_sharded(
+    cfg: policy_lib.AcaiConfig, mesh, catalog: jax.Array, batch: int, *,
+    eta_scale: float | None = None, model_axis: str = "model",
+    batch_axes=("data",), scan_chunk: int = 0,
+    ivf: ShardedIVF | None = None, top_a: int | None = None,
+) -> Callable:
+    """Sharded mini-batch step: (CacheState, requests (B, d)) ->
+    (CacheState', StepMetrics (B,)) — the multi-device twin of
+    `policy.make_step_batched` + `exact_candidate_fn_batched`.
+
+    The candidate scan (per-shard fused top-k + top-C merge), the
+    cached-row scan, serve/gain/subgradient, and the OMA + water-filling
+    projection all run under shard_map over `mesh` (catalog/y/x sharded
+    P(model), requests P(batch_axes)); rounding and metric assembly reuse
+    the policy-layer code on the (small) merged state outside the map.
+
+    Bit-consistency contract (pinned by tests/test_distributed_acai.py):
+    on a 1-device mesh with `scan_chunk = 0`, `ivf = None` and
+    `cfg.oma.projection_topk == top_a`, every carried state and metric is
+    bitwise identical to `make_step_batched` with the exact candidate
+    generator.  `top_a` defaults to `cfg.oma.projection_topk` (or 2h + 64)
+    per shard — headroom for the distributed projection, Sec. IV-F.
+
+    Requires the negentropy mirror map (the distributed water-filling
+    solves the negentropy scale; euclidean would need a different exchange).
+    """
+    if cfg.oma.mirror != mirror_maps.NEGENTROPY:
+        raise NotImplementedError(
+            "make_step_sharded requires the negentropy mirror map")
+    n, d = catalog.shape
+    n_model = _axis_size(mesh, model_axis)
+    n_batch = _axis_size(mesh, batch_axes)
+    if n % n_model:
+        raise ValueError(
+            f"catalog rows ({n}) must divide by the mesh's {model_axis} "
+            f"axis ({n_model})")
+    if batch % n_batch:
+        raise ValueError(
+            f"batch size {batch} must divide by the mesh's batch axes "
+            f"{batch_axes} (total size {n_batch}); note serve_update "
+            f"(B = 1) only exists on meshes with size-1 batch axes")
+    _check_ivf_matches_mesh(ivf, n_model)
+    n_shard = n // n_model
+    a = min(n_shard, top_a or cfg.oma.projection_topk or 2 * cfg.h + 64)
+    scale = float(batch) if eta_scale is None else float(eta_scale)
+    cfg_up = dataclasses.replace(
+        cfg, oma=dataclasses.replace(cfg.oma, eta=cfg.oma.eta * scale)
+    )
+
+    def local(catalog_shard, y, x, rs, *ivf_args):
+        my_shard = jax.lax.axis_index(model_axis)
+        off = my_shard * n_shard
+        b = rs.shape[0]
+
+        # ---- remote candidates: per-shard scan + top-C merge ------------
+        if scan_chunk == 0 and ivf is None:
+            # paper-faithful / bit-consistent path: one (b, n_shard) GEMM
+            # feeds both the remote top-k and the cached-row top-k, exactly
+            # as exact_candidate_fn_batched does on the full catalog.
+            d_full = pairwise_dissimilarity(rs, catalog_shard)
+            neg_r, loc_r = jax.lax.top_k(-d_full, cfg.c_remote)
+            d_r, miss_r = -neg_r, jnp.zeros(neg_r.shape, bool)
+            d_cached = jnp.where(x[None, :] > 0.5, d_full, jnp.inf)
+            neg_l, loc_l = jax.lax.top_k(-d_cached, cfg.c_local)
+            d_l = -neg_l
+        else:
+            ivf_shard = ((ivf_args[0], ivf_args[1], ivf.nprobe)
+                         if ivf else None)
+            d_r, loc_r = _local_scan(rs, catalog_shard, cfg.c_remote,
+                                     scan_chunk, ivf_shard)
+            miss_r = loc_r < 0
+            # cached rows: gather once per shard (static 2h + 64 bound,
+            # same policy as index_candidate_fn_batched) + one small GEMM.
+            cap = min(n_shard, 2 * cfg.h + 64)
+            cached = jnp.nonzero(x > 0.5, size=cap, fill_value=-1)[0]
+            cached_embs = catalog_shard[jnp.clip(cached, 0, n_shard - 1)]
+            d_loc = pairwise_dissimilarity(rs, cached_embs)
+            d_loc = jnp.where((cached >= 0)[None, :], d_loc, jnp.inf)
+            neg_l, pos = jax.lax.top_k(-d_loc, cfg.c_local)
+            loc_l = jnp.where(jnp.isfinite(neg_l), cached[pos], 0)
+            d_l = -neg_l
+
+        d_remote, ids_remote = _merge_topc(d_r, loc_r, miss_r, cfg.c_remote,
+                                           off, n, model_axis)
+        d_local, ids_local = _merge_topc(d_l, loc_l,
+                                         jnp.zeros(d_l.shape, bool),
+                                         cfg.c_local, off, n, model_axis)
+
+        # ---- slab assembly: exactly exact_candidate_fn_batched ----------
+        ids = jnp.concatenate([ids_remote, ids_local], axis=1)   # (b, C)
+        dcand = jnp.concatenate([d_remote, d_local], axis=1)
+        valid = policy_lib.dedup_mask_batched(ids, n)
+        x_at = _gather_sharded(x, ids, my_shard, n_shard, model_axis)
+        cached_ok = jnp.concatenate(
+            [jnp.ones((b, cfg.c_remote), bool),
+             x_at[:, cfg.c_remote:] > 0.5], axis=1)
+        valid = valid & cached_ok
+        dcand = jnp.where(valid & jnp.isfinite(dcand), dcand, BIG_COST)
+
+        # ---- serve + gain/subgradient (vs the same x_t / y_t) -----------
+        y_at = _gather_sharded(y, ids, my_shard, n_shard, model_axis)
+        x_cand = jnp.where(valid, x_at, 0.0)
+        y_cand = jnp.where(valid, y_at, 0.0)
+        served = gain_lib.serve_batch(dcand, x_cand, cfg.k, cfg.c_f)
+        gain_frac, g_cand = gain_lib.gain_and_subgradient_batch(
+            dcand, y_cand, cfg.k, cfg.c_f)
+
+        # ---- route subgradients to owning y-shards ----------------------
+        g_shard = _route_subgradients(g_cand, ids, valid, off, n_shard,
+                                      batch_axes, denom=float(batch))
+
+        # ---- OMA + distributed water-filling projection -----------------
+        z = mirror_maps.dual_ascent_step(y, g_shard, cfg_up.oma.eta,
+                                         cfg.oma.mirror)
+        y_new = jnp.clip(
+            _distributed_projection(z, cfg.h, a, n_model, model_axis),
+            oma_lib.Y_FLOOR, 1.0)
+
+        served_local = jnp.sum(served.from_cache.astype(jnp.int32), axis=1)
+        return y_new, served.gain, gain_frac, served.cost, served_local
+
+    in_specs = [P(model_axis, None), P(model_axis), P(model_axis),
+                P(batch_axes, None)]
+    extra = ()
+    if ivf is not None:
+        in_specs += [P(model_axis, None), P(model_axis, None)]
+        extra = (ivf.centroids, ivf.invlists)
+    mapped = shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(P(model_axis),) + (P(batch_axes),) * 4,
+        check_vma=False,
+    )
+
+    def step(state: policy_lib.CacheState, rs: jax.Array):
+        key, k_round = jax.random.split(state.key)
+        y_new, gain_int, gain_frac, cost, served_local = mapped(
+            catalog, state.y, state.x, rs, *extra)
+        return policy_lib.finish_step_batched(
+            cfg_up, state, key, k_round, batch, y_new, gain_int, gain_frac,
+            cost, served_local)
+
+    return step
+
+
+def make_replay_sharded(
+    cfg: policy_lib.AcaiConfig, mesh, catalog: jax.Array, batch: int,
+    **kwargs,
+) -> Callable:
+    """Sharded mini-batched whole-trace replay — the multi-device twin of
+    `policy.make_replay_batched` (same signature contract: (state,
+    requests (T, d)) -> (state', StepMetrics (T,)), T divisible by batch).
+
+    On a 1-device mesh with `cfg.oma.projection_topk == top_a` this is
+    bit-consistent with `make_replay_batched` + exact candidates; on P
+    shards the per-step communication is the top-C all-gathers plus the
+    (P·A + 1) projection scalars (DESIGN.md §7).
+    """
+    return policy_lib.make_replay_from_step(
+        make_step_sharded(cfg, mesh, catalog, batch, **kwargs), batch)

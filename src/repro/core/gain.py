@@ -137,9 +137,12 @@ def serve(d: jax.Array, x: jax.Array, k: int, c_f) -> ServeResult:
     answer_costs = a.costs[pos]
 
     # Empty-cache cost: k closest catalog objects, all fetched remotely.
+    # The empty cache is always a feasible answer, so G(r, x) >= 0; the
+    # maximum() guards the float dust of the two different summation orders.
     neg_top, _ = jax.lax.top_k(-d, k)
     empty_cost = jnp.sum(-neg_top) + k * c_f
-    return ServeResult(answer_ids, from_cache, answer_costs, cost, empty_cost - cost)
+    return ServeResult(answer_ids, from_cache, answer_costs, cost,
+                       jnp.maximum(empty_cost - cost, 0.0))
 
 
 def empty_cache_cost(d: jax.Array, k: int, c_f) -> jax.Array:

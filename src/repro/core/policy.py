@@ -211,6 +211,28 @@ def make_replay(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
     return replay
 
 
+def finish_step_batched(cfg_up: AcaiConfig, state: CacheState, key, k_round,
+                        batch: int, y_new, gain_int, gain_frac, cost,
+                        served_local):
+    """Shared tail of every mini-batch step: rounding + metric assembly +
+    state advance.  Used by both `make_step_batched` and
+    `repro.core.distributed.make_step_sharded` so the two stay
+    bit-consistent by construction (§6 metric reduction: `fetched` books
+    the batch's cache-update traffic on its last request, `occupancy`
+    repeats the post-update value)."""
+    x_new = _round_state(cfg_up, k_round, y_new, state.y, state.x, state.t,
+                         width=batch)
+    moved = rounding_lib.movement(x_new, state.x)
+    metrics = StepMetrics(
+        gain_int=gain_int, gain_frac=gain_frac, cost=cost,
+        served_local=served_local,
+        fetched=jnp.concatenate(
+            [jnp.zeros((batch - 1,), moved.dtype), moved[None]]),
+        occupancy=jnp.full((batch,), jnp.sum(x_new)),
+    )
+    return CacheState(y_new, x_new, state.t + batch, key), metrics
+
+
 def make_step_batched(
     cfg: AcaiConfig, candidate_fn_batched: Callable, batch: int,
     eta_scale: float | None = None,
@@ -256,37 +278,21 @@ def make_step_batched(
             .add(jnp.where(valid, g_cand, 0.0).reshape(-1) / batch)
         )
         y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg_up.oma)
-        x_new = _round_state(cfg_up, k_round, y_new, state.y, state.x, state.t,
-                             width=batch)
-
-        moved = rounding_lib.movement(x_new, state.x)
-        metrics = StepMetrics(
-            gain_int=served.gain,
-            gain_frac=gain_frac,
-            cost=served.cost,
-            served_local=jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
-            fetched=jnp.concatenate(
-                [jnp.zeros((batch - 1,), moved.dtype), moved[None]]
-            ),
-            occupancy=jnp.full((batch,), jnp.sum(x_new)),
-        )
-        return CacheState(y_new, x_new, state.t + batch, key), metrics
+        return finish_step_batched(
+            cfg_up, state, key, k_round, batch, y_new, served.gain,
+            gain_frac, served.cost,
+            jnp.sum(served.from_cache.astype(jnp.int32), axis=1))
 
     return step
 
 
-def make_replay_batched(
-    cfg: AcaiConfig, candidate_fn_batched: Callable, batch: int,
-    eta_scale: float | None = None,
-) -> Callable:
-    """Mini-batched whole-trace replay.
-
-    (state, requests (T, d)) -> (state', StepMetrics (T,)): the trace is
-    scanned in (T / batch) mini-batches (T must divide), metrics come back
-    flattened per request so downstream figure code is unchanged.  At
-    batch = 1 this is bit-exact with make_replay.
-    """
-    step = make_step_batched(cfg, candidate_fn_batched, batch, eta_scale)
+def make_replay_from_step(step: Callable, batch: int) -> Callable:
+    """Wrap a mini-batch step ((state, (B, d)) -> (state', metrics (B,)))
+    into a whole-trace replay: (state, requests (T, d)) -> (state',
+    StepMetrics (T,)), T divisible by batch, metrics flattened per request
+    so downstream figure code is batch-invariant.  Shared by
+    `make_replay_batched` and `repro.core.distributed.make_replay_sharded`
+    — one replay contract, two step implementations."""
 
     @jax.jit
     def replay(state: CacheState, requests: jax.Array):
@@ -304,33 +310,81 @@ def make_replay_batched(
     return replay
 
 
+def make_replay_batched(
+    cfg: AcaiConfig, candidate_fn_batched: Callable, batch: int,
+    eta_scale: float | None = None,
+) -> Callable:
+    """Mini-batched whole-trace replay.
+
+    (state, requests (T, d)) -> (state', StepMetrics (T,)): the trace is
+    scanned in (T / batch) mini-batches (T must divide), metrics come back
+    flattened per request so downstream figure code is unchanged.  At
+    batch = 1 this is bit-exact with make_replay.
+    """
+    return make_replay_from_step(
+        make_step_batched(cfg, candidate_fn_batched, batch, eta_scale), batch)
+
+
 class AcaiCache:
     """Object API over the jitted step, for the online serving tier.
 
     Accepts either a per-request `candidate_fn` or a batched
     `candidate_fn_batched` (preferred — the per-request path is derived
     from it, and `serve_update_batch` amortises one OMA update over a whole
-    request mini-batch)."""
+    request mini-batch).
+
+    `mesh` switches both entry points to the sharded multi-device step
+    (`repro.core.distributed.make_step_sharded`): catalog and cache state
+    shard over the mesh's `model` axis, the candidate scan + OMA +
+    projection run under shard_map, and the single-request path becomes the
+    B = 1 view of the sharded batch step.  `candidate_fn*` are ignored in
+    that case (the sharded step owns candidate generation); pass
+    `sharded_kwargs` (e.g. `scan_chunk`, `ivf`) to configure it."""
 
     def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None,
-                 candidate_fn_batched=None, seed=0):
+                 candidate_fn_batched=None, seed=0, mesh=None,
+                 sharded_kwargs: dict | None = None):
         self.cfg = cfg
         self.catalog = catalog
-        if candidate_fn_batched is None:
-            if candidate_fn is None:
-                candidate_fn_batched = exact_candidate_fn_batched(
-                    catalog, cfg.c_remote, cfg.c_local
-                )
-            else:
-                candidate_fn_batched = jax.vmap(candidate_fn, in_axes=(0, None))
-        self._fn_batched = candidate_fn_batched
-        if candidate_fn is None:
-            candidate_fn = per_request_view(candidate_fn_batched)
-        self._step = jax.jit(make_step(cfg, candidate_fn))
+        self.mesh = mesh
+        self._sharded_kwargs = dict(sharded_kwargs or {})
         self._bsteps: dict[int, Callable] = {}
+        if mesh is not None:
+            # built lazily on first serve_update: a B = 1 step only exists
+            # on meshes whose batch axes have size 1 (serving meshes are
+            # (1, P)); batched-only use of a (dp, P) mesh must not crash
+            # here.
+            self._step = None
+        else:
+            if candidate_fn_batched is None:
+                if candidate_fn is None:
+                    candidate_fn_batched = exact_candidate_fn_batched(
+                        catalog, cfg.c_remote, cfg.c_local
+                    )
+                else:
+                    candidate_fn_batched = jax.vmap(candidate_fn,
+                                                    in_axes=(0, None))
+            self._fn_batched = candidate_fn_batched
+            if candidate_fn is None:
+                candidate_fn = per_request_view(candidate_fn_batched)
+            self._step = jax.jit(make_step(cfg, candidate_fn))
         self.state = init_state(catalog.shape[0], cfg, seed=seed)
 
+    def _sharded_step(self, batch: int) -> Callable:
+        from repro.core.distributed import make_step_sharded
+
+        return make_step_sharded(self.cfg, self.mesh, self.catalog, batch,
+                                 **self._sharded_kwargs)
+
     def serve_update(self, r: jax.Array) -> StepMetrics:
+        if self._step is None:  # lazy B = 1 view of the sharded step
+            b1 = self._sharded_step(1)
+
+            def _step1(state, rr):
+                state, m = b1(state, rr[None, :])
+                return state, jax.tree_util.tree_map(lambda a: a[0], m)
+
+            self._step = jax.jit(_step1)
         self.state, metrics = self._step(self.state, r)
         return metrics
 
@@ -342,7 +396,10 @@ class AcaiCache:
         b = rs.shape[0]
         step = self._bsteps.get(b)
         if step is None:
-            step = jax.jit(make_step_batched(self.cfg, self._fn_batched, b))
+            if self.mesh is not None:
+                step = jax.jit(self._sharded_step(b))
+            else:
+                step = jax.jit(make_step_batched(self.cfg, self._fn_batched, b))
             self._bsteps[b] = step
         self.state, metrics = step(self.state, rs)
         return metrics

@@ -47,7 +47,28 @@ def index_candidate_fn_batched(
     index, catalog: jax.Array, c_remote: int, c_local: int,
     h: int | None = None, local_cap: int | None = None,
 ):
-    """(B, d) requests x (N,) cache state -> (B, C) candidate slabs."""
+    """Build the batched candidate generator backed by an ANN index.
+
+    Args:
+      index: remote-catalog index exposing `query(rs (B, d), k) ->
+        (dists (B, k), ids (B, k))` with -1 marking underflow, and
+        optionally `exact_distances = True` when its distances are already
+        exact on `catalog` (skips the re-rank).
+      catalog: (N, d) float32 shared embedding table.
+      c_remote: remote-index candidates per request (>= cfg.k).
+      c_local: cached-row candidates per request.
+      h: cache capacity — sizes the static cached-row gather to 2h + 64
+        (see `_local_cap`); pass it (or `local_cap`) whenever known.
+      local_cap: explicit override of the cached-row gather bound.
+
+    Returns:
+      fn(rs (B, d), x (N,)) -> (ids (B, C), dists (B, C), valid (B, C))
+      with C = c_remote + c_local (DESIGN.md §4 slab layout): int32
+      candidate ids (n marks an invalid slot), float32 exact distances
+      (BIG_COST on invalid slots), bool validity after cross-slab dedup.
+      Compatible with `repro.core.policy.make_step_batched` /
+      `make_replay_batched` and the B = 1 `per_request_view`.
+    """
     n = catalog.shape[0]
     cap = _local_cap(n, c_local, h, local_cap)
 

@@ -33,7 +33,19 @@ def _pad_rows(a: jax.Array, mult: int, value=0.0) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("interpret",))
 def pairwise_l2(q: jax.Array, x: jax.Array, *, interpret: bool | None = None):
-    """(Q, D) x (N, D) -> (Q, N) squared L2 via the Pallas kernel."""
+    """Pairwise squared-L2 distances via the Pallas kernel.
+
+    Args:
+      q: (Q, D) float query embeddings (promoted to float32 inside).
+      x: (N, D) float catalog embeddings.
+      interpret: force Pallas interpret mode; default = auto (compiled on
+        TPU, interpret elsewhere — DESIGN.md §3 backend dispatch).
+
+    Returns:
+      (Q, N) float32 squared distances, clamped at 0 (DESIGN.md §2).  Rows
+      are internally padded to the (BQ, BN) = (128, 128) tile grid of
+      DESIGN.md §4 and sliced back, so any Q, N are accepted.
+    """
     interp = (not _on_tpu()) if interpret is None else interpret
     qq, n = q.shape[0], x.shape[0]
     qp = _pad_rows(q, l2_kernel.BQ)
@@ -44,7 +56,20 @@ def pairwise_l2(q: jax.Array, x: jax.Array, *, interpret: bool | None = None):
 
 @partial(jax.jit, static_argnames=("interpret",))
 def pq_adc(lut: jax.Array, codes: jax.Array, *, interpret: bool | None = None):
-    """ADC scan: lut (Q, M, C) x codes (N, M) -> (Q, N)."""
+    """Product-quantization asymmetric-distance scan (ADC).
+
+    Args:
+      lut: (Q, M, C) per-query, per-subspace distance tables (float32):
+        lut[q, m, c] = ||r_q^{(m)} - centroid_c^{(m)}||².
+      codes: (N, M) integer PQ codes in [0, C).
+      interpret: see `pairwise_l2`.
+
+    Returns:
+      (Q, N) float32 approximate distances
+      dist[q, n] = Σ_m lut[q, m, codes[n, m]], computed on the MXU via the
+      on-the-fly one-hot contraction of DESIGN.md §3.  Tile grid
+      (BQ, BN) = (128, 128); inputs are padded/sliced automatically.
+    """
     interp = (not _on_tpu()) if interpret is None else interpret
     qq, n = lut.shape[0], codes.shape[0]
     lp = _pad_rows(lut, pq_adc_kernel.BQ)
@@ -55,7 +80,21 @@ def pq_adc(lut: jax.Array, codes: jax.Array, *, interpret: bool | None = None):
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
 def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None):
-    """Fused blocked distance+top-k: returns (dists (Q,k), ids (Q,k))."""
+    """Fused blocked distance + top-k: the (Q, N) matrix never hits HBM.
+
+    Args:
+      q: (Q, D) query embeddings.
+      x: (N, D) catalog embeddings.
+      k: number of nearest neighbours per query (static).
+      interpret: see `pairwise_l2`.
+
+    Returns:
+      (dists (Q, k), ids (Q, k)): the k smallest squared distances per
+      query, ascending, with int32 catalog row ids.  Each (BQ, BN) tile
+      emits its k best by iterative masked-min extraction and the wrapper
+      merges the (Q, nblocks·k) partials with one `lax.top_k`
+      (DESIGN.md §3) — HBM traffic is Q·N·k/BN floats instead of Q·N.
+    """
     interp = (not _on_tpu()) if interpret is None else interpret
     qq, n = q.shape[0], x.shape[0]
     qp = _pad_rows(q, l2_topk_kernel.BQ)
@@ -64,6 +103,50 @@ def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None
     neg, pos = jax.lax.top_k(-pd, k)
     ids = jnp.take_along_axis(pi, pos, axis=1)
     return (-neg)[:qq], ids[:qq]
+
+
+@partial(jax.jit, static_argnames=("k", "chunk"))
+def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int):
+    """Chunked fused distance + top-k in pure XLA: the memory-roofline
+    oracle of the Pallas `topk_l2` kernel for non-TPU backends.
+
+    Args:
+      q: (Q, D) query embeddings.
+      x: (N, D) catalog embeddings (N need not divide `chunk`; the tail
+        chunk is padded and masked to +inf).
+      k: neighbours per query (static).
+      chunk: catalog rows per scan step (static) — peak extra memory is
+        O(Q · (chunk + k)) instead of O(Q · N).
+
+    Returns:
+      (dists (Q, k), ids (Q, k)) exactly as `topk_l2`: ascending squared
+      distances, int32 row ids.  Used by the distributed retrieval step
+      (`repro.core.distributed`) so a catalog shard is scanned without ever
+      materialising the (B, N_shard) distance matrix.
+    """
+    n = x.shape[0]
+    b = q.shape[0]
+    xp = _pad_rows(x, chunk)
+    nchunks = xp.shape[0] // chunk
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+
+    def body(carry, j):
+        best_d, best_i = carry
+        blk = jax.lax.dynamic_slice_in_dim(xp, j * chunk, chunk, 0)
+        cn = jnp.sum(blk * blk, axis=1)[None, :]
+        d2 = jnp.maximum(qn - 2.0 * q @ blk.T + cn, 0.0)
+        ids = j * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        d2 = jnp.where(ids < n, d2, jnp.inf)                 # padded tail
+        cat_d = jnp.concatenate([best_d, d2], axis=1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids, (b, chunk))], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    init = (jnp.full((b, k), jnp.inf, jnp.float32),
+            jnp.zeros((b, k), jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    return best_d, best_i
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
@@ -120,11 +203,37 @@ def ivf_scan_auto(q: jax.Array, x: jax.Array, cand: jax.Array, k: int):
     return ivf_scan_xla(q, x, cand, k)
 
 
+def topk_l2_fused(q: jax.Array, x: jax.Array, k: int, *, chunk: int):
+    """Memory-roofline dispatch: fused Pallas `topk_l2` on TPU, the chunked
+    XLA oracle elsewhere — on either backend the (Q, N) distance matrix is
+    never materialised.  This is the scan the distributed retrieval step
+    runs per catalog shard when `scan_chunk > 0`."""
+    if _on_tpu():
+        return topk_l2(q, x, k)
+    return topk_l2_chunked(q, x, k, chunk)
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "q_offset",
                                    "written_upto", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                     written_upto=None, interpret: bool | None = None):
-    """Pallas flash attention: q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,Dv)."""
+    """Pallas flash attention.
+
+    Args:
+      q: (B, S, H, D) queries.
+      k, v: (B, T, KV, D) keys/values (KV heads broadcast over H for GQA).
+      causal: apply the causal mask (decode/prefill).
+      window: sliding-window size; 0 = full attention.
+      q_offset: absolute position of q[0] (static) for causal masking of
+        decode steps against a longer cache.
+      written_upto: ring-buffer watermark — keys at positions >= this are
+        masked out (static-shape decode, DESIGN.md §5).
+      interpret: see `pairwise_l2`.
+
+    Returns:
+      (B, S, H, Dv) attention output; S is internally padded to the BQ
+      tile and sliced back.
+    """
     from repro.kernels import flash_attention as fa
 
     interp = (not _on_tpu()) if interpret is None else interpret

@@ -243,6 +243,7 @@ def run_acai_cell(mesh_kind: str, *, n_catalog: int = 2 ** 27, d: int = 128,
                   h: int = 2 ** 20, variant: str = "baseline") -> dict:
     """The paper-representative cell: one distributed AÇAI retrieval +
     OMA-update step over a 134M-object catalog sharded on the mesh."""
+    from repro.compat import SHARD_MAP_IMPL
     from repro.core.distributed import make_retrieval_step
 
     multi_pod = mesh_kind == "multi"
@@ -253,7 +254,11 @@ def run_acai_cell(mesh_kind: str, *, n_catalog: int = 2 ** 27, d: int = 128,
     record = {"arch": "acai-retrieval", "shape": f"retrieval_b{batch}",
               "mesh": mesh_kind, "kind": "serve", "variant": variant,
               "seq_len": n_catalog, "global_batch": batch,
-              "params_total": n_catalog * d, "params_active": n_catalog * d}
+              "params_total": n_catalog * d, "params_active": n_catalog * d,
+              # which shard_map the compat shim resolved (provenance: the
+              # cell lowers on both the jax.shard_map and the experimental
+              # API — see repro/compat.py)
+              "shard_map_impl": SHARD_MAP_IMPL}
     t0 = time.time()
     try:
         # NOTE: the chunked-scan variant was measured and refuted (§Perf

@@ -3,16 +3,51 @@ in front (the paper's edge-inference deployment).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --requests 40
+
+`--mesh-shards P` serves the semantic-cache tier through the sharded
+multi-device path (catalog + cache state sharded over a (1, P) mesh,
+repro.core.distributed) — on hosts without accelerators it forces P
+host-platform placeholder devices, so the XLA flag must be set before any
+jax import (same discipline as launch/dryrun.py).
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+def _sniff_mesh_shards(argv):
+    """Pre-argparse peek at --mesh-shards (both `--mesh-shards P` and
+    `--mesh-shards=P` forms); malformed values are left for argparse to
+    report properly."""
+    for i, tok in enumerate(argv):
+        val = None
+        if tok == "--mesh-shards" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif tok.startswith("--mesh-shards="):
+            val = tok.split("=", 1)[1]
+        if val is not None:
+            try:
+                return int(val)
+            except ValueError:
+                return 0
+    return 0
+
+
+if __name__ == "__main__":  # before ANY jax import; no import side effects
+    _p = _sniff_mesh_shards(sys.argv)
+    if _p > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_p} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+import argparse  # noqa: E402
+import time      # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
 
 from repro.configs import ARCHS, SMOKE_ARCHS
 from repro.models import init_params
@@ -29,7 +64,20 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--catalog", type=int, default=512)
     ap.add_argument("--cache-size", type=int, default=64)
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard the semantic-cache tier over a (1, P) mesh "
+                         "(0 = single-device batched pipeline)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh_shards > 1:
+        if jax.device_count() < args.mesh_shards:
+            raise SystemExit(
+                f"--mesh-shards {args.mesh_shards} needs that many devices "
+                f"(have {jax.device_count()})")
+        if args.catalog % args.mesh_shards:
+            raise SystemExit("--catalog must divide by --mesh-shards")
+        mesh = jax.make_mesh((1, args.mesh_shards), ("data", "model"))
 
     cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
     if not cfg.has_decode:
@@ -65,13 +113,15 @@ def main():
         return generate(params, cfg, prompt_tokens[None], steps=4)
 
     lm = SemanticCachedLM(params, cfg, catalog, payloads, gen_fn,
-                          h=args.cache_size, k=4)
+                          h=args.cache_size, k=4, mesh=mesh)
     for i in range(args.requests):
         toks = jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
                            jnp.int32)
         lm.query(toks)
     s = lm.stats
-    print(f"semantic cache: {s.requests} requests, "
+    tier = (f"sharded x{args.mesh_shards}" if mesh is not None
+            else "single-device")
+    print(f"semantic cache ({tier}): {s.requests} requests, "
           f"{s.served_local}/{s.requests * lm.cache.cfg.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")
 

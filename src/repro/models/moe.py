@@ -194,8 +194,10 @@ def _moe_shard_map(p, xf, cfg: ModelConfig):
         aux = jax.lax.pmean(aux, batch_ax)
         return out_l, aux
 
+    from repro.compat import shard_map
+
     fs = "data" if fsdp else None
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(batch_ax, None), P(fs, None),
                   P("model", fs, None), P("model", fs, None),

@@ -45,7 +45,7 @@ class SemanticCachedLM:
     def __init__(self, params, cfg: ModelConfig, catalog_embs: jax.Array,
                  catalog_payloads: list, generate_fn: Callable,
                  h: int = 64, k: int = 4, c_f: Optional[float] = None,
-                 eta: Optional[float] = None, seed: int = 0):
+                 eta: Optional[float] = None, seed: int = 0, mesh=None):
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
@@ -56,7 +56,10 @@ class SemanticCachedLM:
         acfg = acai.AcaiConfig(
             h=h, k=k, c_f=c_f, c_remote=max(4 * k, 16), c_local=max(k, 8),
             oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f))
-        self.cache = acai.AcaiCache(catalog_embs, acfg, seed=seed)
+        # mesh: shard the catalog scan + OMA over the mesh's `model` axis
+        # (repro.core.distributed.make_step_sharded) — the multi-device
+        # serving path; None = the single-device batched pipeline.
+        self.cache = acai.AcaiCache(catalog_embs, acfg, seed=seed, mesh=mesh)
         self.stats = ServeStats()
         self._embed_batch = jax.jit(jax.vmap(embed_prompt, in_axes=(None, 0)))
 
