@@ -1,0 +1,106 @@
+"""All-backends sweep through the unified index registry (DESIGN.md §8).
+
+Every registered single-device backend (flat | ivf | ivfpq | lsh | nsw) is
+built from an `IndexSpec`, wired into the batched AÇAI replay via
+`index_candidate_fn_batched`, and swept over B ∈ {8, 64}.  Per row we
+report the quality/cost trade-off the paper studies: NAG (gain), p50
+per-request latency, recall@10 vs the flat (exact) index, and resident
+index bytes.  Results land in BENCH_backends.json at the repo root so the
+backend trajectory is tracked per PR.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import oma, policy, trace
+from repro.core.costs import calibrate_fetch_cost
+from repro.index import IndexSpec, build_index, registered_backends
+from repro.index.candidates import index_candidate_fn_batched
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_backends.json"
+
+# Per-backend build kwargs at bench scale — the registry means adding a
+# backend here is the *only* edit this suite ever needs.
+SPECS = {
+    "flat": {},
+    "ivf": {"nlist": 48, "nprobe": 10},
+    "ivfpq": {"nlist": 48, "nprobe": 10, "m": 8, "refine": 4},
+    "lsh": {"tables": 12, "bits": 8},
+    "nsw": {"degree": 16, "beam": 48, "steps": 16},
+}
+
+
+def _recall_at_10(index, flat, q) -> float:
+    truth = np.asarray(flat.query(q, 10)[1])
+    ids = np.asarray(index.query(q, 10)[1])
+    return float(np.mean([len(set(ids[b]) & set(truth[b])) / 10
+                          for b in range(q.shape[0])]))
+
+
+def main(full: bool = False, kind: str = "sift") -> None:
+    missing = set(registered_backends(sharded=False)) - set(SPECS)
+    assert not missing, \
+        f"backends bench table is missing registered backends: {missing}"
+    n, t, d = (20000, 8192, 32) if full else (2000, 1024, 16)
+    gen = trace.sift_like if kind == "sift" else trace.amazon_like
+    catalog, reqs, _ = gen(n=n, d=d, t=t, seed=0)
+    cat, reqs_j = jnp.array(catalog), jnp.array(reqs)
+    c_f = float(calibrate_fetch_cost(cat, kth=min(50, n - 1), sample=256))
+    cfg = policy.AcaiConfig(h=64, k=8, c_f=c_f, c_remote=32, c_local=16,
+                            oma=oma.OMAConfig(eta=0.05 / c_f))
+    flat = build_index(IndexSpec("flat"), cat)
+
+    rows = []
+    for backend, params in SPECS.items():
+        spec = IndexSpec(backend, params)
+        index = build_index(spec, cat)
+        recall = (1.0 if backend == "flat"
+                  else _recall_at_10(index, flat, reqs_j[:64]))
+        fnb = index_candidate_fn_batched(index, cat, cfg.c_remote,
+                                         cfg.c_local, h=cfg.h)
+        for b in (8, 64):
+            step = jax.jit(policy.make_step_batched(cfg, fnb, b))
+            calls = (t // b)
+            state = policy.init_state(n, cfg)
+            state, m = step(state, reqs_j[:b])      # compile + warmup
+            m.gain_int.block_until_ready()
+            gains, times = [], []
+            state = policy.init_state(n, cfg)
+            t0 = time.time()
+            for c in range(calls):
+                tc = time.time()
+                state, m = step(state, reqs_j[c * b:(c + 1) * b])
+                m.gain_int.block_until_ready()
+                times.append(time.time() - tc)
+                gains.append(np.asarray(m.gain_int))
+            dt = time.time() - t0
+            tt = calls * b
+            nag = float(np.sum(np.concatenate(gains))) / (cfg.k * c_f * tt)
+            p50_us = float(np.percentile(times, 50)) / b * 1e6
+            rows.append({
+                "backend": backend, "spec": spec.to_dict(), "batch": b,
+                "nag": round(nag, 4), "recall_at_10": round(recall, 4),
+                "p50_us_per_request": round(p50_us, 2),
+                "requests_per_s": round(tt / dt, 1),
+                "index_mbytes": round(index.memory_bytes() / 2 ** 20, 2),
+                "requests": tt,
+            })
+            common.emit(f"backends/{kind}/{backend}/B{b}", p50_us,
+                        f"NAG={nag:.4f};recall={recall:.3f};rps={tt / dt:.0f}")
+    BENCH_JSON.write_text(json.dumps(
+        {"kind": kind, "full": full, "n": n, "d": d,
+         "backend": jax.default_backend(), "rows": rows}, indent=2) + "\n")
+    common.emit("backends/json", 0.0, str(BENCH_JSON.name))
+
+
+if __name__ == "__main__":
+    args = common.std_args(__doc__).parse_args()
+    main(args.full, args.trace)

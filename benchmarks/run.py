@@ -18,12 +18,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", "--suite", dest="only", default=None,
+                    help="run a single suite (e.g. --suite backends)")
     ap.add_argument("--trace", default=None, choices=[None, "sift", "amazon"])
     args = ap.parse_args()
 
-    from benchmarks import (distributed_bench, fig1_gain_vs_requests,
-                            fig2_gain_vs_h, fig3_gain_vs_cf, fig4_gain_vs_k,
+    from benchmarks import (backends_bench, distributed_bench,
+                            fig1_gain_vs_requests, fig2_gain_vs_h,
+                            fig3_gain_vs_cf, fig4_gain_vs_k,
                             fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
                             fig8_rounding, kernel_bench, regret, serve_bench)
 
@@ -45,6 +47,9 @@ def main() -> None:
         # sharded multi-device replay (8 placeholder devices, subprocess):
         # emits BENCH_distributed.json — shards∈{1,4,8} × B∈{8,64}
         "distributed": (distributed_bench.main, ["sift"]),
+        # unified-index-API sweep: every registered backend × B∈{8,64},
+        # NAG + p50 latency + recall vs flat — emits BENCH_backends.json
+        "backends": (backends_bench.main, ["sift"]),
     }
 
     print("name,us_per_call,derived")

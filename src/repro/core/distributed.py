@@ -389,10 +389,12 @@ def make_step_sharded(
         b = rs.shape[0]
 
         # ---- remote candidates: per-shard scan + top-C merge ------------
+        local_overflow = jnp.zeros((), jnp.int32)
         if scan_chunk == 0 and ivf is None:
             # paper-faithful / bit-consistent path: one (b, n_shard) GEMM
             # feeds both the remote top-k and the cached-row top-k, exactly
-            # as exact_candidate_fn_batched does on the full catalog.
+            # as exact_candidate_fn_batched does on the full catalog (no
+            # cached-row gather bound, so nothing can truncate).
             d_full = pairwise_dissimilarity(rs, catalog_shard)
             neg_r, loc_r = jax.lax.top_k(-d_full, cfg.c_remote)
             d_r, miss_r = -neg_r, jnp.zeros(neg_r.shape, bool)
@@ -408,6 +410,13 @@ def make_step_sharded(
             # cached rows: gather once per shard (static 2h + 64 bound,
             # same policy as index_candidate_fn_batched) + one small GEMM.
             cap = min(n_shard, 2 * cfg.h + 64)
+            if cfg.debug:
+                # same truncation-visibility contract as the single-device
+                # step (StepMetrics.local_overflow): per-shard excess over
+                # the static gather bound, summed over the model axis.
+                occ = jnp.sum((x > 0.5).astype(jnp.int32))
+                local_overflow = jax.lax.psum(
+                    jnp.maximum(occ - cap, 0), model_axis)
             cached = jnp.nonzero(x > 0.5, size=cap, fill_value=-1)[0]
             cached_embs = catalog_shard[jnp.clip(cached, 0, n_shard - 1)]
             d_loc = pairwise_dissimilarity(rs, cached_embs)
@@ -453,7 +462,8 @@ def make_step_sharded(
             oma_lib.Y_FLOOR, 1.0)
 
         served_local = jnp.sum(served.from_cache.astype(jnp.int32), axis=1)
-        return y_new, served.gain, gain_frac, served.cost, served_local
+        return (y_new, served.gain, gain_frac, served.cost, served_local,
+                local_overflow)
 
     in_specs = [P(model_axis, None), P(model_axis), P(model_axis),
                 P(batch_axes, None)]
@@ -463,17 +473,19 @@ def make_step_sharded(
         extra = (ivf.centroids, ivf.invlists)
     mapped = shard_map(
         local, mesh=mesh, in_specs=tuple(in_specs),
-        out_specs=(P(model_axis),) + (P(batch_axes),) * 4,
+        # local_overflow is a model-axis psum (or a constant 0): identical
+        # on every shard, hence replicated
+        out_specs=(P(model_axis),) + (P(batch_axes),) * 4 + (P(),),
         check_vma=False,
     )
 
     def step(state: policy_lib.CacheState, rs: jax.Array):
         key, k_round = jax.random.split(state.key)
-        y_new, gain_int, gain_frac, cost, served_local = mapped(
+        y_new, gain_int, gain_frac, cost, served_local, overflow = mapped(
             catalog, state.y, state.x, rs, *extra)
         return policy_lib.finish_step_batched(
             cfg_up, state, key, k_round, batch, y_new, gain_int, gain_frac,
-            cost, served_local)
+            cost, served_local, local_overflow=overflow)
 
     return step
 

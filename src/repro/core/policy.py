@@ -36,6 +36,7 @@ from repro.core import gain as gain_lib
 from repro.core import oma as oma_lib
 from repro.core import rounding as rounding_lib
 from repro.core.costs import BIG_COST, pairwise_dissimilarity
+from repro.index.base import IndexSpec, build_index
 
 
 class StepMetrics(NamedTuple):
@@ -45,6 +46,11 @@ class StepMetrics(NamedTuple):
     served_local: jax.Array  # how many of the k answers came from the cache
     fetched: jax.Array     # cache-update traffic (# objects fetched)
     occupancy: jax.Array   # sum x_t
+    # debug-mode counter (AcaiConfig.debug): cached rows the candidate
+    # generator's static `local_cap` gather silently truncated this step —
+    # max(0, |x_t| - cap), 0 when debug is off or the generator is uncapped
+    # (see repro.index.candidates._local_cap).
+    local_overflow: jax.Array | int = 0
 
 
 class CacheState(NamedTuple):
@@ -113,6 +119,8 @@ def per_request_view(candidate_fn_batched: Callable) -> Callable:
         ids, d, valid = candidate_fn_batched(r[None, :], x)
         return ids[0], d[0], valid[0]
 
+    if hasattr(candidate_fn_batched, "local_cap"):
+        fn.local_cap = candidate_fn_batched.local_cap
     return fn
 
 
@@ -133,6 +141,15 @@ class AcaiConfig:
     c_remote: int = 64          # remote-index candidates (>= k!)
     c_local: int = 16           # local-index candidates
     oma: oma_lib.OMAConfig = dataclasses.field(default_factory=oma_lib.OMAConfig)
+    # remote-catalog index selection (DESIGN.md §8): an IndexSpec such as
+    # IndexSpec("ivf", {"nlist": 256}) makes AcaiCache build its candidate
+    # generator through repro.index.base.build_index; None = exact
+    # (perfect-recall) candidates.  On a mesh, "ivf_sharded" selects the
+    # per-shard IVF probe; None = the exact sharded scan.
+    index: "IndexSpec | None" = None
+    # debug instrumentation: books StepMetrics.local_overflow (cached rows
+    # truncated by the candidate generator's static local_cap gather).
+    debug: bool = False
 
 
 def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t, width=1):
@@ -153,6 +170,18 @@ def _round_state(cfg: AcaiConfig, key, y_new, y_old, x_old, t, width=1):
             None,
         )
     raise ValueError(mode)
+
+
+def _overflow_counter(cfg: AcaiConfig, candidate_fn: Callable,
+                      x: jax.Array) -> jax.Array:
+    """Debug-mode truncation counter: how many cached rows exceed the
+    candidate generator's static `local_cap` gather bound (those rows are
+    silently hidden from local serving — quality loss, not an error)."""
+    cap = getattr(candidate_fn, "local_cap", None)
+    if not cfg.debug or cap is None:
+        return jnp.zeros((), jnp.int32)
+    occ = jnp.sum((x > 0.5).astype(jnp.int32))
+    return jnp.maximum(occ - cap, 0)
 
 
 def make_step(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
@@ -182,6 +211,7 @@ def make_step(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
             served_local=jnp.sum(served.from_cache.astype(jnp.int32)),
             fetched=rounding_lib.movement(x_new, state.x),
             occupancy=jnp.sum(x_new),
+            local_overflow=_overflow_counter(cfg, candidate_fn, state.x),
         )
         return CacheState(y_new, x_new, state.t + 1, key), metrics
 
@@ -213,22 +243,26 @@ def make_replay(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
 
 def finish_step_batched(cfg_up: AcaiConfig, state: CacheState, key, k_round,
                         batch: int, y_new, gain_int, gain_frac, cost,
-                        served_local):
+                        served_local, local_overflow=None):
     """Shared tail of every mini-batch step: rounding + metric assembly +
     state advance.  Used by both `make_step_batched` and
     `repro.core.distributed.make_step_sharded` so the two stay
     bit-consistent by construction (§6 metric reduction: `fetched` books
     the batch's cache-update traffic on its last request, `occupancy`
-    repeats the post-update value)."""
+    repeats the post-update value, `local_overflow` — a per-batch scalar
+    like occupancy — repeats the pre-update debug counter)."""
     x_new = _round_state(cfg_up, k_round, y_new, state.y, state.x, state.t,
                          width=batch)
     moved = rounding_lib.movement(x_new, state.x)
+    if local_overflow is None:
+        local_overflow = jnp.zeros((), jnp.int32)
     metrics = StepMetrics(
         gain_int=gain_int, gain_frac=gain_frac, cost=cost,
         served_local=served_local,
         fetched=jnp.concatenate(
             [jnp.zeros((batch - 1,), moved.dtype), moved[None]]),
         occupancy=jnp.full((batch,), jnp.sum(x_new)),
+        local_overflow=jnp.full((batch,), local_overflow),
     )
     return CacheState(y_new, x_new, state.t + batch, key), metrics
 
@@ -281,7 +315,9 @@ def make_step_batched(
         return finish_step_batched(
             cfg_up, state, key, k_round, batch, y_new, served.gain,
             gain_frac, served.cost,
-            jnp.sum(served.from_cache.astype(jnp.int32), axis=1))
+            jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
+            local_overflow=_overflow_counter(cfg, candidate_fn_batched,
+                                             state.x))
 
     return step
 
@@ -328,28 +364,79 @@ def make_replay_batched(
 class AcaiCache:
     """Object API over the jitted step, for the online serving tier.
 
-    Accepts either a per-request `candidate_fn` or a batched
-    `candidate_fn_batched` (preferred — the per-request path is derived
-    from it, and `serve_update_batch` amortises one OMA update over a whole
-    request mini-batch).
+    Backend selection is config-driven (DESIGN.md §8): when
+    `cfg.index` holds an `IndexSpec`, the remote-catalog index is built
+    through `repro.index.base.build_index` and wired into the candidate
+    slabs via `repro.index.candidates.index_candidate_fn_batched`; with
+    `cfg.index = None` candidates are exact (perfect recall).
+
+    Escape hatch (the pre-IndexSpec wiring, kept for custom generators): a
+    per-request `candidate_fn` or batched `candidate_fn_batched` overrides
+    the spec-built generator.  Passing one *alongside* `cfg.index` is
+    deprecated — the explicit fn silently wins, which defeats the config
+    knob — and warns.
 
     `mesh` switches both entry points to the sharded multi-device step
     (`repro.core.distributed.make_step_sharded`): catalog and cache state
     shard over the mesh's `model` axis, the candidate scan + OMA +
     projection run under shard_map, and the single-request path becomes the
     B = 1 view of the sharded batch step.  `candidate_fn*` are ignored in
-    that case (the sharded step owns candidate generation); pass
-    `sharded_kwargs` (e.g. `scan_chunk`, `ivf`) to configure it."""
+    that case (the sharded step owns candidate generation); `cfg.index`
+    may name the sharded backend ("ivf_sharded", built through the same
+    registry) or be None for the exact sharded scan; `sharded_kwargs`
+    (e.g. `scan_chunk`) further configure the step."""
 
     def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
                  sharded_kwargs: dict | None = None):
+        from repro.index.base import resolve_spec
+
+        # normalize every serialized spec form, incl. the reserved "exact"
+        # (-> None), so provenance records round-trip into configs
+        resolved = resolve_spec(cfg.index)
+        if resolved is not cfg.index:
+            cfg = dataclasses.replace(cfg, index=resolved)
         self.cfg = cfg
         self.catalog = catalog
         self.mesh = mesh
+        self.index = None  # the spec-built index (None = exact/escape hatch)
         self._sharded_kwargs = dict(sharded_kwargs or {})
         self._bsteps: dict[int, Callable] = {}
+        explicit_fn = (candidate_fn is not None
+                       or candidate_fn_batched is not None)
+        if explicit_fn and cfg.index is not None:
+            import warnings
+
+            warnings.warn(
+                "AcaiCache: cfg.index is set but "
+                + ("a mesh was given — the sharded step ignores explicit "
+                   "candidate fns and serves from the spec-built index"
+                   if mesh is not None else
+                   "explicit candidate_fn/candidate_fn_batched overrides "
+                   "it — drop the kwargs or the spec"),
+                DeprecationWarning, stacklevel=2)
         if mesh is not None:
+            if cfg.index is not None:
+                from repro.index.base import registered_backends
+
+                if cfg.index.backend not in registered_backends(sharded=True):
+                    # reject before paying the (possibly minutes-long) build
+                    raise ValueError(
+                        f"cfg.index backend {cfg.index.backend!r} is not a "
+                        f"sharded layout; with mesh= use one of "
+                        f"{registered_backends(sharded=True)} (or "
+                        f"index=None for the exact sharded scan)")
+                if "ivf" in self._sharded_kwargs:
+                    import warnings
+
+                    warnings.warn(
+                        "AcaiCache: sharded_kwargs['ivf'] overrides "
+                        "cfg.index — drop one of them",
+                        DeprecationWarning, stacklevel=2)
+                else:
+                    built = build_index(cfg.index, catalog, mesh=mesh)
+                    self.index = built
+                    self._sharded_kwargs["ivf"] = built
             # built lazily on first serve_update: a B = 1 step only exists
             # on meshes whose batch axes have size 1 (serving meshes are
             # (1, P)); batched-only use of a (dp, P) mesh must not crash
@@ -358,9 +445,18 @@ class AcaiCache:
         else:
             if candidate_fn_batched is None:
                 if candidate_fn is None:
-                    candidate_fn_batched = exact_candidate_fn_batched(
-                        catalog, cfg.c_remote, cfg.c_local
-                    )
+                    if cfg.index is not None:
+                        from repro.index.candidates import \
+                            index_candidate_fn_batched
+
+                        self.index = build_index(cfg.index, catalog)
+                        candidate_fn_batched = index_candidate_fn_batched(
+                            self.index, catalog, cfg.c_remote, cfg.c_local,
+                            h=cfg.h)
+                    else:
+                        candidate_fn_batched = exact_candidate_fn_batched(
+                            catalog, cfg.c_remote, cfg.c_local
+                        )
                 else:
                     candidate_fn_batched = jax.vmap(candidate_fn,
                                                     in_axes=(0, None))

@@ -9,8 +9,17 @@ AÇAI keeps two indexes at the edge server:
 All indexes are JAX-native with static shapes (dense padded bucket tables,
 fixed-width beams) so queries jit and shard; the TPU adaptations are
 documented in DESIGN.md §3.  Builds run once in numpy/JAX at setup time.
+
+Backend choice is one config knob (DESIGN.md §8): every class implements
+the batched `Index` protocol and is registered in `repro.index.base`, so
+`build_index(IndexSpec("ivf", {"nlist": 256}), catalog)` constructs any of
+them uniformly — including the sharded `ivf_sharded` layout for the
+multi-device serving path.
 """
 
+from repro.index.base import (Index, IndexSpec, build_index,
+                              parse_index_opts, register_backend,
+                              registered_backends)
 from repro.index.exact import FlatIndex
 from repro.index.ivf import IVFFlatIndex
 from repro.index.kmeans import kmeans
@@ -22,8 +31,14 @@ __all__ = [
     "FlatIndex",
     "IVFFlatIndex",
     "IVFPQIndex",
+    "Index",
+    "IndexSpec",
     "LSHIndex",
     "NSWIndex",
     "PQCodec",
+    "build_index",
     "kmeans",
+    "parse_index_opts",
+    "register_backend",
+    "registered_backends",
 ]

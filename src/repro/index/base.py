@@ -1,0 +1,316 @@
+"""Unified index API: protocol, spec, and config-driven backend registry.
+
+AÇAI's central design choice (paper Sec. III) is that the *same* policy
+machinery works over any approximate index for the catalog — the index
+only shapes the candidate-set quality/cost trade-off.  This module makes
+that pluggability first-class:
+
+* `Index` — the batched query protocol every backend implements.  A whole
+  request mini-batch goes down in one call, so the policy's batched
+  pipeline (DESIGN.md §6) never loops over requests.
+* `IndexSpec` — a serializable (backend name + kwargs) description of an
+  index, the one config knob that selects a backend end-to-end: in
+  `AcaiConfig.index`, `SemanticCachedLM(index_spec=...)`,
+  `launch/serve.py --remote-index/--index-opt`, the `backends` benchmark
+  suite, and dry-run provenance records.
+* `build_index(spec, catalog, mesh=None)` — the registry constructor.
+  Single-device backends (`flat | ivf | ivfpq | lsh | nsw`) build from
+  the catalog alone; sharded backends (`ivf_sharded`) additionally take
+  the device mesh and return the structure the sharded step consumes
+  (`repro.core.distributed.ShardedIVF`).
+
+Backends register themselves via `register_backend`, so adding a new one
+is a single registration — no cross-cutting edits in core/serve/launch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Protocol, Tuple, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class Index(Protocol):
+    """Batched ANN index over a fixed catalog of `n` embeddings.
+
+    Required surface (the conformance contract pinned by
+    tests/test_index_api.py):
+
+    * `query(rs (B, d), k) -> (dists (B, k), ids (B, k))` — per-query k
+      best candidates, ascending float32 squared distances, int32 catalog
+      row ids; **-1 marks underflow** (fewer than k real candidates, dist
+      = +inf on those slots).  Must accept a whole request mini-batch —
+      a (d,) vector is promoted to B = 1.
+    * `exact_distances: bool` — True when returned distances are exact on
+      the shared catalog embeddings, letting
+      `repro.index.candidates.index_candidate_fn_batched` skip its exact
+      re-rank.
+    * `n: int` — catalog size (number of indexed objects).
+    * `memory_bytes() -> int` — resident bytes of the index structures
+      (embedding slab + tables/codes), the cost side of the paper's
+      quality/cost trade-off.
+
+    Optional: `shard(mesh)` — return a mesh-sharded equivalent consumed by
+    `repro.core.distributed.make_step_sharded` (today only the IVF family
+    implements the sharded layout, via the `ivf_sharded` backend).
+    """
+
+    exact_distances: bool
+
+    def query(self, rs: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+        ...
+
+    @property
+    def n(self) -> int:
+        ...
+
+    def memory_bytes(self) -> int:
+        ...
+
+
+def arrays_bytes(*arrays) -> int:
+    """Sum of .nbytes over the given arrays (None entries skipped)."""
+    return int(sum(a.size * a.dtype.itemsize for a in arrays if a is not None))
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Serializable index selection: backend name + build kwargs.
+
+    `params` are passed verbatim to the registered builder (after the
+    catalog / mesh), so valid keys are exactly the builder's keyword
+    arguments — e.g. ``IndexSpec("ivf", {"nlist": 256, "nprobe": 16})``.
+
+    Round-trips through a flat dict (`to_dict` / `from_dict`) so a spec
+    can live in CLI flags, benchmark rows and dry-run records:
+    ``{"backend": "ivf", "nlist": 256, "nprobe": 16}``.
+    """
+
+    backend: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", dict(self.params))
+        if "backend" in self.params:
+            raise ValueError("'backend' is the spec field, not a param")
+
+    def __hash__(self):  # params is a dict; hash the canonical item tuple
+        return hash((self.backend, tuple(sorted(self.params.items()))))
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Flat dict form: {'backend': name, **params}."""
+        return {"backend": self.backend, **self.params}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "IndexSpec":
+        d = dict(d)
+        try:
+            backend = d.pop("backend")
+        except KeyError:
+            raise ValueError(f"index spec dict needs a 'backend' key: {d}")
+        spec = cls(backend, d)
+        if backend not in _REGISTRY:
+            raise ValueError(_unknown_backend_msg(backend))
+        return spec
+
+    def with_params(self, **updates) -> "IndexSpec":
+        return IndexSpec(self.backend, {**self.params, **updates})
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    build: Callable
+    sharded: bool  # builder signature is (catalog, mesh, **params)
+
+
+_REGISTRY: Dict[str, _Backend] = {}
+
+
+def register_backend(name: str, *, sharded: bool = False):
+    """Decorator registering `fn(catalog, **params)` (or
+    `fn(catalog, mesh, **params)` when sharded=True) under `name`."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"index backend {name!r} already registered")
+        _REGISTRY[name] = _Backend(fn, sharded)
+        return fn
+
+    return deco
+
+
+def registered_backends(*, sharded: bool | None = None) -> Tuple[str, ...]:
+    """Sorted backend names; filter by shardedness when given."""
+    return tuple(sorted(
+        name for name, b in _REGISTRY.items()
+        if sharded is None or b.sharded == sharded
+    ))
+
+
+def _unknown_backend_msg(name: str) -> str:
+    return (f"unknown index backend {name!r}; registered: "
+            f"{', '.join(registered_backends())}")
+
+
+def build_index(spec: IndexSpec, catalog: jax.Array, mesh=None):
+    """Construct the index a spec describes over `catalog`.
+
+    Single-device backends ignore `mesh`; sharded backends require it
+    (their layout depends on the mesh's `model` axis size).  Unknown
+    backends and bad params raise ValueError/TypeError at build time —
+    before any jit tracing.
+    """
+    if isinstance(spec, Mapping):  # accept the flat-dict form directly
+        spec = IndexSpec.from_dict(spec)
+    try:
+        backend = _REGISTRY[spec.backend]
+    except KeyError:
+        raise ValueError(_unknown_backend_msg(spec.backend))
+    if backend.sharded:
+        if mesh is None:
+            raise ValueError(
+                f"index backend {spec.backend!r} is sharded: build_index "
+                f"needs the device mesh (mesh=...)")
+        return backend.build(catalog, mesh, **spec.params)
+    return backend.build(catalog, **spec.params)
+
+
+# Reserved spec-less backend name: "exact" means *no* index — the policy's
+# perfect-recall exact candidate generator (one GEMM feeding both slabs).
+# It is deliberately not in the registry (there is nothing to build);
+# surfaces that accept serialized specs resolve it through `resolve_spec`.
+EXACT = "exact"
+
+
+def resolve_spec(value) -> "IndexSpec | None":
+    """Normalize any user-facing spec form to IndexSpec-or-None.
+
+    Accepts None, an IndexSpec, a backend-name string, or the flat dict
+    form — with the reserved name "exact" (however spelled) mapping to
+    None, so provenance records like ``{"backend": "exact"}`` round-trip
+    through every surface (SemanticCachedLM, CLI, dryrun records).
+    """
+    if isinstance(value, IndexSpec):
+        if value.backend != EXACT:
+            if value.backend not in _REGISTRY:
+                raise ValueError(_unknown_backend_msg(value.backend))
+            return value
+        if value.params:
+            raise ValueError(
+                f"'exact' takes no params (it is the spec-less exact "
+                f"candidate generator): {value.params}")
+        return None
+    if value is None:
+        return None
+    if isinstance(value, str):
+        if value == EXACT:
+            return None
+        if value not in _REGISTRY:
+            raise ValueError(_unknown_backend_msg(value))
+        return IndexSpec(value)
+    if isinstance(value, Mapping):
+        if value.get("backend") == EXACT:
+            if len(value) > 1:
+                raise ValueError(
+                    f"'exact' takes no params (it is the spec-less exact "
+                    f"candidate generator): {dict(value)}")
+            return None
+        return IndexSpec.from_dict(value)
+    raise TypeError(f"cannot resolve an index spec from {value!r}")
+
+
+def parse_index_opts(opts) -> Dict[str, Any]:
+    """Parse CLI `--index-opt key=value` pairs into builder kwargs.
+
+    Values are coerced int -> float -> str in that order, so
+    `nlist=256 refine=0 kernel=xla` all land with their natural types.
+    """
+    out: Dict[str, Any] = {}
+    for opt in opts or ():
+        key, sep, val = opt.partition("=")
+        if not sep or not key:
+            raise ValueError(
+                f"--index-opt expects key=value, got {opt!r}")
+        for cast in (int, float):
+            try:
+                out[key] = cast(val)
+                break
+            except ValueError:
+                continue
+        else:
+            out[key] = val
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Backend registrations.  Builders are thin closures over the class
+# constructors so the registry maps spec params 1:1 onto constructor
+# kwargs; `ivf_sharded` imports lazily (repro.core.distributed imports the
+# policy layer, which imports this module).
+# ---------------------------------------------------------------------------
+
+@register_backend("flat")
+def _build_flat(catalog, **kw):
+    from repro.index.exact import FlatIndex
+
+    return FlatIndex(catalog, **kw)
+
+
+@register_backend("ivf")
+def _build_ivf(catalog, **kw):
+    from repro.index.ivf import IVFFlatIndex
+
+    return IVFFlatIndex(catalog, **kw)
+
+
+@register_backend("ivfpq")
+def _build_ivfpq(catalog, **kw):
+    from repro.index.pq import IVFPQIndex
+
+    return IVFPQIndex(catalog, **kw)
+
+
+@register_backend("lsh")
+def _build_lsh(catalog, **kw):
+    from repro.index.lsh import LSHIndex
+
+    return LSHIndex(catalog, **kw)
+
+
+@register_backend("nsw")
+def _build_nsw(catalog, **kw):
+    from repro.index.nsw import NSWIndex
+
+    return NSWIndex(catalog, **kw)
+
+
+@register_backend("ivf_sharded", sharded=True)
+def _build_ivf_sharded(catalog, mesh, *, model_axis: str = "model", **kw):
+    """Per-shard IVF for the sharded serving path: one coarse quantizer +
+    inverted-list table per catalog shard on the mesh's `model` axis.
+    Returns `repro.core.distributed.ShardedIVF` (consumed via
+    `make_step_sharded(ivf=...)` / `AcaiCache(mesh=..., cfg.index=...)`)."""
+    from repro.core.distributed import build_sharded_ivf
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if model_axis not in sizes:
+        raise ValueError(
+            f"ivf_sharded shards over mesh axis {model_axis!r}, but the "
+            f"mesh has axes {tuple(sizes)} — pass model_axis=<axis name> "
+            f"in the spec params or rename the mesh axis")
+    return build_sharded_ivf(catalog, sizes[model_axis], **kw)
+
+
+# Smallest sensible build kwargs per single-device backend (seconds to
+# build on a few-hundred-row catalog).  The single source of truth for
+# the conformance test (tests/test_index_api.py) and the scripts/smoke.sh
+# sweep — a new backend registers here once and both pick it up.
+TINY_BUILD_KWARGS = {
+    "flat": {},
+    "ivf": {"nlist": 8, "nprobe": 4},
+    "ivfpq": {"nlist": 8, "nprobe": 4, "m": 4, "refine": 4},
+    "lsh": {"tables": 4, "bits": 5},
+    "nsw": {"degree": 8, "beam": 16, "steps": 8},
+}

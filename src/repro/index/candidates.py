@@ -35,7 +35,10 @@ def _local_cap(n: int, c_local: int, h: int | None, local_cap: int | None) -> in
     rounding mode.  Without h we fall back to a generous multiple of
     c_local — but callers should pass h (or local_cap): if occupancy ever
     exceeds the cap, `nonzero` silently keeps the lowest-id cached rows,
-    hiding the rest from local serving (quality loss, not an error)."""
+    hiding the rest from local serving (quality loss, not an error).  The
+    truncation is observable: the candidate fns built here carry the cap
+    as `fn.local_cap`, and the policy step books max(0, occupancy - cap)
+    into `StepMetrics.local_overflow` when `AcaiConfig.debug` is on."""
     if local_cap is not None:
         return min(n, local_cap)
     if h is not None:
@@ -111,6 +114,7 @@ def index_candidate_fn_batched(
         d = jnp.where(valid, d, BIG_COST)
         return ids, d, valid
 
+    fn.local_cap = cap  # static cached-row bound, read by the policy step
     return fn
 
 

@@ -9,6 +9,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.index.base import arrays_bytes
 from repro.kernels import ops
 
 
@@ -22,6 +23,13 @@ class FlatIndex:
     def __init__(self, embeddings: jax.Array, kernel: str = "auto"):
         self.embeddings = jnp.asarray(embeddings, jnp.float32)
         self.kernel = kernel
+
+    @property
+    def n(self) -> int:
+        return self.embeddings.shape[0]
+
+    def memory_bytes(self) -> int:
+        return arrays_bytes(self.embeddings)
 
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):

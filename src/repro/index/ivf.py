@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.index.base import arrays_bytes
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
 
@@ -50,6 +51,13 @@ class IVFFlatIndex:
         self.invlists = jnp.asarray(
             build_invlists(np.asarray(assign), nlist), jnp.int32
         )
+
+    @property
+    def n(self) -> int:
+        return self.embeddings.shape[0]
+
+    def memory_bytes(self) -> int:
+        return arrays_bytes(self.embeddings, self.centroids, self.invlists)
 
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):

@@ -1,4 +1,12 @@
-"""Random-hyperplane LSH index (multi-table, dense padded buckets)."""
+"""Random-hyperplane LSH index (multi-table, dense padded buckets).
+
+Batched-first (DESIGN.md §6): `query` takes the whole request mini-batch,
+computes every table signature with one einsum, gathers the (B, tables*cap)
+candidate slab in one pass, masks cross-table duplicates to the -1 invalid
+sentinel, and hands the slab to the fused gather+L2+top-k scan
+(`ops.ivf_scan_auto` — the same kernel the IVF probe uses), so the
+(B, P, d) gathered embeddings never materialise in HBM on TPU.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +15,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.index.base import arrays_bytes
+from repro.kernels import ops
 
 
 class LSHIndex:
@@ -37,33 +48,35 @@ class LSHIndex:
         self.planes_j = jnp.asarray(self.planes)
         self.embeddings = jnp.asarray(emb)
 
+    @property
+    def n(self) -> int:
+        return self.embeddings.shape[0]
+
+    def memory_bytes(self) -> int:
+        return arrays_bytes(self.embeddings, self.buckets, self.planes_j)
+
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
+        """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow."""
         q = jnp.atleast_2d(q)
         b = q.shape[0]
         sig = jnp.einsum("tbd,nd->ntb", self.planes_j, q) > 0  # (B, t, bits)
         weights = (1 << jnp.arange(self.bits, dtype=jnp.int32))
         codes = jnp.sum(sig.astype(jnp.int32) * weights[None, None, :], -1)
-        cand = jax.vmap(
-            lambda c: self.buckets[jnp.arange(self.tables), c].reshape(-1)
-        )(codes)                                                # (B, t*cap)
-        valid = cand >= 0
-        embs = self.embeddings[jnp.clip(cand, 0, None)]
-        diff = embs - q[:, None, :]
-        d = jnp.sum(diff * diff, axis=-1)
-        d = jnp.where(valid, d, jnp.inf)
-        # the same object sits in multiple tables' buckets: dedup per query
+        cand = self.buckets[
+            jnp.arange(self.tables)[None, :], codes
+        ].reshape(b, -1)                                        # (B, t*cap)
+        # the same object sits in multiple tables' buckets: mask repeats to
+        # the fused scan's -1 invalid sentinel (first occurrence kept)
         order = jnp.argsort(cand, axis=1)
         sid = jnp.take_along_axis(cand, order, axis=1)
         dup_sorted = jnp.concatenate(
             [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1
         )
         dup = jnp.zeros_like(dup_sorted)
-        dup = jax.vmap(lambda dd, oo, ds: dd.at[oo].set(ds))(dup, order, dup_sorted)
-        d = jnp.where(dup, jnp.inf, d)
-        neg, pos = jax.lax.top_k(-d, k)
-        ids = jnp.take_along_axis(cand, pos, axis=1)
-        return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+        dup = dup.at[jnp.arange(b)[:, None], order].set(dup_sorted)
+        cand = jnp.where(dup, -1, cand)
+        return ops.ivf_scan_auto(q, self.embeddings, cand, k)
 
     def __hash__(self):
         return id(self)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.index.base import arrays_bytes
 from repro.index.ivf import build_invlists
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
@@ -86,6 +87,26 @@ class IVFPQIndex:
         )
         self.codec = PQCodec(self.embeddings, m=m, seed=seed + 1)
         self.codes = self.codec.encode(self.embeddings)  # (N, m)
+
+    @property
+    def n(self) -> int:
+        return self.embeddings.shape[0]
+
+    def memory_bytes(self) -> int:
+        """Everything resident at query time, like every other backend:
+        the float32 slab (the refine re-rank gathers from it) plus the PQ
+        structures.  The paper's ~30 B/object compressed accounting is
+        `compressed_bytes()`."""
+        return arrays_bytes(self.embeddings, self.codes,
+                            self.codec.codebooks, self.centroids,
+                            self.invlists)
+
+    def compressed_bytes(self) -> int:
+        """PQ-only footprint (codes + codebooks + coarse layer): what a
+        deployment that drops the float32 slab (refine=0, re-rank
+        downstream) would hold — the paper's ~30 B/object figure."""
+        return arrays_bytes(self.codes, self.codec.codebooks,
+                            self.centroids, self.invlists)
 
     @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):

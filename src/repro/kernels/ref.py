@@ -41,7 +41,9 @@ def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int):
 
     q (B, d), x (N, d), cand (B, P) int32 with -1 marking invalid slots.
     Returns (dists (B, k), ids (B, k)); ids = -1 (dist = +inf) when a query
-    has fewer than k valid candidates.
+    has fewer than k valid candidates — including the structural case
+    k > P (a narrower slab than requested underflows rather than crashing,
+    matching the Pallas path, whose slab is tile-padded).
     """
     import jax
 
@@ -51,7 +53,12 @@ def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int):
     diff = embs - q[:, None, :]
     d = jnp.sum(diff * diff, axis=-1)
     d = jnp.where(cand >= 0, d, jnp.inf)
-    neg, pos = jax.lax.top_k(-d, k)
+    kk = min(k, cand.shape[1])
+    neg, pos = jax.lax.top_k(-d, kk)
     ids = jnp.take_along_axis(cand, pos, axis=1)
     ids = jnp.where(jnp.isfinite(neg), ids, -1)
+    if kk < k:
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+        neg = jnp.pad(neg, ((0, 0), (0, k - kk)),
+                      constant_values=-jnp.inf)
     return -neg, ids

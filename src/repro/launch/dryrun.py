@@ -258,7 +258,13 @@ def run_acai_cell(mesh_kind: str, *, n_catalog: int = 2 ** 27, d: int = 128,
               # which shard_map the compat shim resolved (provenance: the
               # cell lowers on both the jax.shard_map and the experimental
               # API — see repro/compat.py)
-              "shard_map_impl": SHARD_MAP_IMPL}
+              "shard_map_impl": SHARD_MAP_IMPL,
+              # index selection provenance (DESIGN.md §8): the cell lowers
+              # the exact per-shard scan — 'exact' is the spec-less
+              # perfect-recall configuration, same convention as
+              # launch/serve.py --remote-index exact.  An approximate cell
+              # would carry e.g. IndexSpec("ivf_sharded", ...).to_dict().
+              "index_spec": {"backend": "exact"}}
     t0 = time.time()
     try:
         # NOTE: the chunked-scan variant was measured and refuted (§Perf

@@ -4,6 +4,14 @@ in front (the paper's edge-inference deployment).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --requests 40
 
+`--remote-index` selects the semantic-cache tier's remote-catalog index
+backend through the unified registry (DESIGN.md §8) and `--index-opt
+key=value` (repeatable) passes builder kwargs, e.g.:
+
+  ... --remote-index nsw --index-opt beam=64 --index-opt steps=24
+  ... --remote-index ivf --index-opt nlist=256 --index-opt nprobe=16
+  ... --mesh-shards 4 --remote-index ivf_sharded --index-opt nlist=64
+
 `--mesh-shards P` serves the semantic-cache tier through the sharded
 multi-device path (catalog + cache state sharded over a (1, P) mesh,
 repro.core.distributed) — on hosts without accelerators it forces P
@@ -50,6 +58,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
 
 from repro.configs import ARCHS, SMOKE_ARCHS
+from repro.index.base import (IndexSpec, parse_index_opts,
+                              registered_backends)
 from repro.models import init_params
 from repro.serve import SemanticCachedLM, ServeEngine, generate
 
@@ -67,7 +77,34 @@ def main():
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="shard the semantic-cache tier over a (1, P) mesh "
                          "(0 = single-device batched pipeline)")
+    ap.add_argument("--remote-index", default="exact",
+                    choices=("exact",) + registered_backends(),
+                    help="remote-catalog index backend for the semantic "
+                         "cache ('exact' = perfect-recall candidates)")
+    ap.add_argument("--index-opt", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="index builder kwarg (repeatable), e.g. nlist=256")
     args = ap.parse_args()
+
+    index_spec = None
+    if args.remote_index != "exact":
+        try:
+            index_spec = IndexSpec(args.remote_index,
+                                   parse_index_opts(args.index_opt))
+        except ValueError as e:
+            raise SystemExit(str(e))
+        sharded = args.remote_index in registered_backends(sharded=True)
+        if sharded and args.mesh_shards <= 1:
+            raise SystemExit(
+                f"--remote-index {args.remote_index} is a sharded backend: "
+                f"pass --mesh-shards P (P > 1)")
+        if not sharded and args.mesh_shards > 1:
+            raise SystemExit(
+                f"--remote-index {args.remote_index} is single-device; with "
+                f"--mesh-shards use one of "
+                f"{('exact',) + registered_backends(sharded=True)}")
+    elif args.index_opt:
+        raise SystemExit("--index-opt needs --remote-index")
 
     mesh = None
     if args.mesh_shards > 1:
@@ -113,7 +150,8 @@ def main():
         return generate(params, cfg, prompt_tokens[None], steps=4)
 
     lm = SemanticCachedLM(params, cfg, catalog, payloads, gen_fn,
-                          h=args.cache_size, k=4, mesh=mesh)
+                          h=args.cache_size, k=4, mesh=mesh,
+                          index_spec=index_spec)
     for i in range(args.requests):
         toks = jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
                            jnp.int32)
@@ -121,6 +159,7 @@ def main():
     s = lm.stats
     tier = (f"sharded x{args.mesh_shards}" if mesh is not None
             else "single-device")
+    tier += f", index={(index_spec.to_dict() if index_spec else 'exact')}"
     print(f"semantic cache ({tier}): {s.requests} requests, "
           f"{s.served_local}/{s.requests * lm.cache.cfg.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")

@@ -104,9 +104,18 @@ def mla_attention(p, x, positions, cfg: ModelConfig, cache=None,
         return out, new_cache
 
     # materialize K/V from the latent (paper-faithful baseline path; the
-    # absorbed-weights decode variant is the §Perf optimization)
-    k_nope = (ckv_all @ p["wk_b"]).reshape(b, t, h, nope)
-    v = (ckv_all @ p["wv_b"]).reshape(b, t, h, vdim)
+    # absorbed-weights decode variant is the §Perf optimization).  Decode
+    # steps expand in float32: the bf16 rounding of the re-materialised
+    # K/V is exactly what separates this path from the absorbed decode
+    # (which contracts in latent space in f32).  This doubles the decode
+    # step's transient (B, T, H, ·) K/V buffers — acceptable because this
+    # materialised decode is the reference path (serving uses the absorbed
+    # variant, which never expands K/V at all); prefill, where the buffers
+    # are live across the whole sequence anyway, keeps the model dtype.
+    lat = (ckv_all.astype(jnp.float32) if cache is not None and s == 1
+           else ckv_all)
+    k_nope = (lat @ p["wk_b"].astype(lat.dtype)).reshape(b, t, h, nope)
+    v = (lat @ p["wv_b"].astype(lat.dtype)).reshape(b, t, h, vdim)
     krope_b = jnp.broadcast_to(krope_all[:, :, None, :].astype(k_nope.dtype),
                                (b, t, h, rope_d))
     k_full = jnp.concatenate([k_nope, krope_b], axis=-1)
@@ -116,9 +125,9 @@ def mla_attention(p, x, positions, cfg: ModelConfig, cache=None,
 
     q_offset = 0 if cache is None else cache_len
     written = None if cache is None else cache_len + s
-    out = attention_core(q_full, k_full, v, q_offset, cfg,
-                         written_upto=written)
-    out = out.reshape(b, s, h * vdim) @ p["wo"]
+    out = attention_core(q_full.astype(k_full.dtype), k_full, v, q_offset,
+                         cfg, written_upto=written)
+    out = out.reshape(b, s, h * vdim).astype(x.dtype) @ p["wo"]
     return out, new_cache
 
 

@@ -45,7 +45,8 @@ class SemanticCachedLM:
     def __init__(self, params, cfg: ModelConfig, catalog_embs: jax.Array,
                  catalog_payloads: list, generate_fn: Callable,
                  h: int = 64, k: int = 4, c_f: Optional[float] = None,
-                 eta: Optional[float] = None, seed: int = 0, mesh=None):
+                 eta: Optional[float] = None, seed: int = 0, mesh=None,
+                 index_spec=None):
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
@@ -53,9 +54,17 @@ class SemanticCachedLM:
         self.generate_fn = generate_fn
         c_f = c_f if c_f is not None else float(
             calibrate_fetch_cost(catalog_embs, kth=min(50, len(catalog_payloads) - 1)))
+        # index_spec: remote-catalog index selection (repro.index.base
+        # IndexSpec; also accepts the flat-dict / backend-name forms, with
+        # "exact" resolving to None) — one knob from the CLI down to the
+        # candidate generator; None = exact candidates.
+        from repro.index.base import resolve_spec
+
+        index_spec = resolve_spec(index_spec)
         acfg = acai.AcaiConfig(
             h=h, k=k, c_f=c_f, c_remote=max(4 * k, 16), c_local=max(k, 8),
-            oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f))
+            oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f),
+            index=index_spec)
         # mesh: shard the catalog scan + OMA over the mesh's `model` axis
         # (repro.core.distributed.make_step_sharded) — the multi-device
         # serving path; None = the single-device batched pipeline.

@@ -47,15 +47,18 @@ def test_lsh_recall(clustered):
 
 
 def test_nsw_recall(clustered):
+    # multi-expansion beam search (expand=2 default) lifts the clustered-
+    # trace recall from the seed's 0.842 to 0.95; pinned with margin.
     cat, q, truth = clustered
-    assert _recall(NSWIndex(cat, degree=16, beam=64, steps=32), q, truth) > 0.85
+    assert _recall(NSWIndex(cat, degree=16, beam=64, steps=32), q, truth) > 0.93
 
 
 def test_nsw_recall_uniform():
     catalog, reqs, _ = trace.sift_like(n=4000, d=32, t=64, seed=1)
     cat, q = jnp.array(catalog), jnp.array(reqs[:64])
     truth = np.array(FlatIndex(cat).query(q, 10)[1])
-    assert _recall(NSWIndex(cat, degree=16, beam=48, steps=24), q, truth) > 0.85
+    # measured 1.0 at expand=2; pinned with margin
+    assert _recall(NSWIndex(cat, degree=16, beam=48, steps=24), q, truth) > 0.95
 
 
 def test_pq_codec_roundtrip_error_decreases_with_m():
