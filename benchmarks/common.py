@@ -4,6 +4,11 @@ Every figure benchmark emits CSV rows  `name,us_per_call,derived`  where
 `derived` carries the figure's metric (NAG etc.) and us_per_call the mean
 wall time per request for the policy.  Sizes are reduced by default so the
 whole suite runs on CPU in minutes; pass --full for paper-scale runs.
+
+The policy-comparison protocol (tuned baselines, augmented twins, shared
+per-trace oracle) lives in `benchmarks.experiments`; this module keeps
+the trace/oracle setup cache used by the kernel-, serve- and
+regret-level suites plus the AÇAI sequential-replay helper.
 """
 
 from __future__ import annotations
@@ -19,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import baselines as B
 from repro.core import oma, policy, trace
-from repro.core.costs import calibrate_fetch_cost, pairwise_dissimilarity
+from repro.core.costs import calibrate_fetch_cost
 
 
 @dataclass
@@ -43,8 +48,8 @@ def _cf_table(cat_j, kths=(2, 10, 50, 100, 500, 1000)):
 
 @lru_cache(maxsize=4)
 def get_setup(kind: str, n: int, t: int, d: int = 32, kmax: int = 128) -> BenchSetup:
-    gen = trace.sift_like if kind == "sift" else trace.amazon_like
-    catalog, reqs, ids = gen(n=n, d=d, t=t)
+    name = {"sift": "sift_like", "amazon": "amazon_like"}.get(kind, kind)
+    catalog, reqs, ids = trace.build_trace(name, n=n, d=d, t=t)
     cat_j = jnp.array(catalog)
     oracle = B.ServerOracle(catalog, reqs, kmax=kmax)
     return BenchSetup(kind, catalog, reqs, ids, cat_j, oracle, _cf_table(cat_j))
@@ -75,36 +80,6 @@ def run_acai(setup: BenchSetup, *, h, k, c_f, eta=None, mirror="negentropy",
     }, dt
 
 
-def run_baseline(setup: BenchSetup, name: str, *, h, k, c_f, k_prime=None,
-                 c_theta=None, augmented=False, requests=None, seed=0):
-    reqs = setup.requests if requests is None else requests
-    cls = B.POLICIES[name]
-    kwargs = dict(h=h, k=k, c_f=c_f, augmented=augmented, seed=seed)
-    if name in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
-        kwargs.update(k_prime=k_prime or 2 * k, c_theta=c_theta or 1.5 * c_f)
-    p = cls(setup.catalog, setup.oracle, **kwargs)
-    t0 = time.time()
-    m = B.run_policy(p, reqs)
-    dt = (time.time() - t0) / reqs.shape[0]
-    return m, dt
-
-
-def tune_baseline(setup, name, *, h, k, c_f, requests=None):
-    """Paper protocol: grid-search (k', C_theta) and keep the best NAG."""
-    if name not in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
-        m, dt = run_baseline(setup, name, h=h, k=k, c_f=c_f, requests=requests)
-        return B.nag(m["gain"], k, c_f)[-1], m, dt
-    best = (-np.inf, None, None)
-    for kp in {k, 2 * k, min(4 * k, h)}:
-        for ct in (1.0 * c_f, 1.5 * c_f, 2.0 * c_f):
-            m, dt = run_baseline(setup, name, h=h, k=k, c_f=c_f,
-                                 k_prime=kp, c_theta=ct, requests=requests)
-            v = B.nag(m["gain"], k, c_f)[-1]
-            if v > best[0]:
-                best = (v, m, dt)
-    return best
-
-
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
     sys.stdout.flush()
@@ -114,7 +89,8 @@ def std_args(desc: str):
     p = argparse.ArgumentParser(description=desc)
     p.add_argument("--full", action="store_true",
                    help="paper-scale sizes (slow on CPU)")
-    p.add_argument("--trace", default="sift", choices=["sift", "amazon"])
+    p.add_argument("--trace", default="sift",
+                   help="sift|amazon aliases or any registered scenario")
     return p
 
 

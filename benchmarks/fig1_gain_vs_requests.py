@@ -1,34 +1,17 @@
-"""Fig. 1: normalised average gain vs requests, h=1000 (reduced: 200), k=10."""
+"""Fig. 1: normalised average gain vs requests — AÇAI vs every tuned baseline.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig1"]`.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    h = 1000 if full else 200
-    k = 10
-    c_f = s.cf_table[50]
-    out = {}
-
-    m, dt = common.run_acai(s, h=h, k=k, c_f=c_f)
-    curve = B.nag(m["gain"], k, c_f)
-    out["ACAI"] = curve
-    common.emit(f"fig1/{kind}/ACAI", dt * 1e6, f"{curve[-1]:.4f}")
-
-    for name in B.POLICIES:
-        nagv, mtr, dtb = common.tune_baseline(s, name, h=h, k=k, c_f=c_f)
-        out[name] = B.nag(mtr["gain"], k, c_f)
-        common.emit(f"fig1/{kind}/{name}", dtb * 1e6, f"{nagv:.4f}")
-
-    second = max(v[-1] for kname, v in out.items() if kname != "ACAI")
-    common.emit(f"fig1/{kind}/improvement_vs_2nd", 0.0,
-                f"{(out['ACAI'][-1] - second) / max(second, 1e-9):+.2%}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig1", full=full, trace=kind)
 
 
 if __name__ == "__main__":

@@ -1,30 +1,17 @@
-"""Fig. 2: gain vs cache size h in {50,100,200,500,1000,2000}, k=10."""
+"""Fig. 2: gain vs cache size h, k=10.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig2"]`.
+"""
 
 from __future__ import annotations
 
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    k = 10
-    c_f = s.cf_table[50]
-    hs = (50, 100, 200, 500, 1000, 2000) if full else (50, 100, 200, 400)
-    out = {}
-    for h in hs:
-        m, dt = common.run_acai(s, h=h, k=k, c_f=c_f)
-        acai = B.nag(m["gain"], k, c_f)[-1]
-        common.emit(f"fig2/{kind}/h{h}/ACAI", dt * 1e6, f"{acai:.4f}")
-        best = -1.0
-        for name in ("SIM-LRU", "CLS-LRU", "QCACHE"):
-            nagv, _, dtb = common.tune_baseline(s, name, h=h, k=k, c_f=c_f)
-            common.emit(f"fig2/{kind}/h{h}/{name}", dtb * 1e6, f"{nagv:.4f}")
-            best = max(best, nagv)
-        out[h] = (acai, best)
-        common.emit(f"fig2/{kind}/h{h}/improvement", 0.0,
-                    f"{(acai - best) / max(best, 1e-9):+.2%}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig2", full=full, trace=kind)
 
 
 if __name__ == "__main__":

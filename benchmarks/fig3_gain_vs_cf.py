@@ -1,29 +1,17 @@
-"""Fig. 3: gain vs retrieval cost c_f = avg distance to i-th neighbour."""
+"""Fig. 3: gain vs retrieval cost c_f = avg distance to i-th neighbour.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig3"]`.
+"""
 
 from __future__ import annotations
 
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    k = 10
-    h = 1000 if full else 200
-    out = {}
-    for i, c_f in sorted(s.cf_table.items()):
-        m, dt = common.run_acai(s, h=h, k=k, c_f=c_f)
-        acai = B.nag(m["gain"], k, c_f)[-1]
-        common.emit(f"fig3/{kind}/cf@{i}/ACAI", dt * 1e6, f"{acai:.4f}")
-        best = -1.0
-        for name in ("SIM-LRU", "CLS-LRU"):
-            nagv, _, dtb = common.tune_baseline(s, name, h=h, k=k, c_f=c_f)
-            common.emit(f"fig3/{kind}/cf@{i}/{name}", dtb * 1e6, f"{nagv:.4f}")
-            best = max(best, nagv)
-        out[i] = (acai, best)
-        common.emit(f"fig3/{kind}/cf@{i}/improvement", 0.0,
-                    f"{(acai - best) / max(best, 1e-9):+.2%}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig3", full=full, trace=kind)
 
 
 if __name__ == "__main__":

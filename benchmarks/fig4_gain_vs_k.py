@@ -1,31 +1,17 @@
-"""Fig. 4: gain vs number of neighbours k in {10,20,30,50,100}, h=1000."""
+"""Fig. 4: gain vs number of neighbours k.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig4"]`.
+"""
 
 from __future__ import annotations
 
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    h = 1000 if full else 200
-    ks = (10, 20, 30, 50, 100) if full else (5, 10, 20, 40)
-    c_f = s.cf_table[50]
-    out = {}
-    for k in ks:
-        m, dt = common.run_acai(s, h=h, k=k, c_f=c_f,
-                                c_remote=max(64, 4 * k), c_local=max(16, k))
-        acai = B.nag(m["gain"], k, c_f)[-1]
-        common.emit(f"fig4/{kind}/k{k}/ACAI", dt * 1e6, f"{acai:.4f}")
-        best = -1.0
-        for name in ("SIM-LRU", "CLS-LRU"):
-            nagv, _, dtb = common.tune_baseline(s, name, h=h, k=k, c_f=c_f)
-            common.emit(f"fig4/{kind}/k{k}/{name}", dtb * 1e6, f"{nagv:.4f}")
-            best = max(best, nagv)
-        out[k] = (acai, best)
-        common.emit(f"fig4/{kind}/k{k}/improvement", 0.0,
-                    f"{(acai - best) / max(best, 1e-9):+.2%}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig4", full=full, trace=kind)
 
 
 if __name__ == "__main__":

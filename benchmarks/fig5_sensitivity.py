@@ -1,45 +1,17 @@
-"""Fig. 5: robustness — AÇAI over eta spanning 2 orders of magnitude vs
-SIM-LRU / CLS-LRU over their (k', C_theta) grid."""
+"""Fig. 5: robustness — AÇAI eta sweep vs SIM-LRU / CLS-LRU (k', C_theta) grids.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig5"]`.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    k = 10
-    c_f = s.cf_table[50]
-    out = {"acai": {}, "SIM-LRU": {}, "CLS-LRU": {}}
-    for h in ((50, 1000) if full else (50, 200)):
-        base = 0.05 / c_f
-        vals = []
-        for mult in (0.1, 0.3, 1.0, 3.0, 10.0):
-            m, dt = common.run_acai(s, h=h, k=k, c_f=c_f, eta=base * mult)
-            v = B.nag(m["gain"], k, c_f)[-1]
-            vals.append(v)
-            common.emit(f"fig5/{kind}/h{h}/ACAI-eta{mult}x", dt * 1e6, f"{v:.4f}")
-        out["acai"][h] = vals
-        spread = (max(vals) - min(vals)) / max(max(vals), 1e-9)
-        common.emit(f"fig5/{kind}/h{h}/ACAI-spread", 0.0, f"{spread:.3f}")
-
-        for name in ("SIM-LRU", "CLS-LRU"):
-            vals_b = []
-            for kp in {k, 2 * k, min(4 * k, h)}:
-                for ct in (1.0 * c_f, 1.5 * c_f, 2.0 * c_f):
-                    m, dtb = common.run_baseline(
-                        s, name, h=h, k=k, c_f=c_f, k_prime=kp, c_theta=ct)
-                    v = B.nag(m["gain"], k, c_f)[-1]
-                    vals_b.append(v)
-                    common.emit(f"fig5/{kind}/h{h}/{name}-k{kp}-ct{ct:.2f}",
-                                dtb * 1e6, f"{v:.4f}")
-            out[name][h] = vals_b
-            spread_b = (max(vals_b) - min(vals_b)) / max(max(vals_b), 1e-9)
-            common.emit(f"fig5/{kind}/h{h}/{name}-spread", 0.0, f"{spread_b:.3f}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig5", full=full, trace=kind)
 
 
 if __name__ == "__main__":

@@ -1,36 +1,17 @@
-"""Fig. 6: negative-entropy vs Euclidean mirror maps (h=100, k=10)."""
+"""Fig. 6: negative-entropy vs Euclidean mirror maps (h=100, k=10).
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig6"]`.
+"""
 
 from __future__ import annotations
 
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    h, k = 100, 10
-    c_f = s.cf_table[50]
-    out = {}
-    for mirror, etas in (
-        ("negentropy", (0.01 / c_f, 0.05 / c_f, 0.2 / c_f)),
-        ("euclidean", (0.1 / (c_f * h), 0.5 / (c_f * h), 2.0 / (c_f * h))),
-    ):
-        best, best_curve = -1.0, None
-        for eta in etas:
-            m, dt = common.run_acai(s, h=h, k=k, c_f=c_f, eta=eta, mirror=mirror)
-            v = B.nag(m["gain"], k, c_f)[-1]
-            common.emit(f"fig6/{kind}/{mirror}/eta{eta:.2e}", dt * 1e6, f"{v:.4f}")
-            if v > best:
-                best, best_curve = v, B.nag(m["gain"], k, c_f)
-        out[mirror] = (best, best_curve)
-        common.emit(f"fig6/{kind}/{mirror}/best", 0.0, f"{best:.4f}")
-    # time-to-90%-of-final: the paper's "same gain in a shorter time" claim
-    for mirror, (best, curve) in out.items():
-        import numpy as np
-        tgt = 0.9 * curve[-1]
-        t90 = int(np.argmax(curve >= tgt))
-        common.emit(f"fig6/{kind}/{mirror}/t90", 0.0, str(t90))
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig6", full=full, trace=kind)
 
 
 if __name__ == "__main__":

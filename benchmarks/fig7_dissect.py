@@ -1,53 +1,17 @@
-"""Fig. 7: dissecting AÇAI — how much of the edge over the 2nd-best policy
-comes from the approximate indexes (serving rule) vs the OMA updates.
+"""Fig. 7: dissecting AÇAI — index (serving rule) share vs OMA share of the edge.
 
-Protocol (paper Sec. V-C): augment the second-best baseline with AÇAI's
-index-based serving (per-object local/remote composition) while keeping its
-LRU-style update rule; the augmented-minus-plain share of the improvement is
-attributed to the indexes, the rest to OMA.
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig7"]`.
 """
 
 from __future__ import annotations
 
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "sift") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    h = 1000 if full else 200
-    c_f = s.cf_table[50]
-    ks = (10, 20, 30, 50, 100) if full else (5, 10, 20)
-    out = {}
-    for k in ks:
-        m, dt = common.run_acai(s, h=h, k=k, c_f=c_f,
-                                c_remote=max(64, 4 * k), c_local=max(16, k))
-        acai = B.nag(m["gain"], k, c_f)[-1]
-
-        # 2nd best = best tuned baseline
-        best_name, best_nag = None, -1.0
-        for name in ("SIM-LRU", "CLS-LRU", "QCACHE"):
-            v, _, _ = common.tune_baseline(s, name, h=h, k=k, c_f=c_f)
-            if v > best_nag:
-                best_name, best_nag = name, v
-        # augmented second-best (indexes grafted on, updates unchanged)
-        aug = -1.0
-        for kp in (k, 2 * k):
-            m_aug, _ = common.run_baseline(s, best_name, h=h, k=k, c_f=c_f,
-                                           k_prime=kp, c_theta=1.5 * c_f,
-                                           augmented=True)
-            aug = max(aug, B.nag(m_aug["gain"], k, c_f)[-1])
-
-        total = acai - best_nag
-        from_idx = max(min(aug - best_nag, total), 0.0)
-        share_idx = from_idx / max(total, 1e-9)
-        out[k] = (acai, best_nag, aug, share_idx)
-        common.emit(f"fig7/{kind}/k{k}/ACAI", dt * 1e6, f"{acai:.4f}")
-        common.emit(f"fig7/{kind}/k{k}/2nd({best_name})", 0.0, f"{best_nag:.4f}")
-        common.emit(f"fig7/{kind}/k{k}/2nd+index", 0.0, f"{aug:.4f}")
-        common.emit(f"fig7/{kind}/k{k}/share_from_indexes", 0.0, f"{share_idx:.2f}")
-        common.emit(f"fig7/{kind}/k{k}/share_from_oma", 0.0, f"{1 - share_idx:.2f}")
-    return out
+def main(full: bool = False, kind: str = "sift") -> list:
+    return experiments.run_named("fig7", full=full, trace=kind)
 
 
 if __name__ == "__main__":

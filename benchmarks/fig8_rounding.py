@@ -1,36 +1,17 @@
-"""Fig. 8/9 (App. G): rounding schemes — update cost vs reactivity, and
-cache-occupancy concentration under the relaxed capacity constraint."""
+"""Fig. 8/9 (App. G): rounding schemes — update cost vs reactivity.
+
+Thin wrapper over the config-driven experiment harness: the whole
+protocol (traces, policy sweeps, shared oracle, summary lines) lives in
+the named grid `benchmarks.experiments.GRIDS["fig8"]`.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks import common
-from repro.core import baselines as B
+from benchmarks import common, experiments
 
 
-def main(full: bool = False, kind: str = "amazon") -> dict:
-    s = common.get_setup(kind, **common.sizes(full))
-    h, k = (1000, 10) if full else (200, 10)
-    c_f = s.cf_table[50]
-    out = {}
-    schemes = [("coupled", 1), ("independent", 1),
-               ("depround", 1), ("depround", 20), ("depround", 100)]
-    for rounding, m_every in schemes:
-        m, dt = common.run_acai(s, h=h, k=k, c_f=c_f, rounding=rounding,
-                                round_every=m_every)
-        label = rounding if rounding != "depround" else f"depround-M{m_every}"
-        nag = B.nag(m["gain"], k, c_f)[-1]
-        fetches = m["fetched"].mean()
-        occ = m["occupancy"]
-        out[label] = (nag, fetches)
-        common.emit(f"fig8/{kind}/{label}/NAG", dt * 1e6, f"{nag:.4f}")
-        common.emit(f"fig8/{kind}/{label}/fetches_per_req", 0.0, f"{fetches:.3f}")
-        common.emit(
-            f"fig8/{kind}/{label}/occupancy", 0.0,
-            f"mean={occ.mean():.1f};p99dev={np.percentile(np.abs(occ - h), 99) / h:.3f}",
-        )
-    return out
+def main(full: bool = False, kind: str = "amazon") -> list:
+    return experiments.run_named("fig8", full=full, trace=kind)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,16 @@
 """Benchmark driver.
 
 Default: reduced CPU-friendly sizes (minutes).  ``--full`` = paper-scale.
-``--only figN`` runs a single harness.  The roofline/dry-run analyses are
-separate (``python -m benchmarks.roofline`` after ``launch/dryrun.py``) since
-they operate on compiled artifacts, not wall time.
+``--suite NAME`` runs a single harness; ``--list`` prints every
+registered suite, experiment grid, policy and trace scenario.  The
+roofline/dry-run analyses are separate (``python -m benchmarks.roofline``
+after ``launch/dryrun.py``) since they operate on compiled artifacts, not
+wall time.
+
+The fig1..fig8 suites are thin wrappers over named grids of the
+config-driven experiment harness (``benchmarks/experiments.py``); the
+``experiments`` suite is the canonical cross-policy × cross-scenario
+sweep and writes BENCH_experiments.json at the repo root.
 """
 
 from __future__ import annotations
@@ -19,11 +26,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", "--suite", dest="only", default=None,
-                    help="run a single suite (e.g. --suite backends)")
-    ap.add_argument("--trace", default=None, choices=[None, "sift", "amazon"])
+                    help="run a single suite (e.g. --suite experiments)")
+    ap.add_argument("--trace", default=None,
+                    help="restrict to one trace scenario (sift|amazon "
+                         "aliases or any registered scenario name)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suites/grids/policies/traces")
     args = ap.parse_args()
 
-    from benchmarks import (backends_bench, distributed_bench,
+    from benchmarks import (backends_bench, distributed_bench, experiments,
                             fig1_gain_vs_requests, fig2_gain_vs_h,
                             fig3_gain_vs_cf, fig4_gain_vs_k,
                             fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
@@ -50,7 +61,18 @@ def main() -> None:
         # unified-index-API sweep: every registered backend × B∈{8,64},
         # NAG + p50 latency + recall vs flat — emits BENCH_backends.json
         "backends": (backends_bench.main, ["sift"]),
+        # unified-policy-API sweep: every registered policy × every
+        # registered trace scenario — emits BENCH_experiments.json
+        "experiments": (experiments.main, [None]),
     }
+
+    if args.list:
+        print("registered suites:")
+        for name, (_fn, kinds) in suites.items():
+            ks = ",".join(k or "all-traces" for k in kinds)
+            print(f"  {name:12s} ({ks})")
+        print(experiments.list_grids())
+        return
 
     print("name,us_per_call,derived")
     failures = 0

@@ -45,6 +45,37 @@ for backend, kw in tiny.items():
 print("all-backends conformance OK")
 EOF
 
+echo "== all-policies x all-traces experiment smoke (DESIGN.md §9) =="
+python - <<'EOF'
+import numpy as np
+from repro.core import baselines as B
+from repro.core import policy_api as PA
+from repro.core import trace
+from repro.core.costs import CostModel
+
+# the canonical tiny tables (shared with tests/test_policy_api.py): the
+# sweep is the standalone seconds-fast re-check of the policy + trace
+# registries for runs where pytest is filtered or skipped
+assert set(PA.TINY_POLICY_KWARGS) == set(PA.registered_policies()), \
+    "policy conformance table out of date with the registry"
+assert set(trace.TINY_TRACE_KWARGS) == set(trace.registered_traces()), \
+    "trace conformance table out of date with the registry"
+for tname, tkw in trace.TINY_TRACE_KWARGS.items():
+    catalog, reqs, _ = trace.build_trace(tname, **tkw)
+    oracle = B.ServerOracle(catalog, reqs, kmax=16)
+    ts = np.arange(reqs.shape[0])
+    line = []
+    for pname, pkw in PA.TINY_POLICY_KWARGS.items():
+        pol = PA.build_policy(PA.PolicySpec(pname, pkw), catalog,
+                              CostModel(c_f=1.0), oracle=oracle, seed=0)
+        res = PA.replay_trace(pol, reqs, ts, batch=8)
+        assert res["gain"].shape == (64,), (tname, pname)
+        assert (res["occupancy"] <= pol.h + 1e-6).all(), (tname, pname)
+        line.append(f"{pname}={pol.normalized_gain(res['gain'].sum(), 64):.3f}")
+    print(f"  {tname:12s} NAG: " + " ".join(line))
+print("all-policies x all-traces smoke OK")
+EOF
+
 echo "== 2-device sharded AÇAI smoke =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
 python - <<'EOF'

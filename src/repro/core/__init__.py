@@ -7,8 +7,9 @@
   oma         — Online Mirror Ascent, Algorithm 1
   rounding    — DepRound + CoupledRounding (App. F)
   policy      — AcaiCache: serving (Eq. 2) + state updates, trace replay
+  policy_api  — CachePolicy protocol, PolicySpec, build_policy registry (§9)
   baselines   — LRU, SIM-LRU, CLS-LRU, RND-LRU, QCACHE (Sec. II/V)
-  trace       — SIFT-like / Amazon-like synthetic traces (Sec. V-A)
+  trace       — synthetic traces (Sec. V-A) + TraceSpec scenario registry
   ref         — pure-numpy oracles for every equation (test-only)
 """
 
@@ -18,12 +19,23 @@ from repro.core.oma import OMAConfig, oma_update, theoretical_eta, uniform_state
 from repro.core.policy import (AcaiCache, AcaiConfig, init_state, make_replay,
                                make_replay_batched, make_step,
                                make_step_batched)
+from repro.core.policy_api import (CachePolicy, PolicySpec, build_policy,
+                                   parse_policy_opts, registered_policies)
 from repro.core.rounding import coupled_rounding, depround, independent_rounding
+from repro.core.trace import TraceSpec, build_trace, registered_traces
 
 __all__ = [
     "AcaiCache",
     "AcaiConfig",
+    "CachePolicy",
     "CostModel",
+    "PolicySpec",
+    "TraceSpec",
+    "build_policy",
+    "build_trace",
+    "parse_policy_opts",
+    "registered_policies",
+    "registered_traces",
     "OMAConfig",
     "calibrate_fetch_cost",
     "coupled_rounding",

@@ -14,8 +14,19 @@ inefficiency (i): overlapping value sets still consume separate slots).
              containment argument of Falchi et al.) or the distance profile
              matches the stored entries' profiles.
 
-They are deliberately plain numpy + python: these are sequential
-data-structure policies used as baselines; the JAX hot path is AÇAI itself.
+The *update* logic is deliberately sequential plain python (these are
+order-dependent data-structure policies); the *distance math* is batched:
+
+* `ServerOracle` precomputes exact kNN answers for a whole trace through
+  the fused scan `repro.kernels.ops.topk_l2_chunked` (the same
+  memory-roofline path the distributed AÇAI step runs), float32 end to
+  end, with the catalog chunk sized to a memory budget so 1M-point
+  catalogs never materialise a dense (B, N) intermediate.
+* `KeyValueCache.step_batch` serves a request mini-batch with ONE
+  (B, M) distance GEMM (M = every object the batch can possibly touch)
+  plus one (B, E) key GEMM, then runs the sequential hit/update loop
+  against those tables — the per-step python distance loops disappear
+  while the update semantics stay exactly LRU.
 
 `augmented=True` gives every policy AÇAI's serving rule (Fig. 7/11-13 of the
 paper): the answer is composed per-object from the union of cached objects
@@ -42,38 +53,127 @@ import numpy as np
 # --------------------------------------------------------------------------
 
 class ServerOracle:
-    """Exact kNN answers from the remote server, precomputed in batch."""
+    """Exact kNN answers from the remote server.
 
-    def __init__(self, catalog: np.ndarray, requests: np.ndarray, kmax: int,
-                 chunk: int = 512):
-        self.catalog = catalog.astype(np.float32)
-        t = requests.shape[0]
-        kmax = min(kmax, catalog.shape[0])
-        self.kmax = kmax
-        self.ids = np.empty((t, kmax), np.int32)
-        self.d2 = np.empty((t, kmax), np.float32)  # squared euclidean
-        cn = (self.catalog ** 2).sum(1)
-        for s in range(0, t, chunk):
-            q = requests[s:s + chunk].astype(np.float32)
-            d2 = (q ** 2).sum(1)[:, None] - 2.0 * q @ self.catalog.T + cn[None, :]
-            np.maximum(d2, 0.0, out=d2)
-            part = np.argpartition(d2, kmax - 1, axis=1)[:, :kmax]
-            pd = np.take_along_axis(d2, part, axis=1)
-            order = np.argsort(pd, axis=1, kind="stable")
-            self.ids[s:s + chunk] = np.take_along_axis(part, order, axis=1)
-            self.d2[s:s + chunk] = np.take_along_axis(pd, order, axis=1)
+    Trace mode (`requests` given): every answer is precomputed in one pass
+    through the fused chunked scan and `knn(t, k)` is a table lookup.
+
+    Online mode (`requests=None`, the serving tier): `extend(rs)` computes
+    answers for newly arriving requests on demand — one fused (B, N) scan
+    per mini-batch — appends them to the table and returns their trace
+    positions, so the policies' `knn(t, k)` contract is identical in both
+    modes.  With `retain_all=False` only the latest extend's block is
+    kept (policies never re-read past positions), so an unbounded
+    serving stream does not grow the table: `knn(t, k)` then only
+    accepts positions from the most recent block.
+
+    `mem_budget_mb` bounds the scan intermediates: the catalog is streamed
+    in row chunks of `chunk` (derived so query_block × chunk stays inside
+    the budget), float32 throughout — a 1M×128 catalog scans in ~64 MB
+    blocks instead of a dense (B, N) float matrix.
+    """
+
+    _QUERY_BLOCK = 512
+
+    def __init__(self, catalog: np.ndarray, requests: np.ndarray = None,
+                 kmax: int = 128, chunk: Optional[int] = None,
+                 mem_budget_mb: int = 64, retain_all: bool = True):
+        self.catalog = np.ascontiguousarray(catalog, dtype=np.float32)
+        n = self.catalog.shape[0]
+        self.kmax = min(kmax, n)
+        if chunk is None:
+            budget_rows = (mem_budget_mb * 2 ** 20) // (self._QUERY_BLOCK * 4)
+            chunk = int(np.clip(budget_rows, 256, max(n, 256)))
+        self.chunk = chunk
+        self.retain_all = retain_all
+        self._cat_j = None  # device catalog, created on first scan
+        self.t = 0
+        self._base = 0  # trace position of table row 0
+        self.ids = np.empty((0, self.kmax), np.int32)
+        self.d2 = np.empty((0, self.kmax), np.float32)  # squared euclidean
+        if requests is not None:
+            self.extend(requests)
+
+    def _scan(self, q: np.ndarray):
+        """One fused top-kmax scan of the catalog: (B, d) float32 queries ->
+        (ids (B, kmax) int32, d2 (B, kmax) float32 ascending)."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        if self._cat_j is None:
+            self._cat_j = jnp.asarray(self.catalog)
+        d2, ids = ops.topk_l2_chunked(jnp.asarray(q), self._cat_j, self.kmax,
+                                      chunk=min(self.chunk,
+                                                self.catalog.shape[0]))
+        return np.asarray(ids, np.int32), np.asarray(d2, np.float32)
+
+    def extend(self, requests: np.ndarray) -> np.ndarray:
+        """Answer kNN for `requests` (B, d), append to the table, and
+        return their trace positions (B,)."""
+        # cast BEFORE the gemm: float64 request streams must not promote
+        # the (block, chunk) distance intermediates
+        q = np.ascontiguousarray(requests, dtype=np.float32)
+        b = q.shape[0]
+        ids = np.empty((b, self.kmax), np.int32)
+        d2 = np.empty((b, self.kmax), np.float32)
+        for s in range(0, b, self._QUERY_BLOCK):
+            ids[s:s + self._QUERY_BLOCK], d2[s:s + self._QUERY_BLOCK] = \
+                self._scan(q[s:s + self._QUERY_BLOCK])
+        ts = np.arange(self.t, self.t + b)
+        if self.retain_all:
+            self.ids = np.concatenate([self.ids, ids]) if self.t else ids
+            self.d2 = np.concatenate([self.d2, d2]) if self.t else d2
+        else:  # keep only this block: O(B) memory on unbounded streams
+            self._base = self.t
+            self.ids, self.d2 = ids, d2
+        self.t += b
+        return ts
+
+    def _row(self, t: int) -> int:
+        row = t - self._base
+        if row < 0 or row >= self.ids.shape[0]:
+            raise KeyError(
+                f"trace position {t} is outside the retained answer block "
+                f"[{self._base}, {self.t}) — precompute it (constructor "
+                f"requests= / extend) or pass ts=None for online mode")
+        return row
 
     def knn(self, t: int, k: int):
-        return self.ids[t, :k], self.d2[t, :k]
+        row = self._row(t)
+        return self.ids[row, :k], self.d2[row, :k]
+
+    def knn_block(self, ts: np.ndarray, k: int) -> np.ndarray:
+        """Answer ids for a whole batch of trace positions: (B, k)."""
+        rows = np.asarray(ts) - self._base
+        bad = (rows < 0) | (rows >= self.ids.shape[0])
+        if bad.any():
+            raise KeyError(
+                f"trace positions {np.asarray(ts)[bad]} are outside the "
+                f"retained answer block [{self._base}, {self.t}) — "
+                f"precompute them (constructor requests= / extend) or pass "
+                f"ts=None for online mode")
+        return self.ids[rows, :k]
 
     def empty_cost(self, t: int, k: int, c_f: float, metric: str = "sqeuclidean"):
-        d = self.d2[t, :k] if metric == "sqeuclidean" else np.sqrt(self.d2[t, :k])
+        row = self._row(t)
+        d = (self.d2[row, :k] if metric == "sqeuclidean"
+             else np.sqrt(self.d2[row, :k]))
         return float(d.sum() + k * c_f)
 
 
 def _dist2(q: np.ndarray, pts: np.ndarray) -> np.ndarray:
     diff = pts - q[None, :]
     return np.maximum((diff * diff).sum(1), 0.0)
+
+
+def _dist2_cross(qs: np.ndarray, pts: np.ndarray) -> np.ndarray:
+    """(B, d) x (M, d) -> (B, M) squared distances, one float32 GEMM."""
+    qs = qs.astype(np.float32, copy=False)
+    pts = pts.astype(np.float32, copy=False)
+    qn = (qs * qs).sum(1)[:, None]
+    pn = (pts * pts).sum(1)[None, :]
+    return np.maximum(qn - 2.0 * qs @ pts.T + pn, 0.0)
 
 
 @dataclasses.dataclass
@@ -86,13 +186,41 @@ class StepResult:
 
 
 class _Entry:
-    __slots__ = ("key_emb", "value_ids", "value_d2_key", "history")
+    __slots__ = ("key_emb", "value_ids", "value_d2_key", "history", "key_tag")
 
-    def __init__(self, key_emb, value_ids, value_d2_key):
+    def __init__(self, key_emb, value_ids, value_d2_key, key_tag=None):
         self.key_emb = key_emb
         self.value_ids = value_ids            # (k',) catalog ids
         self.value_d2_key = value_d2_key      # (k',) squared dist to key
         self.history: deque = deque(maxlen=16)
+        # provenance of key_emb for the batched distance tables:
+        # ("req", j) = request j of the active mini-batch,
+        # ("cat", i) = catalog object i (CLS-LRU medoid), None = older.
+        self.key_tag = key_tag
+
+
+class _BatchCtx:
+    """Per-mini-batch distance tables (see KeyValueCache.step_batch)."""
+
+    __slots__ = ("b", "key_tab", "eid_col", "req_gram", "cat_tab", "cat_ids")
+
+    def __init__(self, b, key_tab, eid_col, req_gram, cat_tab, cat_ids):
+        self.b = b                  # current request position in the batch
+        self.key_tab = key_tab      # (B, E0) d2 to batch-start entry keys
+        self.eid_col = eid_col      # eid -> column of key_tab
+        self.req_gram = req_gram    # (B, B) d2 between batch requests
+        self.cat_tab = cat_tab      # (B, M) d2 to the candidate object set
+        self.cat_ids = cat_ids      # (M,) sorted catalog ids of cat_tab
+
+    def obj_d2(self, ids: np.ndarray):
+        if not len(self.cat_ids):
+            return None
+        pos = np.searchsorted(self.cat_ids, ids)
+        pos = np.minimum(pos, len(self.cat_ids) - 1)
+        hit = self.cat_ids[pos] == ids
+        if not hit.all():  # safety net; the candidate set should cover ids
+            return None
+        return self.cat_tab[self.b, pos]
 
 
 class KeyValueCache:
@@ -116,6 +244,7 @@ class KeyValueCache:
         self.rng = np.random.default_rng(seed)
         self.entries: "OrderedDict[int, _Entry]" = OrderedDict()  # MRU first
         self._next_id = 0
+        self._ctx: Optional[_BatchCtx] = None
 
     # -- cost helpers -------------------------------------------------------
 
@@ -127,6 +256,83 @@ class KeyValueCache:
             return np.empty((0,), np.int32)
         return np.unique(np.concatenate([e.value_ids for e in self.entries.values()]))
 
+    # -- batched distance tables -------------------------------------------
+
+    def _obj_d2(self, r_emb: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Squared distances request -> catalog[ids]; table lookup when a
+        mini-batch context is active, direct numpy otherwise."""
+        if self._ctx is not None:
+            d2 = self._ctx.obj_d2(np.asarray(ids))
+            if d2 is not None:
+                return d2
+        return _dist2(r_emb, self.catalog[ids])
+
+    def _key_d2(self, r_emb: np.ndarray) -> np.ndarray:
+        """Squared distances request -> every entry key (entry order)."""
+        ctx = self._ctx
+        if ctx is None:
+            keys = np.stack([e.key_emb for e in self.entries.values()])
+            return _dist2(r_emb, keys)
+        out = np.empty(len(self.entries), np.float32)
+        missing = []
+        for j, (eid, e) in enumerate(self.entries.items()):
+            col = ctx.eid_col.get(eid)
+            if col is not None and e.key_tag is None:
+                out[j] = ctx.key_tab[ctx.b, col]
+            elif e.key_tag is not None and e.key_tag[0] == "req":
+                out[j] = ctx.req_gram[ctx.b, e.key_tag[1]]
+            elif e.key_tag is not None and e.key_tag[0] == "cat":
+                d2 = ctx.obj_d2(np.asarray([e.key_tag[1]]))
+                if d2 is None:
+                    missing.append(j)
+                else:
+                    out[j] = d2[0]
+            else:
+                missing.append(j)
+        if missing:  # safety net — keys the tables do not cover
+            vals = list(self.entries.values())
+            for j in missing:
+                out[j] = _dist2(r_emb, vals[j].key_emb[None, :])[0]
+        return out
+
+    def step_batch(self, ts: np.ndarray, rs: np.ndarray) -> list:
+        """Serve a request mini-batch: the distance math runs as two
+        float32 GEMMs over everything the batch can touch, then the
+        sequential hit/update loop consumes the tables.  Returns the
+        per-request StepResult list (same semantics as calling `step` in
+        a loop, with GEMM- instead of per-row-accumulated distances)."""
+        rs = np.ascontiguousarray(rs, dtype=np.float32)
+        b = rs.shape[0]
+        # hit tests: distances to the keys existing at batch start + the
+        # request gram (keys inserted during the batch are batch requests)
+        eid_col = {eid: j for j, eid in enumerate(self.entries)}
+        if eid_col:
+            keys = np.stack([e.key_emb for e in self.entries.values()])
+            key_tab = _dist2_cross(rs, keys)
+        else:
+            key_tab = np.empty((b, 0), np.float32)
+        req_gram = _dist2_cross(rs, rs)
+        # serving costs: every object the batch can cache or serve = the
+        # batch-start cache content + each request's k' server answers
+        cached = self.cached_object_ids()
+        srv = self.oracle.knn_block(ts, max(self.k, self.k_prime))
+        cat_ids = np.unique(np.concatenate([cached.ravel(), srv.ravel()]))
+        cat_tab = _dist2_cross(rs, self.catalog[cat_ids])
+        # entries created before this batch resolve via eid_col
+        for e in self.entries.values():
+            if e.key_tag is not None and e.key_tag[0] == "req":
+                e.key_tag = None
+        ctx = _BatchCtx(0, key_tab, eid_col, req_gram, cat_tab, cat_ids)
+        self._ctx = ctx
+        try:
+            out = []
+            for j, (t, r) in enumerate(zip(np.asarray(ts), rs)):
+                ctx.b = j
+                out.append(self.step(int(t), r))
+        finally:
+            self._ctx = None
+        return out
+
     # -- LRU bookkeeping ----------------------------------------------------
 
     def _touch(self, eid: int):
@@ -135,7 +341,11 @@ class KeyValueCache:
     def _insert(self, r_emb: np.ndarray, ids: np.ndarray, d2: np.ndarray) -> int:
         eid = self._next_id
         self._next_id += 1
-        self.entries[eid] = _Entry(r_emb.copy(), ids.copy(), d2.copy())
+        tag = None
+        if self._ctx is not None:
+            tag = ("req", self._ctx.b)
+        self.entries[eid] = _Entry(r_emb.copy(), ids.copy(), d2.copy(),
+                                   key_tag=tag)
         self.entries.move_to_end(eid, last=False)
         evicted = 0
         while len(self.entries) > self.max_entries:
@@ -150,7 +360,7 @@ class KeyValueCache:
         """AÇAI-style per-object composition over local_ids + server kNN."""
         srv_ids, srv_d2 = self.oracle.knn(t, self.k)
         if local_ids.size:
-            loc_d2 = _dist2(r_emb, self.catalog[local_ids])
+            loc_d2 = self._obj_d2(r_emb, local_ids)
             costs = np.concatenate([self._cost(loc_d2), self._cost(srv_d2) + self.c_f])
             obj = np.concatenate([local_ids, srv_ids])
             is_local = np.concatenate([np.ones(local_ids.size, bool),
@@ -178,7 +388,7 @@ class KeyValueCache:
     def _answer_cost_local(self, t: int, r_emb: np.ndarray, ids: np.ndarray
                            ) -> StepResult:
         """Serve k objects entirely from `ids` (approximate hit)."""
-        d2 = _dist2(r_emb, self.catalog[ids])
+        d2 = self._obj_d2(r_emb, ids)
         order = np.argsort(d2, kind="stable")[: self.k]
         cost = float(self._cost(d2[order]).sum())
         gain = self.oracle.empty_cost(t, self.k, self.c_f, self.metric) - cost
@@ -194,8 +404,7 @@ class KeyValueCache:
         if not self.entries:
             return None, np.inf
         eids = list(self.entries.keys())
-        keys = np.stack([self.entries[e].key_emb for e in eids])
-        d2 = _dist2(r_emb, keys)
+        d2 = self._key_d2(r_emb)
         j = int(np.argmin(d2))
         return eids[j], self._cost(np.array([d2[j]]))[0]
 
@@ -281,8 +490,10 @@ class ClsLRU(SimLRU):
             cand = self.catalog[e.value_ids]
             # medoid: cached object minimising total distance to the history
             tot = ((cand[:, None, :] - hist[None, :, :]) ** 2).sum(-1).sum(1)
-            new_center = cand[int(np.argmin(tot))]
+            j = int(np.argmin(tot))
+            new_center = cand[j]
             e.key_emb = new_center.copy()
+            e.key_tag = ("cat", int(e.value_ids[j]))
             e.value_d2_key = _dist2(new_center, cand)
 
 
@@ -303,8 +514,7 @@ class QCache(KeyValueCache):
         if not self.entries:
             return False, None
         eids = list(self.entries.keys())
-        keys = np.stack([self.entries[e].key_emb for e in eids])
-        dk = np.sqrt(_dist2(r_emb, keys))  # euclidean for geometry
+        dk = np.sqrt(self._key_d2(r_emb))  # euclidean for geometry
         take = np.argsort(dk, kind="stable")
         if self.l is not None:
             take = take[: self.l]
@@ -317,7 +527,7 @@ class QCache(KeyValueCache):
             merged_guard.append(np.full(e.value_ids.shape, guard))
         ids = np.concatenate(merged_ids)
         guard = np.concatenate(merged_guard)
-        d_obj = np.sqrt(_dist2(r_emb, self.catalog[ids]))
+        d_obj = np.sqrt(self._obj_d2(r_emb, ids))
         # keep best copy per object id
         order = np.argsort(d_obj, kind="stable")
         seen, pick = set(), []

@@ -386,11 +386,32 @@ class AcaiCache:
     registry) or be None for the exact sharded scan; `sharded_kwargs`
     (e.g. `scan_chunk`) further configure the step."""
 
-    def __init__(self, catalog: jax.Array, cfg: AcaiConfig, candidate_fn=None,
+    def __init__(self, catalog: jax.Array, cfg: "AcaiConfig", candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
-                 sharded_kwargs: dict | None = None):
+                 sharded_kwargs: dict | None = None, c_f: float | None = None):
         from repro.index.base import resolve_spec
 
+        if not isinstance(cfg, AcaiConfig):
+            # PolicySpec / flat-dict / name form (DESIGN.md §9): the one
+            # config knob serialized by the experiment harness and dryrun
+            # provenance records (both carry their c_f; a spec without one
+            # needs the `c_f` kwarg).  Only the 'acai' policy builds an
+            # AcaiCache; baselines go through policy_api.build_policy.
+            from repro.core.costs import CostModel
+            from repro.core.policy_api import (acai_config_from_spec,
+                                               resolve_policy_spec)
+
+            spec = resolve_policy_spec(cfg)
+            if spec is None or spec.name != "acai":
+                raise ValueError(
+                    f"AcaiCache builds the 'acai' policy; got "
+                    f"{getattr(spec, 'name', spec)!r} — use "
+                    f"repro.core.policy_api.build_policy for baselines")
+            cfg = acai_config_from_spec(
+                spec, None if c_f is None else CostModel(c_f=c_f))
+        elif c_f is not None:
+            raise ValueError("c_f= only applies to the PolicySpec form "
+                             "(AcaiConfig already carries its c_f)")
         # normalize every serialized spec form, incl. the reserved "exact"
         # (-> None), so provenance records round-trip into configs
         resolved = resolve_spec(cfg.index)

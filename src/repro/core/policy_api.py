@@ -1,0 +1,503 @@
+"""Unified policy API: protocol, spec, and config-driven policy registry.
+
+The paper's claims (Sec. V, Figs. 1-8) are *comparative*: AÇAI against the
+similarity-caching baselines (SIM-LRU / CLS-LRU / RND-LRU / QCACHE / LRU)
+across traces with and without statistical regularity.  This module makes
+that comparison surface first-class, mirroring the index layer's design
+(repro.index.base, DESIGN.md §8) one layer up:
+
+* `CachePolicy` — the batched step protocol every policy implements:
+  `serve_update_batch(rs (B, d), ts) -> StepMetrics` serves a request
+  mini-batch against the current cache state and applies the policy's
+  update.  `ts` are the requests' trace positions into the shared
+  `ServerOracle` table (baselines read their precomputed exact kNN
+  answers there); AÇAI ignores them.  `replay(reqs, ts)` drives a whole
+  trace through the same contract.
+* `PolicySpec` — a serializable (policy name + kwargs) description, the
+  one config knob selecting a policy end-to-end: the experiment harness
+  grids, `SemanticCachedLM(policy_spec=...)`, `launch/serve.py --policy/
+  --policy-opt`, and dry-run provenance records.  Every registered policy
+  accepts the paper's `augmented` serving-rule flag (AÇAI's per-object
+  local/remote composition grafted onto the baseline's update logic —
+  Fig. 7's dissection; a no-op for AÇAI itself, whose serving rule *is*
+  the augmented one).
+* `build_policy(spec, catalog, cost_model, oracle=None, index_spec=None,
+  mesh=None, seed=0)` — the registry constructor.  AÇAI builds through
+  the batched JAX pipeline (`repro.core.policy`), optionally over an
+  approximate index (`index_spec`) or a device mesh; baselines build over
+  the shared `ServerOracle` (one per trace, reused across every policy of
+  a grid) with their hit tests and serving costs vectorized per
+  mini-batch (repro.core.baselines.KeyValueCache.step_batch).
+
+Policies register via `register_policy`, so adding one is a single
+registration — no cross-cutting edits in benchmarks/serve/launch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import (Any, Callable, Dict, Mapping, Optional, Protocol, Tuple,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core import oma as oma_lib
+from repro.core import policy as acai
+from repro.core.costs import CostModel
+from repro.core.policy import StepMetrics
+
+
+@runtime_checkable
+class CachePolicy(Protocol):
+    """Batched cache policy over a fixed catalog.
+
+    Required surface (the conformance contract pinned by
+    tests/test_policy_api.py):
+
+    * `serve_update_batch(rs (B, d), ts (B,) | None) -> StepMetrics` —
+      serve a request mini-batch from the current cache state and apply
+      the policy's update; every StepMetrics field comes back with a (B,)
+      leading axis.  `ts` are trace positions into the policy's
+      `ServerOracle` (baselines need them to read precomputed server
+      answers; None means "online" — the oracle computes answers on
+      demand).  AÇAI ignores `ts`.
+    * `spec: PolicySpec` — the spec the policy was built from.
+    * `k: int`, `c_f: float`, `h: int` — the cost-model/capacity knobs
+      every metric is normalised by.
+    * `normalized_gain(total_gain, t) -> float` — NAG, Eq. (11).
+
+    Optional: `replay(reqs (T, d), ts) -> dict` — whole-trace replay
+    (AÇAI runs a jitted lax.scan; the default helper `replay_trace` loops
+    `serve_update_batch`).
+    """
+
+    spec: "PolicySpec"
+    k: int
+    c_f: float
+    h: int
+
+    def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        ...
+
+    def normalized_gain(self, total_gain: float, t: int) -> float:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Serializable policy selection: policy name + build kwargs.
+
+    `params` are passed verbatim to the registered builder, so valid keys
+    are exactly the builder's keyword arguments — e.g.
+    ``PolicySpec("sim_lru", {"k_prime": 20, "c_theta": 1.5,
+    "augmented": True})`` or ``PolicySpec("acai", {"h": 200, "eta":
+    0.05})``.  Round-trips through a flat dict (`to_dict` / `from_dict`)
+    so a spec can live in CLI flags, benchmark grids and dry-run records:
+    ``{"policy": "sim_lru", "k_prime": 20, ...}``.
+    """
+
+    name: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", dict(self.params))
+        if "policy" in self.params:
+            raise ValueError("'policy' is the spec field, not a param")
+
+    def __hash__(self):
+        return hash((self.name, tuple(sorted(self.params.items()))))
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Flat dict form: {'policy': name, **params}."""
+        return {"policy": self.name, **self.params}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PolicySpec":
+        d = dict(d)
+        try:
+            name = d.pop("policy")
+        except KeyError:
+            raise ValueError(f"policy spec dict needs a 'policy' key: {d}")
+        if name not in _REGISTRY:
+            raise ValueError(_unknown_policy_msg(name))
+        return cls(name, d)
+
+    def with_params(self, **updates) -> "PolicySpec":
+        return PolicySpec(self.name, {**self.params, **updates})
+
+    @property
+    def label(self) -> str:
+        """Short human label for benchmark rows: name + the params that
+        distinguish it from the defaults.  Floats are formatted to 4
+        significant digits so calibrated values (C_theta = 1.5 c_f, eta =
+        0.05 / c_f) keep row names stable across backends/BLAS — tracked
+        BENCH rows must not rename on a last-ulp calibration shift."""
+        if not self.params:
+            return self.name
+        parts = [f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                 for k, v in sorted(self.params.items())]
+        return f"{self.name}({','.join(parts)})"
+
+
+def resolve_policy_spec(value) -> "PolicySpec | None":
+    """Normalize any user-facing spec form to PolicySpec-or-None: None, a
+    PolicySpec, a policy-name string, or the flat dict form."""
+    if value is None or isinstance(value, PolicySpec):
+        if isinstance(value, PolicySpec) and value.name not in _REGISTRY:
+            raise ValueError(_unknown_policy_msg(value.name))
+        return value
+    if isinstance(value, str):
+        if value not in _REGISTRY:
+            raise ValueError(_unknown_policy_msg(value))
+        return PolicySpec(value)
+    if isinstance(value, Mapping):
+        return PolicySpec.from_dict(value)
+    raise TypeError(f"cannot resolve a policy spec from {value!r}")
+
+
+def parse_policy_opts(opts) -> Dict[str, Any]:
+    """Parse CLI `--policy-opt key=value` pairs into builder kwargs.
+
+    One parser with the index layer (repro.index.base.parse_index_opts:
+    int -> float -> str coercion) plus a bool layer on top, so
+    `augmented=true k_prime=20 eta=0.5 mirror=negentropy` all land with
+    their natural types.
+    """
+    from repro.index.base import parse_index_opts
+
+    try:
+        out = parse_index_opts(opts)
+    except ValueError as e:
+        raise ValueError(str(e).replace("--index-opt", "--policy-opt"))
+    return {k: v.lower() == "true"
+            if isinstance(v, str) and v.lower() in ("true", "false") else v
+            for k, v in out.items()}
+
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_policy(name: str):
+    """Decorator registering `fn(spec, catalog, cost_model, *, oracle,
+    index_spec, mesh, seed) -> CachePolicy` under `name`."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def registered_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _unknown_policy_msg(name: str) -> str:
+    return (f"unknown policy {name!r}; registered: "
+            f"{', '.join(registered_policies())}")
+
+
+def build_policy(spec, catalog, cost_model: CostModel, *, oracle=None,
+                 index_spec=None, mesh=None, seed: int = 0) -> CachePolicy:
+    """Construct the policy a spec describes over `catalog`.
+
+    `cost_model` supplies (c_f, metric); `oracle` is the trace's shared
+    `ServerOracle` (baselines require one — built on demand in online
+    mode when omitted; AÇAI ignores it); `index_spec`/`mesh` route AÇAI's
+    candidate generation through the unified index registry / the sharded
+    multi-device step (baselines reject both — their serving is
+    oracle-exact by construction).  Unknown policies and bad params raise
+    ValueError/TypeError at build time.
+    """
+    if isinstance(spec, (str, Mapping)):
+        spec = resolve_policy_spec(spec)
+    try:
+        builder = _REGISTRY[spec.name]
+    except KeyError:
+        raise ValueError(_unknown_policy_msg(spec.name))
+    return builder(spec, catalog, cost_model, oracle=oracle,
+                   index_spec=index_spec, mesh=mesh, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# AÇAI through the batched JAX pipeline
+# ---------------------------------------------------------------------------
+
+def acai_config_from_spec(spec: PolicySpec,
+                          cost_model: Optional[CostModel] = None,
+                          index_spec=None) -> acai.AcaiConfig:
+    """Translate PolicySpec("acai", {...}) + a cost model into AcaiConfig.
+
+    Spec params: h (required), k, c_remote, c_local, eta (default
+    0.05 / c_f), mirror, rounding, round_every, debug — the same knobs
+    the fig harnesses sweep — plus c_f itself, so a serialized spec can
+    be self-contained (a `c_f` param overrides `cost_model`).
+    `augmented` is accepted and ignored (AÇAI's serving rule is the
+    augmented composition by definition)."""
+    p = dict(spec.params)
+    p.pop("augmented", None)   # AÇAI is the augmented serving rule
+    p.pop("batch", None)       # replay-level knob, not a config field
+    p.pop("seed", None)
+    c_f = p.pop("c_f", None)
+    if c_f is None:
+        if cost_model is None:
+            raise ValueError(
+                "acai policy spec needs a cost model: pass cost_model= or "
+                "put c_f in the spec params")
+        c_f = cost_model.c_f
+    try:
+        h = p.pop("h")
+    except KeyError:
+        raise ValueError("acai policy spec needs 'h' (cache capacity)")
+    k = p.pop("k", 10)
+    eta = p.pop("eta", None)
+    oma_kw = {kk: p.pop(kk) for kk in ("mirror", "rounding", "round_every")
+              if kk in p}
+    oma_kw["eta"] = float(eta) if eta is not None else 0.05 / float(c_f)
+    cfg = acai.AcaiConfig(
+        h=int(h), k=int(k), c_f=float(c_f),
+        c_remote=int(p.pop("c_remote", 64)),
+        c_local=int(p.pop("c_local", 16)),
+        oma=oma_lib.OMAConfig(**oma_kw),
+        index=index_spec, debug=bool(p.pop("debug", False)))
+    if p:
+        raise ValueError(f"unknown acai policy params: {sorted(p)}")
+    return cfg
+
+
+class AcaiPolicy:
+    """CachePolicy adapter over `repro.core.policy.AcaiCache`.
+
+    `serve_update_batch` is the cache's batched step (one OMA + rounding
+    update per mini-batch, DESIGN.md §6); `replay` runs the whole trace
+    through `make_replay_batched` — a single jitted lax.scan, bit-exact
+    with the pre-harness `make_replay` pipeline at batch = 1 — with p50
+    step latency measured on the jitted mini-batch step (the step is
+    pure, so timing it does not advance the replay state)."""
+
+    def __init__(self, spec: PolicySpec, catalog, cost_model: CostModel, *,
+                 oracle=None, index_spec=None, mesh=None, seed: int = 0):
+        import jax.numpy as jnp
+
+        del oracle  # AÇAI never consults the server oracle
+        self.spec = spec
+        self.batch = int(spec.params.get("batch", 1))
+        cfg = acai_config_from_spec(spec, cost_model, index_spec=index_spec)
+        self.cache = acai.AcaiCache(jnp.asarray(catalog), cfg, seed=seed,
+                                    mesh=mesh)
+        self.cfg = self.cache.cfg
+
+    k = property(lambda self: self.cfg.k)
+    c_f = property(lambda self: self.cfg.c_f)
+    h = property(lambda self: self.cfg.h)
+
+    def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        import jax.numpy as jnp
+
+        return self.cache.serve_update_batch(jnp.asarray(rs))
+
+    def serve_update(self, r, t=None) -> StepMetrics:
+        import jax.numpy as jnp
+
+        return self.cache.serve_update(jnp.asarray(r))
+
+    def normalized_gain(self, total_gain: float, t: int) -> float:
+        return self.cache.normalized_gain(total_gain, t)
+
+    def replay(self, reqs, ts=None, time_reps: int = 5) -> dict:
+        import jax
+        import jax.numpy as jnp
+
+        reqs = jnp.asarray(reqs)
+        t, b = reqs.shape[0], self.batch
+        tt = (t // b) * b
+        if self.cache.mesh is not None:
+            step = jax.jit(self.cache._sharded_step(b))
+        else:
+            step = jax.jit(acai.make_step_batched(self.cfg,
+                                                  self.cache._fn_batched, b))
+        state0 = self.cache.state  # replay from the cache's current state
+        _, m = step(state0, reqs[:b])            # compile + warmup
+        m.gain_int.block_until_ready()
+        times = []
+        for _ in range(time_reps):  # the step is pure: state0 untouched
+            t0 = time.time()
+            _, m = step(state0, reqs[:b])
+            m.gain_int.block_until_ready()
+            times.append(time.time() - t0)
+        replay = acai.make_replay_from_step(step, b)
+        state, m = replay(state0, reqs[:tt])
+        self.cache.state = state
+        return {
+            "gain": np.asarray(m.gain_int, np.float64),
+            "cost": np.asarray(m.cost, np.float64),
+            "served_local": np.asarray(m.served_local),
+            "hit": np.asarray(m.served_local) > 0,
+            "fetched": np.asarray(m.fetched),
+            "occupancy": np.asarray(m.occupancy, np.float64),
+            "p50_step_s": float(np.percentile(times, 50)),
+            "requests": int(tt),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Baselines through the batched mini-batch step
+# ---------------------------------------------------------------------------
+
+class BaselinePolicy:
+    """CachePolicy adapter over the sequential LRU-family baselines.
+
+    The update logic stays the exact sequential data-structure policy
+    (repro.core.baselines); serving costs and hit tests are vectorized
+    per mini-batch via `KeyValueCache.step_batch` (two float32 GEMMs per
+    batch instead of per-step python distance loops), and the server
+    answers come from the shared per-trace `ServerOracle` — built here in
+    online mode (answers computed on demand through the fused chunked
+    scan) when the caller does not pass one."""
+
+    def __init__(self, spec: PolicySpec, catalog, cost_model: CostModel, *,
+                 oracle=None, index_spec=None, mesh=None, seed: int = 0):
+        if index_spec is not None:
+            raise ValueError(
+                f"policy {spec.name!r} serves from the exact server oracle; "
+                f"index_spec only applies to 'acai'")
+        if mesh is not None:
+            raise ValueError(
+                f"policy {spec.name!r} is a sequential baseline; mesh= only "
+                f"applies to 'acai'")
+        self.spec = spec
+        p = dict(spec.params)
+        p.pop("batch", None)
+        cls = B.POLICIES[_BASELINE_CLASS[spec.name]]
+        try:
+            h = p.pop("h")
+        except KeyError:
+            raise ValueError(f"{spec.name} policy spec needs 'h'")
+        k = int(p.pop("k", 10))
+        # self-contained serialized specs (same contract as the acai twin):
+        # c_f / metric / seed params override the cost model / seed args
+        c_f = float(p.pop("c_f", cost_model.c_f))
+        metric = p.pop("metric", cost_model.metric)
+        seed = int(p.pop("seed", seed))
+        kmax = max(k, int(p.get("k_prime") or k), 1)
+        catalog = np.asarray(catalog, np.float32)
+        if oracle is None:
+            # online mode: answers computed per mini-batch; don't retain
+            # the whole answer history (the serving tier runs unbounded)
+            oracle = B.ServerOracle(catalog, kmax=max(kmax, 16),
+                                    retain_all=False)
+        if oracle.kmax < kmax:
+            raise ValueError(
+                f"shared oracle holds kmax={oracle.kmax} answers but "
+                f"{spec.name} needs {kmax} (k/k_prime)")
+        self.oracle = oracle
+        self.policy = cls(catalog, oracle, h=int(h), k=k, c_f=c_f,
+                          metric=metric, seed=seed, **p)
+        self._total_gain = 0.0
+        self._t = 0
+
+    k = property(lambda self: self.policy.k)
+    c_f = property(lambda self: self.policy.c_f)
+    h = property(lambda self: self.policy.h)
+
+    def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        rs = np.atleast_2d(np.asarray(rs, np.float32))
+        if ts is None:  # online mode: answer the new requests on demand
+            ts = self.oracle.extend(rs)
+        results = self.policy.step_batch(np.asarray(ts), rs)
+        self._total_gain += float(sum(r.gain for r in results))
+        self._t += len(results)
+        occ = float(len(self.policy.cached_object_ids()))
+        return StepMetrics(
+            gain_int=np.array([r.gain for r in results]),
+            gain_frac=np.array([r.gain for r in results]),
+            cost=np.array([r.cost for r in results]),
+            served_local=np.array([r.served_local for r in results],
+                                  np.int32),
+            fetched=np.array([r.fetched for r in results], np.int32),
+            occupancy=np.full(len(results), occ),
+            local_overflow=np.zeros(len(results), np.int32),
+        )
+
+    def serve_update(self, r, t=None) -> StepMetrics:
+        import jax.tree_util as jtu
+
+        ts = None if t is None else np.asarray([t])
+        m = self.serve_update_batch(np.atleast_2d(np.asarray(r)), ts)
+        return jtu.tree_map(lambda a: a[0], m)
+
+    def normalized_gain(self, total_gain: float, t: int) -> float:
+        return float(total_gain) / (self.k * self.c_f * max(t, 1))
+
+
+# `spec name -> baselines.POLICIES key` (the paper's display names)
+_BASELINE_CLASS = {
+    "lru": "LRU",
+    "sim_lru": "SIM-LRU",
+    "cls_lru": "CLS-LRU",
+    "rnd_lru": "RND-LRU",
+    "qcache": "QCACHE",
+}
+
+register_policy("acai")(AcaiPolicy)
+for _name in _BASELINE_CLASS:
+    register_policy(_name)(BaselinePolicy)
+
+
+def replay_trace(pol: CachePolicy, reqs, ts=None, *, batch: int = 8) -> dict:
+    """Drive a whole trace through `serve_update_batch`, timing each step.
+
+    The generic CachePolicy replay: loops mini-batches of `batch`
+    requests (the trace tail that does not fill a batch is dropped, same
+    convention as make_replay_batched) and assembles per-request metric
+    arrays + the p50 step latency.  Policies with a native `replay`
+    (AÇAI's jitted scan) are dispatched to it instead."""
+    if hasattr(pol, "replay"):
+        return pol.replay(reqs, ts)
+    reqs = np.asarray(reqs)
+    t = reqs.shape[0]
+    tt = (t // batch) * batch
+    if tt == 0:
+        raise ValueError(
+            f"trace of {t} requests is shorter than one mini-batch "
+            f"(batch={batch}); shrink batch or extend the trace")
+    out = {k: [] for k in ("gain", "cost", "served_local", "fetched",
+                           "occupancy")}
+    times = []
+    for s in range(0, tt, batch):
+        t0 = time.time()
+        # ts=None stays None per batch: the online-oracle path must fire
+        # (fabricating positions would index an empty answer table)
+        m = pol.serve_update_batch(reqs[s:s + batch],
+                                   None if ts is None else ts[s:s + batch])
+        times.append(time.time() - t0)
+        out["gain"].append(np.asarray(m.gain_int, np.float64))
+        out["cost"].append(np.asarray(m.cost, np.float64))
+        out["served_local"].append(np.asarray(m.served_local))
+        out["fetched"].append(np.asarray(m.fetched))
+        out["occupancy"].append(np.asarray(m.occupancy, np.float64))
+    res = {k: np.concatenate(v) for k, v in out.items()}
+    res["hit"] = res["served_local"] > 0
+    res["p50_step_s"] = float(np.percentile(times, 50)) if times else 0.0
+    res["requests"] = int(tt)
+    return res
+
+
+# Smallest sensible spec params per registered policy (fractions of a
+# second on a tiny trace).  The single source of truth for the
+# conformance test (tests/test_policy_api.py) and the scripts/smoke.sh
+# sweep — a new policy registers here once and both pick it up.  AÇAI
+# pins depround rounding so the occupancy-≤-h invariant is exact.
+TINY_POLICY_KWARGS = {
+    "acai": {"h": 16, "k": 4, "c_remote": 12, "c_local": 8, "eta": 0.05,
+             "rounding": "depround", "batch": 8},
+    "lru": {"h": 16, "k": 4},
+    "sim_lru": {"h": 16, "k": 4, "k_prime": 8, "c_theta": 1.5},
+    "cls_lru": {"h": 16, "k": 4, "k_prime": 8, "c_theta": 1.5},
+    "rnd_lru": {"h": 16, "k": 4, "k_prime": 8, "c_theta": 1.5},
+    "qcache": {"h": 16, "k": 4},
+}

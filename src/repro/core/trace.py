@@ -11,14 +11,35 @@ statistically matched stand-ins:
 * `amazon_like` — Gaussian-mixture clustered embeddings (product
   categories) + a non-stationary request process: a slow random walk over
   cluster preferences (temporal drift of review traffic).
+* `flash_crowd` — the SIFT-like stationary base process interrupted by
+  popularity shocks: during each shock window a small random object set
+  captures most of the traffic (breaking-news / viral-item bursts), then
+  the base popularity resumes.  Stresses how fast a policy re-learns
+  after an abrupt, transient shift.
+* `adversarial` — worst-case drift for LRU-style recency heuristics: the
+  catalog is sliced into well-separated regions and the request process
+  jumps between *maximally distant* regions in phases, so any policy
+  chasing recent requests keeps paying full misses.  This is the regime
+  where OMA's no-regret guarantee (Theorem IV.1) — and nothing weaker —
+  still holds.
 
-Both return (catalog (N,d), request embeddings (T,d), request ids (T,)).
-Requests are *for catalog points* (the k=1 exact target exists), matching
-the benchmark datasets where queries are held-out points of the same
-distribution — we optionally jitter the request embedding.
+Every generator returns (catalog (N,d), request embeddings (T,d),
+request ids (T,)).  Requests are *for catalog points* (the k=1 exact
+target exists), matching the benchmark datasets where queries are
+held-out points of the same distribution — we optionally jitter the
+request embedding.
+
+`TraceSpec` + `build_trace` mirror the index layer's `IndexSpec` +
+`build_index` (DESIGN.md §8/§9): a serializable (scenario name + kwargs)
+description that the experiment harness, CLI surfaces and provenance
+records all share.  Generators register via `register_trace`, so adding a
+scenario is a single registration.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Tuple
 
 import numpy as np
 
@@ -28,12 +49,45 @@ def _zipf_calibrate_beta(dist_rank: np.ndarray, zipf_a: float = 0.9) -> float:
 
     Matching the log-log slope of the ranked popularity curve: if ranked
     distances grow ~ rank^gamma then lambda_(rank) ~ rank^(-beta*gamma); we
-    want beta*gamma = a."""
+    want beta*gamma = a.
+
+    Robust to tiny catalogs: the body window [n//100+1, n//2) degenerates
+    below n ~ 200 (short or empty slice -> polyfit warnings / crashes), so
+    the fit widens to every rank when the window is under 8 points, and a
+    non-finite or non-positive slope falls back to gamma = 1 (beta =
+    zipf_a) instead of exploding."""
     n = dist_rank.shape[0]
+    if n < 2:
+        return float(zipf_a)
     ranks = np.arange(1, n + 1)
-    sel = slice(n // 100 + 1, n // 2)  # fit the body, ignore head/tail noise
-    gamma = np.polyfit(np.log(ranks[sel]), np.log(dist_rank[sel] + 1e-12), 1)[0]
+    lo, hi = n // 100 + 1, n // 2  # fit the body, ignore head/tail noise
+    if hi - lo < 8:  # tiny catalog: no body/tail distinction to exploit
+        lo, hi = 0, n
+    sel = slice(lo, hi)
+    with np.errstate(all="ignore"):
+        gamma = np.polyfit(np.log(ranks[sel]),
+                           np.log(dist_rank[sel] + 1e-12), 1)[0]
+    if not np.isfinite(gamma) or gamma <= 0:
+        gamma = 1.0
     return float(zipf_a / max(gamma, 1e-3))
+
+
+def _barycentric_popularity(catalog: np.ndarray, zipf_a: float) -> np.ndarray:
+    """The paper's IRM construction: lambda_i ∝ d_i^{-beta}, d_i = distance
+    from the catalog barycenter, beta Zipf-calibrated."""
+    bary = catalog.mean(axis=0, keepdims=True)
+    dist = np.linalg.norm(catalog - bary, axis=1)
+    beta = _zipf_calibrate_beta(np.sort(dist), zipf_a)
+    with np.errstate(all="ignore"):
+        lam = (dist + 1e-9) ** (-beta)
+        lam = lam / lam.sum()
+    if not np.isfinite(lam).all():
+        # degenerate catalogs can calibrate a huge beta and overflow the
+        # power; renormalise in log space (same distribution, no overflow)
+        log_lam = -beta * np.log(dist + 1e-9)
+        lam = np.exp(log_lam - log_lam.max())
+        lam = lam / lam.sum()
+    return lam
 
 
 def sift_like(
@@ -46,11 +100,7 @@ def sift_like(
 ):
     rng = np.random.default_rng(seed)
     catalog = rng.random((n, d), dtype=np.float32)
-    bary = catalog.mean(axis=0, keepdims=True)
-    dist = np.linalg.norm(catalog - bary, axis=1)
-    beta = _zipf_calibrate_beta(np.sort(dist))
-    lam = (dist + 1e-9) ** (-beta)
-    lam /= lam.sum()
+    lam = _barycentric_popularity(catalog, zipf_a)
     ids = rng.choice(n, size=t, p=lam)
     reqs = catalog[ids]
     if jitter > 0:
@@ -88,6 +138,196 @@ def amazon_like(
     return catalog, catalog[ids].copy(), ids
 
 
+def flash_crowd(
+    n: int = 20000,
+    d: int = 32,
+    t: int = 30000,
+    zipf_a: float = 0.9,
+    shocks: int = 4,
+    shock_len: float = 0.08,
+    shock_objects: int = 20,
+    shock_share: float = 0.8,
+    seed: int = 7,
+):
+    """Stationary SIFT-like base + `shocks` popularity shocks.
+
+    Shock windows (each `shock_len` of the trace, evenly spaced) reroute
+    `shock_share` of the traffic to a fresh random set of `shock_objects`
+    objects with internal Zipf(1) popularity; outside the windows the base
+    IRM process is untouched, so the paper's statistical-regularity
+    assumption holds piecewise but not globally."""
+    rng = np.random.default_rng(seed)
+    catalog = rng.random((n, d), dtype=np.float32)
+    lam = _barycentric_popularity(catalog, zipf_a)
+    ids = rng.choice(n, size=t, p=lam)
+
+    width = max(int(t * shock_len), 1)
+    shock_objects = min(shock_objects, n)
+    starts = np.linspace(0, max(t - width, 0), shocks + 2)[1:-1].astype(int)
+    w = (np.arange(shock_objects) + 1.0) ** -1.0
+    w /= w.sum()
+    for s in starts:
+        crowd = rng.choice(n, size=shock_objects, replace=False)
+        hot = rng.random(width) < shock_share
+        ids[s:s + width][hot] = crowd[
+            rng.choice(shock_objects, size=int(hot.sum()), p=w)]
+    return catalog, catalog[ids].copy(), ids
+
+
+def adversarial(
+    n: int = 20000,
+    d: int = 32,
+    t: int = 30000,
+    phases: int = 8,
+    phase_zipf: float = 0.6,
+    separation: float = 3.0,
+    seed: int = 11,
+):
+    """Worst-case drift: phase p concentrates every request on the region
+    farthest from phase p-1's region.
+
+    The catalog is `phases` unit cubes of equal population, placed along a
+    random direction with centers `separation` apart — well beyond the
+    within-cube spread, so each region's kNN answers live entirely inside
+    it.  The phase order alternates between the two extremes (0, P-1, 1,
+    P-2, ...): consecutive phases are near-maximally separated in
+    embedding space and a recency-driven cache is always wrong about
+    where the next burst lands.  Within a phase, requests are
+    Zipf(`phase_zipf`) over the region (some regularity for OMA to
+    exploit *inside* the phase)."""
+    rng = np.random.default_rng(seed)
+    catalog = rng.random((n, d), dtype=np.float32)
+    u = rng.normal(size=d).astype(np.float32)
+    u /= np.linalg.norm(u) + 1e-12
+    slabs = np.array_split(rng.permutation(n), phases)
+    for c, slab in enumerate(slabs):
+        catalog[slab] += (c * separation) * u
+
+    # alternate extremes: 0, P-1, 1, P-2, ... — consecutive phases live at
+    # opposite ends of the principal direction
+    seq = []
+    lo_i, hi_i = 0, phases - 1
+    while lo_i <= hi_i:
+        seq.append(lo_i)
+        if hi_i != lo_i:
+            seq.append(hi_i)
+        lo_i, hi_i = lo_i + 1, hi_i - 1
+
+    ids = np.empty(t, dtype=np.int64)
+    bounds = np.linspace(0, t, len(seq) + 1).astype(int)
+    for p, (a, b) in zip(seq, zip(bounds[:-1], bounds[1:])):
+        slab = slabs[p]
+        w = (np.arange(len(slab)) + 1.0) ** (-phase_zipf)
+        w /= w.sum()
+        ids[a:b] = slab[rng.choice(len(slab), size=b - a, p=w)]
+    return catalog, catalog[ids].copy(), ids
+
+
 def ranked_popularity(ids: np.ndarray, n: int) -> np.ndarray:
     counts = np.bincount(ids, minlength=n).astype(np.float64)
     return np.sort(counts)[::-1]
+
+
+# ---------------------------------------------------------------------------
+# TraceSpec registry (the workload twin of repro.index.base.IndexSpec)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Serializable workload selection: scenario name + generator kwargs.
+
+    `params` are passed verbatim to the registered generator, so valid
+    keys are exactly its keyword arguments — e.g.
+    ``TraceSpec("flash_crowd", {"n": 4000, "shocks": 6})``.  Round-trips
+    through a flat dict (`to_dict` / `from_dict`) so a spec can live in
+    benchmark grids, CLI flags and provenance records.
+    """
+
+    name: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", dict(self.params))
+        if "name" in self.params:
+            raise ValueError("'name' is the spec field, not a param")
+
+    def __hash__(self):
+        return hash((self.name, tuple(sorted(self.params.items()))))
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Flat dict form: {'name': scenario, **params}."""
+        return {"name": self.name, **self.params}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TraceSpec":
+        d = dict(d)
+        try:
+            name = d.pop("name")
+        except KeyError:
+            raise ValueError(f"trace spec dict needs a 'name' key: {d}")
+        if name not in _TRACES:
+            raise ValueError(_unknown_trace_msg(name))
+        return cls(name, d)
+
+    def with_params(self, **updates) -> "TraceSpec":
+        return TraceSpec(self.name, {**self.params, **updates})
+
+
+_TRACES: Dict[str, Callable] = {}
+
+
+def register_trace(name: str):
+    """Decorator registering `fn(**params) -> (catalog, reqs, ids)`."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _TRACES:
+            raise ValueError(f"trace scenario {name!r} already registered")
+        _TRACES[name] = fn
+        return fn
+
+    return deco
+
+
+def registered_traces() -> Tuple[str, ...]:
+    return tuple(sorted(_TRACES))
+
+
+def _unknown_trace_msg(name: str) -> str:
+    return (f"unknown trace scenario {name!r}; registered: "
+            f"{', '.join(registered_traces())}")
+
+
+def build_trace(spec, **overrides):
+    """Generate the (catalog, requests, ids) a spec describes.
+
+    Accepts a TraceSpec, a scenario-name string, or the flat dict form;
+    `overrides` (e.g. n=..., t=... size reductions from the harness) merge
+    over the spec params."""
+    if isinstance(spec, str):
+        spec = TraceSpec(spec)
+    elif isinstance(spec, Mapping):
+        spec = TraceSpec.from_dict(spec)
+    try:
+        fn = _TRACES[spec.name]
+    except KeyError:
+        raise ValueError(_unknown_trace_msg(spec.name))
+    return fn(**{**spec.params, **overrides})
+
+
+register_trace("sift_like")(sift_like)
+register_trace("amazon_like")(amazon_like)
+register_trace("flash_crowd")(flash_crowd)
+register_trace("adversarial")(adversarial)
+
+
+# Smallest sensible generator kwargs per scenario (fractions of a second
+# each).  The single source of truth for the policy-conformance test
+# (tests/test_policy_api.py) and the scripts/smoke.sh experiment sweep —
+# a new scenario registers here once and both pick it up.
+TINY_TRACE_KWARGS = {
+    "sift_like": {"n": 256, "d": 16, "t": 64},
+    "amazon_like": {"n": 256, "d": 16, "t": 64, "clusters": 8},
+    "flash_crowd": {"n": 256, "d": 16, "t": 64, "shocks": 2,
+                    "shock_objects": 8},
+    "adversarial": {"n": 256, "d": 16, "t": 64, "phases": 4},
+}

@@ -238,12 +238,44 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     return record
 
 
+def acai_cell_meta(mesh_kind: str, *, n_catalog: int, d: int, batch: int,
+                  k: int, h: int, eta: float, variant: str) -> dict:
+    """Static provenance fields of the AÇAI retrieval cell, kept in a
+    helper so tests can pin the record schema without compiling on a
+    512-device mesh (tests/test_policy_api.py)."""
+    from repro.compat import SHARD_MAP_IMPL
+    from repro.core.policy_api import PolicySpec
+
+    return {"arch": "acai-retrieval", "shape": f"retrieval_b{batch}",
+            "mesh": mesh_kind, "kind": "serve", "variant": variant,
+            "seq_len": n_catalog, "global_batch": batch,
+            "params_total": n_catalog * d, "params_active": n_catalog * d,
+            # which shard_map the compat shim resolved (provenance: the
+            # cell lowers on both the jax.shard_map and the experimental
+            # API — see repro/compat.py)
+            "shard_map_impl": SHARD_MAP_IMPL,
+            # index selection provenance (DESIGN.md §8): the cell lowers
+            # the exact per-shard scan — 'exact' is the spec-less
+            # perfect-recall configuration, same convention as
+            # launch/serve.py --remote-index exact.  An approximate cell
+            # would carry e.g. IndexSpec("ivf_sharded", ...).to_dict().
+            "index_spec": {"backend": "exact"},
+            # policy selection provenance (DESIGN.md §9), the twin knob:
+            # the cell lowers AÇAI's OMA retrieval step with these
+            # hyper-parameters — same serialized form as
+            # launch/serve.py --policy / --policy-opt.  c_f is included
+            # so the record is self-contained (round-trips into
+            # AcaiCache(catalog, PolicySpec.from_dict(...))).
+            "policy_spec": PolicySpec(
+                "acai", {"h": h, "k": k, "eta": eta, "c_f": 1.0,
+                         "batch": batch}).to_dict()}
+
+
 def run_acai_cell(mesh_kind: str, *, n_catalog: int = 2 ** 27, d: int = 128,
                   batch: int = 4096, c: int = 64, k: int = 10,
                   h: int = 2 ** 20, variant: str = "baseline") -> dict:
     """The paper-representative cell: one distributed AÇAI retrieval +
     OMA-update step over a 134M-object catalog sharded on the mesh."""
-    from repro.compat import SHARD_MAP_IMPL
     from repro.core.distributed import make_retrieval_step
 
     multi_pod = mesh_kind == "multi"
@@ -251,27 +283,16 @@ def run_acai_cell(mesh_kind: str, *, n_catalog: int = 2 ** 27, d: int = 128,
     msd = mesh_shape_dict(mesh)
     n_model = msd["model"]
     n_shard = n_catalog // n_model
-    record = {"arch": "acai-retrieval", "shape": f"retrieval_b{batch}",
-              "mesh": mesh_kind, "kind": "serve", "variant": variant,
-              "seq_len": n_catalog, "global_batch": batch,
-              "params_total": n_catalog * d, "params_active": n_catalog * d,
-              # which shard_map the compat shim resolved (provenance: the
-              # cell lowers on both the jax.shard_map and the experimental
-              # API — see repro/compat.py)
-              "shard_map_impl": SHARD_MAP_IMPL,
-              # index selection provenance (DESIGN.md §8): the cell lowers
-              # the exact per-shard scan — 'exact' is the spec-less
-              # perfect-recall configuration, same convention as
-              # launch/serve.py --remote-index exact.  An approximate cell
-              # would carry e.g. IndexSpec("ivf_sharded", ...).to_dict().
-              "index_spec": {"backend": "exact"}}
+    eta = 1e-2
+    record = acai_cell_meta(mesh_kind, n_catalog=n_catalog, d=d, batch=batch,
+                            k=k, h=h, eta=eta, variant=variant)
     t0 = time.time()
     try:
         # NOTE: the chunked-scan variant was measured and refuted (§Perf
         # C.1); the retrieval memory win is the Pallas l2_topk kernel on
         # TPU, so the XLA-level lowering is identical for both variants.
         step = make_retrieval_step(
-            mesh, n_shard=n_shard, d=d, c=c, k=k, c_f=1.0, h=h, eta=1e-2,
+            mesh, n_shard=n_shard, d=d, c=c, k=k, c_f=1.0, h=h, eta=eta,
             top_a=4096, batch_axes=batch_axes(multi_pod), scan_chunk=0)
         from jax.sharding import NamedSharding, PartitionSpec as P
         cat_sh = NamedSharding(mesh, P("model", None))

@@ -4,10 +4,13 @@ in front (the paper's edge-inference deployment).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --requests 40
 
-`--remote-index` selects the semantic-cache tier's remote-catalog index
-backend through the unified registry (DESIGN.md §8) and `--index-opt
-key=value` (repeatable) passes builder kwargs, e.g.:
+`--policy` selects the semantic-cache tier's cache policy through the
+unified policy registry (DESIGN.md §9) and `--policy-opt key=value`
+(repeatable) passes spec params; `--remote-index` selects AÇAI's
+remote-catalog index backend through the index registry (DESIGN.md §8)
+and `--index-opt key=value` passes builder kwargs, e.g.:
 
+  ... --policy sim_lru --policy-opt k_prime=8 --policy-opt augmented=true
   ... --remote-index nsw --index-opt beam=64 --index-opt steps=24
   ... --remote-index ivf --index-opt nlist=256 --index-opt nprobe=16
   ... --mesh-shards 4 --remote-index ivf_sharded --index-opt nlist=64
@@ -58,6 +61,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
 
 from repro.configs import ARCHS, SMOKE_ARCHS
+from repro.core.policy_api import (PolicySpec, parse_policy_opts,
+                                   registered_policies)
 from repro.index.base import (IndexSpec, parse_index_opts,
                               registered_backends)
 from repro.models import init_params
@@ -84,7 +89,30 @@ def main():
     ap.add_argument("--index-opt", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="index builder kwarg (repeatable), e.g. nlist=256")
+    ap.add_argument("--policy", default="acai",
+                    choices=registered_policies(),
+                    help="semantic-cache policy (unified policy registry, "
+                         "DESIGN.md §9)")
+    ap.add_argument("--policy-opt", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="policy spec param (repeatable), e.g. k_prime=8 "
+                         "augmented=true")
     args = ap.parse_args()
+
+    try:
+        policy_spec = PolicySpec(args.policy,
+                                 parse_policy_opts(args.policy_opt))
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if args.policy != "acai":
+        if args.remote_index != "exact":
+            raise SystemExit(
+                f"--policy {args.policy} serves from the exact server "
+                f"oracle; --remote-index only applies to acai")
+        if args.mesh_shards > 1:
+            raise SystemExit(
+                f"--policy {args.policy} is a sequential baseline; "
+                f"--mesh-shards only applies to acai")
 
     index_spec = None
     if args.remote_index != "exact":
@@ -151,7 +179,7 @@ def main():
 
     lm = SemanticCachedLM(params, cfg, catalog, payloads, gen_fn,
                           h=args.cache_size, k=4, mesh=mesh,
-                          index_spec=index_spec)
+                          index_spec=index_spec, policy_spec=policy_spec)
     for i in range(args.requests):
         toks = jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
                            jnp.int32)
@@ -159,9 +187,11 @@ def main():
     s = lm.stats
     tier = (f"sharded x{args.mesh_shards}" if mesh is not None
             else "single-device")
-    tier += f", index={(index_spec.to_dict() if index_spec else 'exact')}"
+    tier += f", policy={lm.policy_spec.to_dict()}"
+    if args.policy == "acai":
+        tier += f", index={(index_spec.to_dict() if index_spec else 'exact')}"
     print(f"semantic cache ({tier}): {s.requests} requests, "
-          f"{s.served_local}/{s.requests * lm.cache.cfg.k} objects local, "
+          f"{s.served_local}/{s.requests * lm.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")
 
 

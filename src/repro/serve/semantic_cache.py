@@ -1,11 +1,20 @@
-"""Semantic cache: AÇAI as the retrieval tier in front of LM inference.
+"""Semantic cache: a similarity-caching policy as the retrieval tier in
+front of LM inference.
 
 The deployment the paper motivates (refs [3]-[6], [20], [49]): an edge
 server receives prompts, embeds them, and runs a similarity search over a
-catalog of previously computed results.  AÇAI decides per-object whether
-to serve from the local store (cost = dissimilarity only) or compute /
-fetch remotely (cost = dissimilarity + c_f, where c_f is calibrated to the
-inference cost), and updates the local store with OMA.
+catalog of previously computed results.  The policy decides per-object
+whether to serve from the local store (cost = dissimilarity only) or
+compute / fetch remotely (cost = dissimilarity + c_f, where c_f is
+calibrated to the inference cost), and updates the local store.
+
+The policy is one config knob (`policy_spec`, DESIGN.md §9): AÇAI by
+default — the batched OMA pipeline, optionally over an approximate index
+(`index_spec`) or a device mesh — or any registered baseline
+(`sim_lru`, `qcache`, ...), which serves through an *online*
+`ServerOracle` (exact kNN computed per mini-batch via the fused chunked
+scan).  Every policy speaks the same `CachePolicy` step contract, so the
+serving tier is policy-agnostic.
 
 `embed_prompt` derives the request embedding from the LM's own token
 embedding table (mean pooled + normalised) — no extra encoder needed.
@@ -19,8 +28,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import oma as oma_lib
-from repro.core import policy as acai
+from repro.core import policy_api as policy_api
+from repro.core.costs import CostModel
 from repro.models.config import ModelConfig
 
 
@@ -40,13 +49,13 @@ class ServeStats:
 
 
 class SemanticCachedLM:
-    """AÇAI similarity cache wrapping a generate() callable."""
+    """A similarity cache wrapping a generate() callable."""
 
     def __init__(self, params, cfg: ModelConfig, catalog_embs: jax.Array,
                  catalog_payloads: list, generate_fn: Callable,
                  h: int = 64, k: int = 4, c_f: Optional[float] = None,
                  eta: Optional[float] = None, seed: int = 0, mesh=None,
-                 index_spec=None):
+                 index_spec=None, policy_spec=None):
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
@@ -61,26 +70,56 @@ class SemanticCachedLM:
         from repro.index.base import resolve_spec
 
         index_spec = resolve_spec(index_spec)
-        acfg = acai.AcaiConfig(
-            h=h, k=k, c_f=c_f, c_remote=max(4 * k, 16), c_local=max(k, 8),
-            oma=oma_lib.OMAConfig(eta=eta if eta is not None else 0.05 / c_f),
-            index=index_spec)
+        # policy_spec: cache-policy selection (repro.core.policy_api
+        # PolicySpec; flat-dict / name forms accepted) — None = AÇAI.
+        # The h/k/eta constructor args are defaults; spec params win.
+        spec = policy_api.resolve_policy_spec(policy_spec)
+        if spec is None:
+            spec = policy_api.PolicySpec("acai")
+        base = {"h": h, "k": k}
+        if spec.name == "acai":
+            # candidate widths follow the *effective* k (a spec k override
+            # wins over the constructor default)
+            k_eff = int(spec.params.get("k", k))
+            base.update(c_remote=max(4 * k_eff, 16), c_local=max(k_eff, 8))
+            if eta is not None:
+                base["eta"] = eta
+        elif eta is not None:
+            raise ValueError(f"eta only applies to the 'acai' policy, not "
+                             f"{spec.name!r}")
+        spec = policy_api.PolicySpec(spec.name, {**base, **spec.params})
+        if spec.name != "acai" and (index_spec is not None or mesh is not None):
+            raise ValueError(
+                f"policy {spec.name!r} serves from the exact server oracle; "
+                f"index_spec/mesh only apply to 'acai'")
         # mesh: shard the catalog scan + OMA over the mesh's `model` axis
         # (repro.core.distributed.make_step_sharded) — the multi-device
         # serving path; None = the single-device batched pipeline.
-        self.cache = acai.AcaiCache(catalog_embs, acfg, seed=seed, mesh=mesh)
+        self.policy = policy_api.build_policy(
+            spec, catalog_embs, CostModel(c_f=c_f), index_spec=index_spec,
+            mesh=mesh, seed=seed)
+        # back-compat: the underlying AcaiCache (None for baselines)
+        self.cache = getattr(self.policy, "cache", None)
         self.stats = ServeStats()
         self._embed_batch = jax.jit(jax.vmap(embed_prompt, in_axes=(None, 0)))
 
+    @property
+    def k(self) -> int:
+        return self.policy.k
+
+    @property
+    def policy_spec(self):
+        return self.policy.spec
+
     def query(self, prompt_tokens: jax.Array):
-        """Returns (payloads, metrics): the k most similar cached results,
-        each tagged local/remote; remote ones trigger generation."""
+        """Returns metrics: the k most similar cached results, each tagged
+        local/remote; remote ones trigger generation."""
         r = embed_prompt(self.params, prompt_tokens)
-        m = self.cache.serve_update(r)
+        m = self.policy.serve_update(r)
         self.stats.requests += 1
         self.stats.served_local += int(m.served_local)
         self.stats.total_gain += float(m.gain_int)
-        if int(m.served_local) < self.cache.cfg.k:
+        if int(m.served_local) < self.k:
             # at least one object must be produced/fetched remotely
             self.stats.generated += 1
             _ = self.generate_fn(prompt_tokens)
@@ -88,26 +127,26 @@ class SemanticCachedLM:
 
     def query_batch(self, prompts: list):
         """Batched entry point: embeds a whole request batch, runs one
-        AÇAI mini-batch step (single OMA + rounding update, DESIGN.md §6)
-        and triggers generation for each request not fully served locally.
-        Returns StepMetrics with a (B,) leading axis."""
+        policy mini-batch step (for AÇAI a single OMA + rounding update,
+        DESIGN.md §6) and triggers generation for each request not fully
+        served locally.  Returns StepMetrics with a (B,) leading axis."""
         if len({p.shape[0] for p in prompts}) == 1:
             # equal-length prompts: one vmapped embed dispatch
             rs = self._embed_batch(self.params, jnp.stack(prompts))
         else:
             rs = jnp.stack([embed_prompt(self.params, p) for p in prompts])
-        m = self.cache.serve_update_batch(rs)
+        m = self.policy.serve_update_batch(rs)
         served = [int(s) for s in m.served_local]
         self.stats.requests += len(prompts)
         self.stats.served_local += sum(served)
-        self.stats.total_gain += float(jnp.sum(m.gain_int))
+        self.stats.total_gain += float(jnp.sum(jnp.asarray(m.gain_int)))
         for p, s in zip(prompts, served):
-            if s < self.cache.cfg.k:
+            if s < self.k:
                 self.stats.generated += 1
                 _ = self.generate_fn(p)
         return m
 
     @property
     def nag(self) -> float:
-        return self.cache.normalized_gain(self.stats.total_gain,
-                                          self.stats.requests)
+        return self.policy.normalized_gain(self.stats.total_gain,
+                                           self.stats.requests)

@@ -1,0 +1,313 @@
+"""Unified policy API (DESIGN.md §9): CachePolicy conformance across every
+registered policy, PolicySpec round-tripping, batched-baseline parity with
+the sequential path, the augmented serving-rule invariant, harness
+bit-consistency at B = 1, and dry-run provenance."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import baselines as B
+from repro.core import oma, policy, trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel, calibrate_fetch_cost
+from repro.core.policy_api import (PolicySpec, build_policy,
+                                   parse_policy_opts, registered_policies)
+
+# tiny-trace / tiny-spec tables: the canonical kwargs live next to the
+# registries (shared with scripts/smoke.sh)
+from repro.core.policy_api import TINY_POLICY_KWARGS as TINY  # noqa: E402
+from repro.core.trace import TINY_TRACE_KWARGS  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog, reqs, _ = trace.sift_like(n=400, d=16, t=96, seed=0)
+    oracle = B.ServerOracle(catalog, reqs, kmax=16)
+    return catalog, reqs, CostModel(c_f=1.0), oracle
+
+
+# ---------------------------------------------------------------------------
+# batched step-contract conformance (all policies, one shared test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TINY))
+def test_step_contract(setup, name):
+    catalog, reqs, cm, oracle = setup
+    pol = build_policy(PolicySpec(name, TINY[name]), catalog, cm,
+                       oracle=oracle, seed=0)
+    assert isinstance(pol, PA.CachePolicy)
+    assert pol.spec.name == name
+    assert pol.k == 4 and pol.c_f == 1.0 and pol.h == 16
+
+    m = pol.serve_update_batch(reqs[:8], np.arange(8))
+    for field in policy.StepMetrics._fields:
+        assert np.asarray(getattr(m, field)).shape == (8,), (name, field)
+    assert np.isfinite(np.asarray(m.gain_int)).all()
+    assert (np.asarray(m.cost) >= -1e-5).all()
+    assert (np.asarray(m.served_local) <= pol.k).all()
+    # B = 1 view
+    m1 = pol.serve_update(reqs[8], 8)
+    assert np.asarray(m1.gain_int).shape == ()
+    nag = pol.normalized_gain(float(np.sum(np.asarray(m.gain_int))), 8)
+    assert np.isfinite(nag)
+
+
+@pytest.mark.parametrize("name", sorted(TINY))
+def test_occupancy_invariant(setup, name):
+    """Cache occupancy never exceeds h (AÇAI's tiny spec pins depround
+    rounding, which keeps sum x = h exactly)."""
+    catalog, reqs, cm, oracle = setup
+    pol = build_policy(PolicySpec(name, TINY[name]), catalog, cm,
+                       oracle=oracle, seed=0)
+    for s in range(0, 96, 8):
+        m = pol.serve_update_batch(reqs[s:s + 8], np.arange(s, s + 8))
+        assert (np.asarray(m.occupancy) <= pol.h + 1e-6).all(), name
+
+
+@pytest.mark.parametrize("name", sorted(set(TINY) - {"acai"}))
+def test_augmented_cost_never_worse(setup, name):
+    """The augmented serving rule (AÇAI's per-object composition grafted
+    onto the baseline's updates) can only lower the serving cost: the hit
+    logic — hence the trajectory — is unchanged, and the augmented answer
+    picks the cheapest copy per object from a superset of the plain
+    answer's options."""
+    catalog, reqs, cm, oracle = setup
+    plain = build_policy(PolicySpec(name, TINY[name]), catalog, cm,
+                         oracle=oracle, seed=0)
+    aug = build_policy(PolicySpec(name, {**TINY[name], "augmented": True}),
+                       catalog, cm, oracle=oracle, seed=0)
+    ts = np.arange(96)
+    m_p = PA.replay_trace(plain, reqs, ts, batch=8)
+    m_a = PA.replay_trace(aug, reqs, ts, batch=8)
+    assert (m_a["cost"] <= m_p["cost"] + 1e-6).all(), name
+    assert m_a["gain"].sum() >= m_p["gain"].sum() - 1e-6
+
+
+def test_lru_exact_hit_semantics(setup):
+    """LRU hits iff the request embedding is byte-identical to a cached
+    key; any novel request is a miss."""
+    catalog, reqs, cm, oracle = setup
+    pol = build_policy(PolicySpec("lru", TINY["lru"]), catalog, cm,
+                       oracle=oracle, seed=0)
+    m = pol.serve_update(reqs[0], 0)
+    assert not bool(np.asarray(m.served_local) > 0)  # cold miss
+    m = pol.serve_update(reqs[0], 0)                 # identical request
+    assert bool(np.asarray(m.served_local) > 0)
+    # a different request is a miss even if geometrically close
+    other = np.nextafter(reqs[1], np.inf).astype(np.float32)
+    m = pol.serve_update(other, 1)
+    assert not bool(np.asarray(m.served_local) > 0)
+
+
+def test_batched_matches_sequential(setup):
+    """step_batch (vectorized hit tests + serving costs) takes the same
+    hit decisions as the sequential per-step path."""
+    catalog, reqs, cm, oracle = setup
+    for name in ("SIM-LRU", "QCACHE", "CLS-LRU"):
+        kw = dict(h=24, k=4, c_f=1.0, seed=0)
+        if name != "QCACHE":
+            kw.update(k_prime=8, c_theta=1.5)
+        seq = B.POLICIES[name](catalog, oracle, **kw)
+        m_seq = B.run_policy(seq, reqs)
+        bat = B.POLICIES[name](catalog, oracle, **kw)
+        res = []
+        for s in range(0, 96, 16):
+            res.extend(bat.step_batch(np.arange(s, s + 16), reqs[s:s + 16]))
+        np.testing.assert_array_equal(
+            np.array([r.hit for r in res]), m_seq["hit"], err_msg=name)
+        np.testing.assert_allclose(
+            np.array([r.gain for r in res]), m_seq["gain"], rtol=1e-4,
+            atol=1e-4, err_msg=name)
+
+
+def test_oracle_fused_precompute_and_online(setup):
+    """The fused-scan oracle returns exact kNN (vs brute force) and the
+    online extend() path matches the precomputed table."""
+    catalog, reqs, cm, _ = setup
+    oracle = B.ServerOracle(catalog, reqs[:16], kmax=8)
+    q = reqs[:4].astype(np.float32)
+    d2 = ((q[:, None, :] - catalog[None].astype(np.float32)) ** 2).sum(-1)
+    for b in range(4):
+        np.testing.assert_allclose(np.sort(d2[b])[:8], oracle.d2[b],
+                                   rtol=1e-4, atol=1e-4)
+    online = B.ServerOracle(catalog, kmax=8)
+    ts = online.extend(reqs[:16])
+    assert list(ts) == list(range(16))
+    np.testing.assert_allclose(online.d2, oracle.d2, rtol=1e-5, atol=1e-5)
+    # memory-bounded chunking: a small budget still scans exactly
+    tiny = B.ServerOracle(catalog, reqs[:16], kmax=8, chunk=64)
+    np.testing.assert_allclose(tiny.d2, oracle.d2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# harness bit-consistency: AÇAI rows at B = 1 == the pre-harness pipeline
+# ---------------------------------------------------------------------------
+
+def test_acai_replay_b1_bit_consistent(setup):
+    catalog, reqs, cm, _ = setup
+    cat = jnp.asarray(catalog)
+    c_f = float(calibrate_fetch_cost(cat, kth=50, sample=128))
+    cfg = policy.AcaiConfig(h=24, k=4, c_f=c_f, c_remote=16, c_local=8,
+                            oma=oma.OMAConfig(eta=0.05 / c_f))
+    fn = policy.exact_candidate_fn(cat, cfg.c_remote, cfg.c_local)
+    _, m = policy.make_replay(cfg, fn)(
+        policy.init_state(400, cfg, seed=0), jnp.asarray(reqs))
+    spec = PolicySpec("acai", {"h": 24, "k": 4, "c_remote": 16,
+                               "c_local": 8, "eta": 0.05 / c_f, "batch": 1})
+    pol = build_policy(spec, catalog, CostModel(c_f=c_f), seed=0)
+    res = pol.replay(reqs)
+    np.testing.assert_array_equal(res["gain"],
+                                  np.asarray(m.gain_int, np.float64))
+    np.testing.assert_array_equal(res["cost"], np.asarray(m.cost, np.float64))
+    np.testing.assert_array_equal(res["served_local"],
+                                  np.asarray(m.served_local))
+
+
+# ---------------------------------------------------------------------------
+# PolicySpec serialization + registry + CLI parsing
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip():
+    spec = PolicySpec("sim_lru", {"h": 200, "k_prime": 20, "c_theta": 1.5,
+                                  "augmented": True})
+    d = spec.to_dict()
+    assert d == {"policy": "sim_lru", "h": 200, "k_prime": 20,
+                 "c_theta": 1.5, "augmented": True}
+    assert PolicySpec.from_dict(d) == spec
+    assert spec.with_params(k_prime=40).params["k_prime"] == 40
+    assert hash(spec) == hash(PolicySpec("sim_lru", dict(reversed(
+        list(spec.params.items())))))
+    assert spec.label.startswith("sim_lru(")
+
+
+def test_spec_errors(setup):
+    catalog, _, cm, _ = setup
+    with pytest.raises(ValueError, match="unknown policy"):
+        PolicySpec.from_dict({"policy": "fifo"})
+    with pytest.raises(ValueError, match="unknown policy"):
+        build_policy("fifo", catalog, cm)
+    with pytest.raises(ValueError, match="policy"):
+        PolicySpec.from_dict({"h": 8})
+    with pytest.raises(ValueError, match="spec field"):
+        PolicySpec("acai", {"policy": "acai"})
+    with pytest.raises(ValueError, match="needs 'h'"):
+        build_policy(PolicySpec("acai", {"k": 4}), catalog, cm)
+    with pytest.raises(ValueError, match="unknown acai policy params"):
+        build_policy(PolicySpec("acai", {"h": 8, "nlist": 4}), catalog, cm)
+    with pytest.raises(ValueError, match="index_spec"):
+        build_policy(PolicySpec("lru", {"h": 8}), catalog, cm,
+                     index_spec="flat")
+    with pytest.raises(ValueError, match="mesh"):
+        build_policy(PolicySpec("qcache", {"h": 8}), catalog, cm,
+                     mesh=object())
+
+
+def test_resolve_policy_spec():
+    assert PA.resolve_policy_spec(None) is None
+    spec = PolicySpec("acai", {"h": 8})
+    assert PA.resolve_policy_spec(spec) is spec
+    assert PA.resolve_policy_spec("qcache") == PolicySpec("qcache")
+    assert PA.resolve_policy_spec({"policy": "acai", "h": 8}) == spec
+    with pytest.raises(ValueError, match="unknown policy"):
+        PA.resolve_policy_spec("fifo")
+    with pytest.raises(TypeError):
+        PA.resolve_policy_spec(42)
+
+
+def test_parse_policy_opts():
+    assert parse_policy_opts(
+        ["k_prime=20", "c_theta=1.5", "augmented=true", "mirror=negentropy",
+         "round_every=1"]
+    ) == {"k_prime": 20, "c_theta": 1.5, "augmented": True,
+          "mirror": "negentropy", "round_every": 1}
+    assert parse_policy_opts([]) == {}
+    assert parse_policy_opts(None) == {}
+    with pytest.raises(ValueError, match="key=value"):
+        parse_policy_opts(["augmented"])
+
+
+def test_registry_complete():
+    """The six paper policies are registered; the tiny tables cover every
+    registered policy and trace scenario."""
+    assert set(registered_policies()) == {
+        "acai", "lru", "sim_lru", "cls_lru", "rnd_lru", "qcache"}
+    assert set(TINY) == set(registered_policies())
+    assert set(TINY_TRACE_KWARGS) == set(trace.registered_traces())
+    # every baseline spec name maps onto a sequential implementation
+    for name, key in PA._BASELINE_CLASS.items():
+        assert key in B.POLICIES, name
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: spec round-trip over arbitrary param dicts
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    keys = st.text("abcdefgh_", min_size=1, max_size=8).filter(
+        lambda s: s != "policy")
+    vals = st.one_of(st.integers(-1000, 1000),
+                     st.floats(-100, 100, allow_nan=False, width=32),
+                     st.booleans(), st.text("xyz01", max_size=6))
+
+    @settings(max_examples=60, deadline=None)
+    @given(name=st.sampled_from(sorted(registered_policies())),
+           params=st.dictionaries(keys, vals, max_size=6))
+    def check(name, params):
+        spec = PolicySpec(name, params)
+        d = spec.to_dict()
+        assert PolicySpec.from_dict(d) == spec
+        assert PolicySpec.from_dict(dict(d)) == spec
+        assert d["policy"] == name
+        assert spec.with_params(**params) == spec
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the experiment harness + dry-run provenance
+# ---------------------------------------------------------------------------
+
+def test_paper_ordering_on_tiny_stationary_trace(setup):
+    """The paper's qualitative claim at conformance scale: AÇAI's NAG is
+    at least every baseline's on the stationary sift-like trace."""
+    catalog, reqs, _, _ = setup
+    catalog, reqs, _ = trace.sift_like(n=400, d=16, t=512, seed=0)
+    cat = jnp.asarray(catalog)
+    c_f = float(calibrate_fetch_cost(cat, kth=50, sample=128))
+    cm = CostModel(c_f=c_f)
+    oracle = B.ServerOracle(catalog, reqs, kmax=16)
+    ts = np.arange(reqs.shape[0])
+    nags = {}
+    for name, kw in TINY.items():
+        kw = {**kw, "h": 40}
+        if name == "sim_lru" or name == "cls_lru" or name == "rnd_lru":
+            kw["c_theta"] = 1.5 * c_f
+        pol = build_policy(PolicySpec(name, kw), catalog, cm, oracle=oracle,
+                           seed=0)
+        res = PA.replay_trace(pol, reqs, ts, batch=8)
+        nags[name] = pol.normalized_gain(res["gain"].sum(), res["requests"])
+    for name, v in nags.items():
+        assert nags["acai"] >= v - 1e-9, (name, nags)
+
+
+def test_dryrun_records_policy_spec():
+    """launch/dryrun's AÇAI cell records policy_spec next to index_spec
+    and shard_map_impl, in the serialized PolicySpec form (pinned without
+    compiling on the 512-device mesh)."""
+    from repro.launch.dryrun import acai_cell_meta
+
+    meta = acai_cell_meta("single", n_catalog=1024, d=8, batch=16, k=4,
+                          h=64, eta=0.01, variant="baseline")
+    assert meta["index_spec"] == {"backend": "exact"}
+    assert meta["shard_map_impl"]
+    spec = PolicySpec.from_dict(meta["policy_spec"])
+    assert spec.name == "acai"
+    assert spec.params["h"] == 64 and spec.params["batch"] == 16
+    # the record is self-contained: it round-trips into an AcaiCache
+    catalog, _, _ = trace.sift_like(n=128, d=8, t=8, seed=0)
+    cache = policy.AcaiCache(jnp.asarray(catalog), spec)
+    assert cache.cfg.h == 64 and cache.cfg.c_f == 1.0

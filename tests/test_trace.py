@@ -1,0 +1,111 @@
+"""Trace generators + TraceSpec registry: determinism under a fixed seed,
+tiny-catalog robustness of the Zipf calibration, and spec round-trips."""
+
+import numpy as np
+import pytest
+
+from repro.core import trace
+from repro.core.trace import (TINY_TRACE_KWARGS, TraceSpec, build_trace,
+                              ranked_popularity, registered_traces)
+
+
+@pytest.mark.parametrize("name", sorted(registered_traces()))
+def test_deterministic_under_fixed_seed(name):
+    kw = TINY_TRACE_KWARGS[name]
+    c1, r1, i1 = build_trace(name, **kw)
+    c2, r2, i2 = build_trace(name, **kw)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(i1, i2)
+    # a different seed moves the requests
+    _, r3, i3 = build_trace(name, **{**kw, "seed": 99})
+    assert not np.array_equal(i1, i3)
+
+
+@pytest.mark.parametrize("name", sorted(registered_traces()))
+def test_contract_shapes(name):
+    kw = TINY_TRACE_KWARGS[name]
+    catalog, reqs, ids = build_trace(name, **kw)
+    n, t = kw["n"], kw["t"]
+    assert catalog.shape == (n, kw["d"]) and catalog.dtype == np.float32
+    assert reqs.shape == (t, kw["d"]) and reqs.dtype == np.float32
+    assert ids.shape == (t,)
+    assert ids.min() >= 0 and ids.max() < n
+    # requests are for catalog points (the exact k=1 target exists)
+    np.testing.assert_array_equal(reqs, catalog[ids])
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 50, 150, 199])
+def test_zipf_calibration_tiny_catalogs(n):
+    """The ranked-popularity fit window degenerates below n ~ 200; the
+    calibration must stay finite and the sampler usable."""
+    catalog, reqs, ids = trace.sift_like(n=n, d=4, t=32, seed=0)
+    assert np.isfinite(reqs).all()
+    assert ids.max() < n
+    beta = trace._zipf_calibrate_beta(np.sort(np.linalg.norm(
+        catalog - catalog.mean(0, keepdims=True), axis=1)))
+    assert np.isfinite(beta) and beta > 0
+
+
+def test_ranked_popularity_deterministic():
+    _, _, ids = trace.sift_like(n=500, d=8, t=2000, seed=3)
+    p1 = ranked_popularity(ids, 500)
+    p2 = ranked_popularity(ids, 500)
+    np.testing.assert_array_equal(p1, p2)
+    assert p1.shape == (500,)
+    assert (np.diff(p1) <= 0).all()          # sorted descending
+    assert p1.sum() == 2000
+    # the sift-like trace is head-heavy (Zipf-calibrated tail)
+    assert p1[:50].sum() > 0.3 * 2000
+
+
+def test_flash_crowd_shocks_shift_popularity():
+    """During shock windows a small object set dominates the traffic."""
+    kw = dict(n=2000, d=8, t=4000, shocks=2, shock_len=0.1,
+              shock_objects=10, shock_share=0.9, seed=7)
+    _, _, ids = trace.flash_crowd(**kw)
+    _, _, base_ids = trace.sift_like(n=2000, d=8, t=4000, seed=7)
+    # shock windows: evenly spaced, width 400 — inside one, the top-10
+    # objects take most of the traffic
+    width = 400
+    starts = np.linspace(0, 4000 - width, 4)[1:-1].astype(int)
+    for s in starts:
+        window = ids[s:s + width]
+        top10 = np.sort(np.bincount(window, minlength=2000))[-10:].sum()
+        assert top10 > 0.6 * width, (s, top10)
+
+
+def test_adversarial_phases_are_far_apart():
+    """Consecutive phases concentrate on well-separated catalog regions:
+    the mean embedding jumps by more than the within-phase spread."""
+    catalog, reqs, ids = trace.adversarial(n=2000, d=16, t=4000, phases=4,
+                                           seed=11)
+    bounds = np.linspace(0, 4000, 5).astype(int)
+    centers, spreads = [], []
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        emb = reqs[a:b]
+        centers.append(emb.mean(0))
+        spreads.append(np.linalg.norm(emb - emb.mean(0), axis=1).mean())
+    jumps = [np.linalg.norm(c1 - c0)
+             for c0, c1 in zip(centers[:-1], centers[1:])]
+    assert min(jumps) > np.mean(spreads), (jumps, spreads)
+
+
+def test_trace_spec_roundtrip_and_registry():
+    spec = TraceSpec("flash_crowd", {"n": 512, "shocks": 3})
+    assert TraceSpec.from_dict(spec.to_dict()) == spec
+    assert spec.with_params(shocks=5).params["shocks"] == 5
+    assert hash(spec) == hash(TraceSpec("flash_crowd",
+                                        {"shocks": 3, "n": 512}))
+    assert {"sift_like", "amazon_like", "flash_crowd",
+            "adversarial"} <= set(registered_traces())
+    c, r, i = build_trace(spec, t=32, d=8)          # overrides merge
+    assert c.shape == (512, 8) and r.shape == (32, 8)
+    with pytest.raises(ValueError, match="unknown trace"):
+        build_trace("zipfian")
+    with pytest.raises(ValueError, match="unknown trace"):
+        TraceSpec.from_dict({"name": "zipfian"})
+    with pytest.raises(ValueError, match="'name'"):
+        TraceSpec.from_dict({"n": 4})
+    with pytest.raises(ValueError, match="spec field"):
+        TraceSpec("sift_like", {"name": "sift_like"})
