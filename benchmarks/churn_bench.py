@@ -1,0 +1,177 @@
+"""Mutable-catalog churn sweep (DESIGN.md §10) — BENCH_churn.json.
+
+Two questions, one suite:
+
+* What does catalog churn cost?  `rolling_catalog` traces at increasing
+  `churn_rate` (insert+expire events per request), replayed through AÇAI
+  with exact candidates, AÇAI over an IVF index (stale-quantizer binning
+  between refreshes), and the strongest classical baseline (SIM-LRU, via
+  the online oracle).  Per row: NAG, hit ratio, p50 serving-step latency,
+  and the *separated* mutation/refresh wall time — churn overhead must
+  never hide inside the serving latency.
+* When does refreshing pay?  A `refresh_every` sweep at fixed churn for
+  the IVF-backed cache: frequent rebuilds restore index recall (NAG up)
+  but cost rebuild wall time (refresh_s up) — the amortization curve.
+
+The churn_rate = 0 AÇAI-exact row doubles as the static-consistency
+anchor: with no events the cache never leaves its static jitted path and
+the replay is bit-consistent with `make_replay_batched`
+(tests/test_mutable_index.py pins it; the bench asserts the cheap half).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import churn, policy, trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel, calibrate_fetch_cost
+from repro.core.trace import TraceSpec
+from repro.index import IndexSpec
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_churn.json"
+
+CHURN_RATES = (0.0, 0.02, 0.1, 0.5)
+REFRESH_SWEEP = (0, 1024, 256)   # requests between refreshes (0 = never)
+REFRESH_CHURN = 0.1
+WARM = 0.5
+BATCH = 8
+
+
+def _policies(c_f: float, h: int, k: int):
+    """(label, PolicySpec, index_spec) cells of the sweep."""
+    ivf = IndexSpec("ivf", {"nlist": 48, "nprobe": 10})
+    return (
+        ("acai-exact", PA.PolicySpec("acai", {"h": h, "k": k}), None),
+        ("acai-ivf", PA.PolicySpec("acai", {"h": h, "k": k}), ivf),
+        ("sim_lru", PA.PolicySpec("sim_lru",
+                                  {"h": h, "k": k, "k_prime": 2 * k,
+                                   "c_theta": 1.5 * c_f}), None),
+    )
+
+
+def _run_cell(label, spec, index_spec, catalog, reqs, events, cm, *,
+              refresh_every=0, seed=0):
+    # every cell starts on the warm prefix (the live window at t = 0), so
+    # rows are comparable across churn rates — at rate 0 the window just
+    # never moves
+    n0 = churn.warm_size(catalog.shape[0], WARM)
+    pol = PA.build_policy(spec, catalog[:n0], cm, index_spec=index_spec,
+                          seed=seed)
+    t0 = time.time()
+    res = churn.replay_with_churn(pol, catalog, reqs, events, batch=BATCH,
+                                  refresh_every=refresh_every)
+    wall = time.time() - t0
+    tt = res["requests"]
+    return {
+        "policy": spec.to_dict(), "label": label,
+        "index": index_spec.to_dict() if index_spec else "exact",
+        "refresh_every": refresh_every,
+        "events": res["events_applied"],
+        "nag": round(float(res["gain"].sum()) / (pol.k * pol.c_f * tt), 4),
+        "hit_ratio": round(float(res["hit"].mean()), 4),
+        "p50_step_us": round(res["p50_step_s"] * 1e6, 1),
+        "mutation_ms": round(res["mutation_s"] * 1e3, 1),
+        "refresh_ms": round(res["refresh_s"] * 1e3, 1),
+        "us_per_request": round(wall / tt * 1e6, 2),
+        "requests": tt,
+    }
+
+
+def main(full: bool = False, kind: str = None) -> None:
+    # `kind` exists for run.py's suite signature only: the churn sweep is
+    # pinned to rolling_catalog geometry (membership churn IS the
+    # variable under study), so a trace filter is rejected rather than
+    # silently ignored
+    if kind not in (None, "sift", "rolling_catalog"):
+        raise ValueError(
+            "the churn suite runs rolling_catalog only (its churn_rate is "
+            "the swept knob); --trace does not apply here")
+    n, t, d = (20000, 8192, 32) if full else (2000, 2048, 16)
+    h, k = (400, 10) if full else (64, 8)
+    n0 = churn.warm_size(n, WARM)
+    rows = []
+
+    import jax
+    import jax.numpy as jnp
+
+    for rate in CHURN_RATES:
+        tspec = TraceSpec("rolling_catalog",
+                          {"n": n, "d": d, "t": t, "churn_rate": rate,
+                           "warm": WARM, "seed": 17})
+        catalog, reqs, _ = trace.build_trace(tspec)
+        events = trace.rolling_catalog_events(**tspec.params)
+        c_f = float(calibrate_fetch_cost(jnp.asarray(catalog[:n0]),
+                                         kth=min(50, n0 - 1), sample=256))
+        cm = CostModel(c_f=c_f)
+        for label, spec, ispec in _policies(c_f, h, k):
+            row = _run_cell(label, spec, ispec, catalog, reqs, events, cm)
+            row.update(churn_rate=rate, trace=tspec.to_dict())
+            rows.append(row)
+            common.emit(
+                f"churn/rate{rate:g}/{label}", row["p50_step_us"],
+                f"NAG={row['nag']:.4f};hit={row['hit_ratio']:.3f};"
+                f"mut_ms={row['mutation_ms']:.0f}")
+        if rate == 0.0:
+            # cheap half of the static-consistency anchor (the full
+            # bitwise pin lives in tests/test_mutable_index.py): with no
+            # events the exact AÇAI replay must match the batched static
+            # replay's NAG to float tolerance
+            from repro.core import oma
+
+            cfg = policy.AcaiConfig(h=h, k=k, c_f=c_f,
+                                    oma=oma.OMAConfig(eta=0.05 / c_f))
+            replay = policy.make_replay_batched(
+                cfg, policy.exact_candidate_fn_batched(
+                    jnp.asarray(catalog[:n0]), cfg.c_remote, cfg.c_local),
+                BATCH)
+            _, m = replay(policy.init_state(n0, cfg, seed=0),
+                          jnp.asarray(reqs[:(t // BATCH) * BATCH]))
+            nag_static = float(np.sum(np.asarray(m.gain_int))) / (
+                k * c_f * ((t // BATCH) * BATCH))
+            anchor = next(r for r in rows
+                          if r["label"] == "acai-exact"
+                          and r["churn_rate"] == 0.0)
+            assert abs(round(nag_static, 4) - anchor["nag"]) < 1e-9, (
+                nag_static, anchor["nag"])
+            common.emit("churn/static-anchor", 0.0,
+                        f"NAG={nag_static:.4f} (== rate0 acai-exact row)")
+
+    # refresh-amortization curve: fixed churn, IVF-backed AÇAI
+    tspec = TraceSpec("rolling_catalog",
+                      {"n": n, "d": d, "t": t, "churn_rate": REFRESH_CHURN,
+                       "warm": WARM, "seed": 17})
+    catalog, reqs, _ = trace.build_trace(tspec)
+    events = trace.rolling_catalog_events(**tspec.params)
+    c_f = float(calibrate_fetch_cost(jnp.asarray(catalog[:n0]),
+                                     kth=min(50, n0 - 1), sample=256))
+    cm = CostModel(c_f=c_f)
+    _, spec, ispec = _policies(c_f, h, k)[1]          # acai-ivf
+    for every in REFRESH_SWEEP:
+        row = _run_cell("acai-ivf", spec, ispec, catalog, reqs, events, cm,
+                        refresh_every=every)
+        row.update(churn_rate=REFRESH_CHURN, trace=tspec.to_dict())
+        rows.append(row)
+        common.emit(
+            f"churn/refresh{every}/acai-ivf", row["p50_step_us"],
+            f"NAG={row['nag']:.4f};refresh_ms={row['refresh_ms']:.0f}")
+
+    BENCH_JSON.write_text(json.dumps(
+        {"full": full, "n": n, "d": d, "t": t, "warm": WARM, "h": h, "k": k,
+         "batch": BATCH, "backend": jax.default_backend(), "rows": rows},
+        indent=2) + "\n")
+    common.emit("churn/json", 0.0, str(BENCH_JSON.name))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    main(ap.parse_args().full)

@@ -34,9 +34,9 @@ def main() -> None:
                     help="print registered suites/grids/policies/traces")
     args = ap.parse_args()
 
-    from benchmarks import (backends_bench, distributed_bench, experiments,
-                            fig1_gain_vs_requests, fig2_gain_vs_h,
-                            fig3_gain_vs_cf, fig4_gain_vs_k,
+    from benchmarks import (backends_bench, churn_bench, distributed_bench,
+                            experiments, fig1_gain_vs_requests,
+                            fig2_gain_vs_h, fig3_gain_vs_cf, fig4_gain_vs_k,
                             fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
                             fig8_rounding, kernel_bench, regret, serve_bench)
 
@@ -64,6 +64,9 @@ def main() -> None:
         # unified-policy-API sweep: every registered policy × every
         # registered trace scenario — emits BENCH_experiments.json
         "experiments": (experiments.main, [None]),
+        # mutable-catalog sweep: rolling_catalog churn rates × policies +
+        # the refresh-amortization curve — emits BENCH_churn.json
+        "churn": (churn_bench.main, ["sift"]),
     }
 
     if args.list:

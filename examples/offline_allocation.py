@@ -5,16 +5,26 @@ average with DepRound, and compare the static allocation's gain against
 (a) the popularity heuristic and (b) AÇAI's own online gain — the averaged
 iterate should be a near-(1-1/e)-optimal *static* configuration.
 
+The workload comes from the TraceSpec registry and the OMA knobs from an
+AcaiConfig exactly as `PolicySpec("acai", ...)` would build it (this
+example intentionally stays one level below `build_policy` to expose the
+averaged iterate, which the CachePolicy step contract does not surface).
+
   PYTHONPATH=src python examples/offline_allocation.py
+  PYTHONPATH=src python examples/offline_allocation.py --tiny
 """
+
+import argparse
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import TraceSpec, build_trace
 from repro.core import gain as G
-from repro.core import oma, policy, rounding, trace
+from repro.core import policy, rounding
 from repro.core.costs import calibrate_fetch_cost
+from repro.core.policy_api import PolicySpec, acai_config_from_spec
 
 
 def static_gain(catalog, x, requests, k, c_f):
@@ -25,14 +35,17 @@ def static_gain(catalog, x, requests, k, c_f):
     return float(np.mean(vals))
 
 
-def main():
-    n, t, h, k = 3000, 4000, 100, 10
-    catalog_np, requests, _ = trace.sift_like(n=n, d=32, t=t, seed=0)
+def main(tiny: bool = False):
+    n, t, h, k = (400, 400, 24, 4) if tiny else (3000, 4000, 100, 10)
+    catalog_np, requests, _ = build_trace(
+        TraceSpec("sift_like", {"n": n, "d": 32, "t": t, "seed": 0}))
     catalog = jnp.array(catalog_np)
-    c_f = float(calibrate_fetch_cost(catalog, kth=50))
+    c_f = float(calibrate_fetch_cost(catalog, kth=min(50, n - 1)))
 
-    cfg = policy.AcaiConfig(h=h, k=k, c_f=c_f,
-                            oma=oma.OMAConfig(eta=0.05 / c_f))
+    # the serialized spec form of the same configuration (c_f rides in the
+    # spec, so the record is self-contained)
+    spec = PolicySpec("acai", {"h": h, "k": k, "c_f": c_f})
+    cfg = acai_config_from_spec(spec)
     fn = policy.exact_candidate_fn(catalog, cfg.c_remote, cfg.c_local)
     step = policy.make_step(cfg, fn)
 
@@ -65,6 +78,7 @@ def main():
     g_pop = static_gain(catalog, jnp.array(x_pop), requests, k, c_f)
 
     norm = k * c_f
+    print(f"policy spec: {spec.to_dict()}")
     print(f"static allocation from averaged OMA iterate: {g_acai / norm:.4f}")
     print(f"static popularity-top-h heuristic:           {g_pop / norm:.4f}")
     print(f"AÇAI online average gain:                    {online_avg / norm:.4f}")
@@ -72,4 +86,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-fast sizes (CI smoke)")
+    main(ap.parse_args().tiny)

@@ -1,51 +1,73 @@
 """Quickstart: AÇAI similarity caching on a synthetic SIFT-like trace.
 
-Builds a catalog, calibrates the fetching cost the paper's way (average
-distance of the 50th neighbour), replays a request trace through AÇAI and
-through the classical baselines, and prints the normalised average gain
-(Eq. 11) — reproducing the paper's headline result (Fig. 1) in miniature.
+Builds a catalog through the TraceSpec registry, calibrates the fetching
+cost the paper's way (average distance of the 50th neighbour), then
+replays the same trace through every registered policy — AÇAI (exact and
+over an IVF index selected by IndexSpec) and the classical baselines —
+via the unified PolicySpec/build_policy API (DESIGN.md §8/§9), printing
+the normalised average gain (Eq. 11): the paper's headline result
+(Fig. 1) in miniature.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py          # ~a minute on CPU
+  PYTHONPATH=src python examples/quickstart.py --tiny   # seconds (CI smoke)
 """
+
+import argparse
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import CostModel, PolicySpec, TraceSpec, build_policy, build_trace
 from repro.core import baselines as B
-from repro.core import oma, policy, trace
 from repro.core.costs import calibrate_fetch_cost
+from repro.core.policy_api import replay_trace
+from repro.index import IndexSpec
 
 
-def main():
-    n, t, h, k = 4000, 4000, 150, 10
-    catalog_np, requests, _ = trace.sift_like(n=n, d=32, t=t, seed=0)
-    catalog = jnp.array(catalog_np)
-    c_f = float(calibrate_fetch_cost(catalog, kth=50))
-    print(f"catalog N={n}, trace T={t}, cache h={h}, k={k}, c_f={c_f:.3f}\n")
+def main(tiny: bool = False):
+    n, t, h, k = (400, 400, 24, 4) if tiny else (4000, 4000, 150, 10)
+    tspec = TraceSpec("sift_like", {"n": n, "d": 32, "t": t, "seed": 0})
+    catalog, requests, _ = build_trace(tspec)
+    c_f = float(calibrate_fetch_cost(jnp.asarray(catalog),
+                                     kth=min(50, n - 1)))
+    print(f"trace {tspec.to_dict()}, cache h={h}, k={k}, c_f={c_f:.3f}\n")
 
-    # --- AÇAI -------------------------------------------------------------
-    cfg = policy.AcaiConfig(h=h, k=k, c_f=c_f, c_remote=64, c_local=16,
-                            oma=oma.OMAConfig(eta=0.05 / c_f))
-    replay = policy.make_replay(
-        cfg, policy.exact_candidate_fn(catalog, cfg.c_remote, cfg.c_local))
-    state, m = replay(policy.init_state(n, cfg), jnp.array(requests))
-    nag_acai = B.nag(np.array(m.gain_int), k, c_f)
-    print(f"{'ACAI':10s} NAG={nag_acai[-1]:.4f}  "
-          f"(local answers/req: {np.array(m.served_local)[-500:].mean():.1f}/{k})")
+    # one shared exact-kNN oracle per trace: every baseline reads it
+    oracle = B.ServerOracle(catalog, requests, kmax=max(2 * k, 16))
+    ts = np.arange(t)
 
-    # --- baselines ---------------------------------------------------------
-    oracle = B.ServerOracle(catalog_np, requests, kmax=64)
-    for name, cls in B.POLICIES.items():
-        kwargs = dict(h=h, k=k, c_f=c_f)
-        if name in ("SIM-LRU", "CLS-LRU", "RND-LRU"):
-            kwargs.update(k_prime=2 * k, c_theta=1.5 * c_f)
-        metrics = B.run_policy(cls(catalog_np, oracle, **kwargs), requests)
-        print(f"{name:10s} NAG={B.nag(metrics['gain'], k, c_f)[-1]:.4f}")
+    acai = PolicySpec("acai", {"h": h, "k": k, "batch": 8})
+    tuned = {"h": h, "k": k, "k_prime": 2 * k, "c_theta": 1.5 * c_f}
+    # (label, policy spec, index spec) — IndexSpec is the backend knob
+    # (flat | ivf | ivfpq | lsh | nsw), exercised on the second AÇAI cell
+    cells = [
+        ("acai (exact)", acai, None),
+        ("acai (ivf)", acai, IndexSpec("ivf", {"nlist": max(n // 60, 4),
+                                               "nprobe": 8})),
+        ("sim_lru", PolicySpec("sim_lru", tuned), None),
+        ("cls_lru", PolicySpec("cls_lru", tuned), None),
+        ("lru", PolicySpec("lru", {"h": h, "k": k}), None),
+        ("qcache", PolicySpec("qcache", {"h": h, "k": k}), None),
+    ]
 
-    print("\nNAG trajectory (ACAI):",
-          " ".join(f"{nag_acai[i]:.3f}" for i in
-                   [99, 499, 999, 1999, t - 1]))
+    curves = {}
+    for label, spec, ispec in cells:
+        pol = build_policy(spec, catalog, CostModel(c_f=c_f), oracle=oracle,
+                           index_spec=ispec, seed=0)
+        res = replay_trace(pol, requests, ts, batch=8)
+        curves[label] = B.nag(res["gain"], pol.k, pol.c_f)
+        print(f"{label:14s} NAG={curves[label][-1]:.4f}  "
+              f"(hit ratio {res['hit'].mean():.3f}, "
+              f"p50 step {res['p50_step_s'] * 1e6:.0f}us)")
+
+    marks = [i for i in (99, 499, 999, 1999, t - 1) if i < t]
+    print("\nNAG trajectory (acai exact):",
+          " ".join(f"{curves['acai (exact)'][i]:.3f}" for i in marks))
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-fast sizes (CI smoke)")
+    args = ap.parse_args()
+    main(args.tiny)

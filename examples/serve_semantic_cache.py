@@ -1,13 +1,17 @@
 """Serve a small LM with batched requests behind the AÇAI semantic cache.
 
 The end-to-end serving driver: a continuous-batching decode engine answers
-prompts; an AÇAI similarity cache in front serves repeat/near-duplicate
-queries from the edge store instead of recomputing, with the fetching cost
-calibrated to the cost of a generation.
+prompts; a similarity cache in front serves repeat/near-duplicate queries
+from the edge store instead of recomputing, with the fetching cost
+calibrated to the cost of a generation.  Policy and index selection go
+through the unified spec knobs (DESIGN.md §8/§9): `policy_spec` picks the
+cache policy, `index_spec` the remote-catalog ANN backend.
 
   PYTHONPATH=src python examples/serve_semantic_cache.py
+  PYTHONPATH=src python examples/serve_semantic_cache.py --tiny
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -15,18 +19,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SMOKE_ARCHS
+from repro.core import PolicySpec
+from repro.index import IndexSpec
 from repro.models import init_params
 from repro.serve import SemanticCachedLM, ServeEngine, generate
 
 
-def main():
+def main(tiny: bool = False):
     cfg = SMOKE_ARCHS["qwen1.5-0.5b"]
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
+    n_requests, n_docs = (8, 200) if tiny else (24, 600)
 
-    # continuous-batching engine: 24 requests through 4 slots
+    # continuous-batching engine
     engine = ServeEngine(params, cfg, batch=4, s_max=40)
-    for i in range(24):
+    for i in range(n_requests):
         prompt = jnp.asarray(rng.integers(0, cfg.vocab, 12), jnp.int32)
         engine.submit(i, prompt, max_tokens=6)
     t0 = time.time()
@@ -37,7 +44,7 @@ def main():
           f"in {time.time() - t0:.1f}s")
 
     # semantic cache over a catalog of precomputed results
-    catalog = jnp.asarray(rng.normal(size=(600, cfg.d_model)), jnp.float32)
+    catalog = jnp.asarray(rng.normal(size=(n_docs, cfg.d_model)), jnp.float32)
     catalog = catalog / jnp.linalg.norm(catalog, axis=1, keepdims=True)
     # c_f = distance of the 5th neighbour: a "close" server, where serving
     # far objects locally is NOT worth it -> misses trigger generations
@@ -45,21 +52,41 @@ def main():
     from repro.core.costs import calibrate_fetch_cost
     c_f = float(calibrate_fetch_cost(catalog, kth=5))
     lm = SemanticCachedLM(
-        params, cfg, catalog, [f"result-{i}" for i in range(600)],
+        params, cfg, catalog, [f"result-{i}" for i in range(n_docs)],
         generate_fn=lambda p: generate(params, cfg, p[None], steps=4),
-        h=48, k=4, c_f=c_f)
+        c_f=c_f,
+        # the two config knobs: swap "acai" for any registered baseline
+        # (sim_lru, qcache, ...) or the IVF spec for flat/lsh/nsw/ivfpq
+        policy_spec=PolicySpec("acai", {"h": 48, "k": 4}),
+        index_spec=IndexSpec("ivf", {"nlist": max(n_docs // 40, 4),
+                                     "nprobe": 6}))
 
     # zipf-repeating prompt stream: strong temporal locality => cache hits
     pool = [jnp.asarray(rng.integers(0, cfg.vocab, 12), jnp.int32)
             for _ in range(30)]
     w = (np.arange(30) + 1.0) ** -1.1
-    for _ in range(80):
+    n_queries = 16 if tiny else 80
+    for _ in range(n_queries):
         lm.query(pool[rng.choice(30, p=w / w.sum())])
+
+    # the catalog is mutable (DESIGN.md §10): admit freshly generated
+    # results online and expire the oldest documents, no rebuild
+    fresh = jnp.asarray(rng.normal(size=(4, cfg.d_model)), jnp.float32)
+    fresh = fresh / jnp.linalg.norm(fresh, axis=1, keepdims=True)
+    new_ids = lm.add_documents(fresh, [f"fresh-{i}" for i in range(4)])
+    lm.remove_documents(list(range(4)))
+    for _ in range(n_queries // 4):
+        lm.query(pool[rng.choice(30, p=w / w.sum())])
+
     s = lm.stats
-    print(f"semantic cache: {s.requests} reqs, "
-          f"{s.served_local}/{s.requests * 4} objects served locally, "
+    print(f"semantic cache (policy={lm.policy_spec.name}, "
+          f"docs +{len(new_ids)}/-4 online): {s.requests} reqs, "
+          f"{s.served_local}/{s.requests * lm.k} objects served locally, "
           f"{s.generated} fresh generations, NAG={lm.nag:.3f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-fast sizes (CI smoke)")
+    main(ap.parse_args().tiny)

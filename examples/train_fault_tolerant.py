@@ -18,15 +18,20 @@ from repro.train.fault import StragglerMonitor, TrainLoop
 
 # ~100M params: 12L, d=512, vocab=32k
 # full run: 12L/d512/32k vocab (~100M). CPU CI default below finishes in
-# ~2 min; pass --full for the 100M configuration.
+# ~2 min; pass --full for the 100M configuration, --tiny for the
+# seconds-fast smoke (2L/d128, a dozen steps).
 import sys
 FULL = "--full" in sys.argv
-CFG = ModelConfig(name="lm-100m", n_layers=12 if FULL else 4,
-                  d_model=512 if FULL else 256, n_heads=8, n_kv_heads=4,
-                  d_ff=2048 if FULL else 1024,
-                  vocab=32000 if FULL else 8000, remat=False)
-STEPS = 240 if FULL else 60
-CRASH_AT = 100 if FULL else 25
+TINY = "--tiny" in sys.argv
+CFG = ModelConfig(name="lm-100m",
+                  n_layers=12 if FULL else (2 if TINY else 4),
+                  d_model=512 if FULL else (128 if TINY else 256),
+                  n_heads=8, n_kv_heads=4,
+                  d_ff=2048 if FULL else (512 if TINY else 1024),
+                  vocab=32000 if FULL else (2000 if TINY else 8000),
+                  remat=False)
+STEPS = 240 if FULL else (12 if TINY else 60)
+CRASH_AT = 100 if FULL else (5 if TINY else 25)
 
 
 def main():
@@ -51,7 +56,8 @@ def main():
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         loop = TrainLoop(loop_step, {"params": params, "opt": opt_state},
-                         ckpt_dir, ckpt_every=40, monitor=StragglerMonitor())
+                         ckpt_dir, ckpt_every=4 if TINY else 40,
+                         monitor=StragglerMonitor())
         loop.run(STEPS, lambda s: dataset.batch(s))
         print(f"\nfinished {STEPS} steps with {loop.restarts} restart(s) "
               f"(crash injected at step {CRASH_AT}).")

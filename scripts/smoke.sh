@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 tests + a fast all-backends index-API conformance pass + a
-# 2-device sharded-serving smoke step, so neither the unified index
-# registry nor the distributed path can silently rot on machines without
-# accelerators.
+# mutable-catalog churn smoke + every example in tiny mode + a 2-device
+# sharded-serving smoke step, so neither the unified index registry, the
+# churn subsystem, the runnable entry points, nor the distributed path
+# can silently rot on machines without accelerators.
 #
 #   bash scripts/smoke.sh
 set -euo pipefail
@@ -75,6 +76,54 @@ for tname, tkw in trace.TINY_TRACE_KWARGS.items():
     print(f"  {tname:12s} NAG: " + " ".join(line))
 print("all-policies x all-traces smoke OK")
 EOF
+
+echo "== mutable-catalog churn smoke (DESIGN.md §10) =="
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+from repro.core import churn, oma, policy, trace
+from repro.core.trace import TINY_TRACE_KWARGS
+
+params = dict(TINY_TRACE_KWARGS["rolling_catalog"])
+n0 = churn.warm_size(params["n"], params["warm"])
+cfg = policy.AcaiConfig(h=16, k=4, c_f=1.0, c_remote=12, c_local=8,
+                        oma=oma.OMAConfig(eta=0.05, rounding="depround"))
+
+# churn_rate=0 must be bit-consistent with the static batched replay
+p0 = dict(params, churn_rate=0.0)
+catalog0, reqs0, _ = trace.build_trace("rolling_catalog", **p0)
+assert trace.rolling_catalog_events(**p0) == []
+cache0 = policy.AcaiCache(jnp.asarray(catalog0[:n0]), cfg, seed=0)
+res0 = churn.replay_with_churn(cache0, catalog0, reqs0, [], batch=8)
+st, m = policy.make_replay_batched(
+    cfg, policy.exact_candidate_fn_batched(jnp.asarray(catalog0[:n0]),
+                                           cfg.c_remote, cfg.c_local), 8)(
+    policy.init_state(n0, cfg, seed=0), jnp.asarray(reqs0))
+assert (res0["gain"] == np.asarray(m.gain_int)).all(), "churn0 != static"
+
+# under churn: every event applies, expired objects carry zero mass
+catalog, reqs, _ = trace.build_trace("rolling_catalog", **params)
+events = trace.rolling_catalog_events(**params)
+from repro.index import IndexSpec
+import dataclasses
+cfg_ivf = dataclasses.replace(cfg, index=IndexSpec("ivf", {"nlist": 8,
+                                                           "nprobe": 4}))
+cache = policy.AcaiCache(jnp.asarray(catalog[:n0]), cfg_ivf, seed=0)
+res = churn.replay_with_churn(cache, catalog, reqs, events, batch=8,
+                              refresh_every=32)
+assert res["events_applied"] == len(events) > 0
+removed = np.concatenate([ev[2] for ev in events])
+assert float(jnp.abs(cache.state.y[jnp.asarray(removed)]).sum()) == 0.0
+print(f"churn smoke OK ({len(events)} events, "
+      f"NAG={res['gain'].sum() / (cfg.k * cfg.c_f * res['requests']):.3f})")
+EOF
+
+echo "== examples (tiny mode) =="
+for ex in examples/*.py; do
+    echo "-- $ex --tiny"
+    python "$ex" --tiny > /dev/null
+done
+echo "examples OK"
 
 echo "== 2-device sharded AÇAI smoke =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \

@@ -71,6 +71,14 @@ class ServerOracle:
     in row chunks of `chunk` (derived so query_block × chunk stays inside
     the budget), float32 throughout — a 1M×128 catalog scans in ~64 MB
     blocks instead of a dense (B, N) float matrix.
+
+    Mutable catalog (DESIGN.md §10): `add_objects(embs)` appends rows (the
+    server learned new content) and `remove_objects(ids)` tombstones them
+    via a validity mask the fused scan honors — a removed object can never
+    appear in a kNN answer again.  Either mutation invalidates the retained
+    answer table (precomputed answers are stale against the new catalog):
+    stale `knn(t)` reads raise KeyError, and callers re-answer through
+    `extend` / the online ts=None path.
     """
 
     _QUERY_BLOCK = 512
@@ -87,12 +95,20 @@ class ServerOracle:
         self.chunk = chunk
         self.retain_all = retain_all
         self._cat_j = None  # device catalog, created on first scan
+        self._valid_j = None
+        self.valid = np.ones(n, bool)  # liveness mask (tombstones)
+        self._mutated = False
         self.t = 0
         self._base = 0  # trace position of table row 0
         self.ids = np.empty((0, self.kmax), np.int32)
         self.d2 = np.empty((0, self.kmax), np.float32)  # squared euclidean
         if requests is not None:
             self.extend(requests)
+
+    # device-catalog row quantum: a growing catalog is padded (dead rows)
+    # to multiples of this, so insertions re-jit the fused scan only when
+    # they cross a block boundary instead of on every shape change
+    _ROW_QUANTUM = 512
 
     def _scan(self, q: np.ndarray):
         """One fused top-kmax scan of the catalog: (B, d) float32 queries ->
@@ -102,11 +118,54 @@ class ServerOracle:
         from repro.kernels import ops
 
         if self._cat_j is None:
-            self._cat_j = jnp.asarray(self.catalog)
+            n = self.catalog.shape[0]
+            pad = ((-n) % self._ROW_QUANTUM) if self._mutated else 0
+            cat = (np.pad(self.catalog, ((0, pad), (0, 0))) if pad
+                   else self.catalog)
+            self._cat_j = jnp.asarray(cat)
+            self._valid_j = (jnp.asarray(np.pad(self.valid, (0, pad)))
+                             if self._mutated else None)
         d2, ids = ops.topk_l2_chunked(jnp.asarray(q), self._cat_j, self.kmax,
                                       chunk=min(self.chunk,
-                                                self.catalog.shape[0]))
+                                                self._cat_j.shape[0]),
+                                      valid=self._valid_j)
         return np.asarray(ids, np.int32), np.asarray(d2, np.float32)
+
+    # -- online catalog mutation (DESIGN.md §10) ----------------------------
+
+    def _invalidate_answers(self) -> None:
+        """Precomputed answers are stale against a mutated catalog: drop
+        the retained block so stale positions raise instead of silently
+        serving removed/outdated kNN sets."""
+        self._mutated = True
+        self._cat_j = None
+        self._base = self.t
+        self.ids = np.empty((0, self.kmax), np.int32)
+        self.d2 = np.empty((0, self.kmax), np.float32)
+
+    def add_objects(self, embs: np.ndarray) -> np.ndarray:
+        """Append new catalog rows; returns their (monotonic) ids."""
+        embs = np.atleast_2d(np.asarray(embs, np.float32))
+        ids = np.arange(self.catalog.shape[0],
+                        self.catalog.shape[0] + embs.shape[0], dtype=np.int32)
+        self.catalog = np.concatenate([self.catalog, embs])
+        self.valid = np.concatenate([self.valid, np.ones(len(ids), bool)])
+        self.kmax = min(max(self.kmax, 1), self.catalog.shape[0])
+        self._invalidate_answers()
+        return ids
+
+    def remove_objects(self, ids) -> None:
+        """Tombstone catalog rows: they vanish from every future answer."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(ids) == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.catalog.shape[0]:
+            raise ValueError(
+                f"remove_objects: ids outside [0, {self.catalog.shape[0]})")
+        if not self.valid[ids].all():
+            raise ValueError("remove_objects: some rows are already dead")
+        self.valid[ids] = False
+        self._invalidate_answers()
 
     def extend(self, requests: np.ndarray) -> np.ndarray:
         """Answer kNN for `requests` (B, d), append to the table, and
@@ -255,6 +314,19 @@ class KeyValueCache:
         if not self.entries:
             return np.empty((0,), np.int32)
         return np.unique(np.concatenate([e.value_ids for e in self.entries.values()]))
+
+    def drop_objects(self, ids) -> int:
+        """Invalidate cached entries referencing removed catalog objects
+        (mutable catalog, DESIGN.md §10): an entry whose value set lost a
+        member no longer answers its key correctly, so the whole entry is
+        evicted — the LRU logic refetches on the next miss.  Returns the
+        number of entries dropped."""
+        dead = set(int(i) for i in np.atleast_1d(np.asarray(ids)))
+        doomed = [eid for eid, e in self.entries.items()
+                  if dead.intersection(int(v) for v in e.value_ids)]
+        for eid in doomed:
+            del self.entries[eid]
+        return len(doomed)
 
     # -- batched distance tables -------------------------------------------
 

@@ -1,0 +1,129 @@
+"""Churn replay driver: a trace + an insert/expire schedule, one policy.
+
+The mutable-catalog harness (DESIGN.md §10): `replay_with_churn` drives
+any `CachePolicy` (or a bare `AcaiCache`) through a request trace while a
+`rolling_catalog_events`-style schedule mutates the catalog between
+mini-batch steps — insertions through the policy's `add_objects`,
+expiries through `remove_objects`, plus an optional periodic `refresh()`
+cadence.  Mutation, refresh, and step wall times are booked separately so
+the churn bench can show the refresh-amortization trade-off rather than
+one blended number.
+
+Row-id alignment: the policy is built on the trace catalog's warm prefix
+`catalog[:n0]` and the schedule inserts rows in ascending order, so the
+policy's monotonic id assignment reproduces the trace's row ids exactly —
+`replay_with_churn` asserts it (a mismatch means the caller built the
+policy on the wrong catalog slice).
+
+At churn_rate = 0 the schedule is empty: the policy never leaves its
+static jitted path, and an AÇAI replay is bit-consistent with
+`make_replay_batched` on the same trace (pinned by
+tests/test_mutable_index.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+
+def warm_size(n: int, warm: float) -> int:
+    """Live-window population of a rolling_catalog trace (shared rounding
+    with `trace.rolling_catalog_events`)."""
+    return max(int(round(warm * n)), 1)
+
+
+def replay_with_churn(pol, catalog: np.ndarray, reqs: np.ndarray,
+                      events: Sequence, *, batch: int = 8,
+                      refresh_every: int = 0) -> dict:
+    """Replay `reqs` through `pol` while `events` mutate the catalog.
+
+    Args:
+      pol: a CachePolicy (or AcaiCache) exposing `serve_update_batch`,
+        `add_objects`, `remove_objects` and `refresh`, built over the
+        trace catalog's warm prefix.
+      catalog: the full (N, d) object universe of the trace — insert
+        events read their embeddings here.
+      reqs: (T, d) request stream; the tail not filling a mini-batch is
+        dropped (the make_replay_batched convention).
+      events: [(step, insert_ids, remove_ids), ...] with ascending steps
+        (e.g. `trace.rolling_catalog_events(**spec.params)`); an event
+        fires before the mini-batch containing request `step`.  Events
+        landing in the truncated trace tail are applied after the last
+        mini-batch, so the catalog always ends in the schedule's final
+        state.
+      batch: requests per mini-batch step.
+      refresh_every: call `pol.refresh()` every that-many *requests*
+        (0 = never) — the amortization knob: frequent refresh restores
+        index recall but pays rebuild wall time.
+
+    Returns:
+      dict of per-request metric arrays (gain, cost, served_local, hit,
+      fetched, occupancy) plus `p50_step_s` (serving steps only),
+      `mutation_s` / `refresh_s` (total wall spent mutating/rebuilding),
+      `events_applied`, `requests`.
+    """
+    reqs = np.asarray(reqs)
+    t = reqs.shape[0]
+    tt = (t // batch) * batch
+    if tt == 0:
+        raise ValueError(
+            f"trace of {t} requests is shorter than one mini-batch "
+            f"(batch={batch})")
+    pending = sorted(events, key=lambda ev: ev[0])
+    out = {k: [] for k in ("gain", "cost", "served_local", "fetched",
+                           "occupancy")}
+    times, mutation_s, refresh_s, applied = [], 0.0, 0.0, 0
+    next_refresh = refresh_every
+    ev_i = 0
+    for s in range(0, tt, batch):
+        while ev_i < len(pending) and pending[ev_i][0] < s + batch:
+            _, ins, rem = pending[ev_i]
+            t0 = time.time()
+            if len(ins):
+                got = np.asarray(pol.add_objects(catalog[np.asarray(ins)]))
+                assert (got == np.asarray(ins)).all(), (
+                    f"row-id misalignment: schedule inserts {ins}, policy "
+                    f"assigned {got} — was the policy built on "
+                    f"catalog[:n_warm]?")
+            if len(rem):
+                pol.remove_objects(rem)
+            mutation_s += time.time() - t0
+            applied += 1
+            ev_i += 1
+        if refresh_every and s >= next_refresh:
+            t0 = time.time()
+            pol.refresh()
+            refresh_s += time.time() - t0
+            next_refresh += refresh_every
+        t0 = time.time()
+        m = pol.serve_update_batch(reqs[s:s + batch])
+        times.append(time.time() - t0)
+        out["gain"].append(np.asarray(m.gain_int, np.float64))
+        out["cost"].append(np.asarray(m.cost, np.float64))
+        out["served_local"].append(np.asarray(m.served_local))
+        out["fetched"].append(np.asarray(m.fetched))
+        out["occupancy"].append(np.asarray(m.occupancy, np.float64))
+    # drain events landing in the truncated trace tail (t % batch != 0)
+    # so the final catalog state always matches the schedule's end state
+    # and events_applied == len(events) unconditionally
+    while ev_i < len(pending):
+        _, ins, rem = pending[ev_i]
+        t0 = time.time()
+        if len(ins):
+            pol.add_objects(catalog[np.asarray(ins)])
+        if len(rem):
+            pol.remove_objects(rem)
+        mutation_s += time.time() - t0
+        applied += 1
+        ev_i += 1
+    res = {k: np.concatenate(v) for k, v in out.items()}
+    res["hit"] = res["served_local"] > 0
+    res["p50_step_s"] = float(np.percentile(times, 50)) if times else 0.0
+    res["mutation_s"] = mutation_s
+    res["refresh_s"] = refresh_s
+    res["events_applied"] = applied
+    res["requests"] = int(tt)
+    return res

@@ -27,6 +27,7 @@ in the augmented-catalog accounting — see repro.core.gain).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -131,6 +132,51 @@ def exact_candidate_fn(
     return per_request_view(
         exact_candidate_fn_batched(catalog, c_remote, c_local, metric)
     )
+
+
+@partial(jax.jit, static_argnames=("c_remote", "c_local", "metric"))
+def exact_mutable_candidates(
+    rs: jax.Array, x: jax.Array, catalog: jax.Array, alive: jax.Array,
+    c_remote: int, c_local: int, metric: str = "sqeuclidean",
+):
+    """Mutable-catalog twin of `exact_candidate_fn_batched` (DESIGN.md §10).
+
+    Same math, but the catalog slab and its liveness mask are *runtime*
+    arguments: online add/remove/refresh changes only array values, so the
+    serving step never retraces at fixed capacity (shapes move only on
+    capacity-doubling growth).  Tombstoned/unassigned rows scan as +inf
+    and resolve to invalid slots, so a removed object can never be served
+    or fetched.  With `alive` all-True the outputs match the static
+    generator exactly.
+
+    Returns (ids (B, C), dists (B, C), valid (B, C)) — the shared
+    candidate-slab layout (C = c_remote + c_local, id = N marks an invalid
+    slot, BIG_COST on its distance).
+    """
+    n = catalog.shape[0]
+    b = rs.shape[0]
+    d_full = pairwise_dissimilarity(rs, catalog, metric)         # (B, N)
+    d_full = jnp.where(alive[None, :], d_full, jnp.inf)
+    neg_r, ids_remote = jax.lax.top_k(-d_full, c_remote)
+    # a dead/unassigned row can only be selected when fewer than c_remote
+    # rows are live; flag it with the invalid sentinel n
+    ids_remote = jnp.where(jnp.isfinite(neg_r), ids_remote, n)
+    d_cached = jnp.where(x[None, :] > 0.5, d_full, jnp.inf)
+    _, ids_local = jax.lax.top_k(-d_cached, c_local)
+    ids = jnp.concatenate([ids_remote, ids_local], axis=1)
+    valid = dedup_mask_batched(ids, n)
+    # a "local" candidate slot is only valid if that object is cached (the
+    # x(dead) = 0 invalidation invariant also keeps removed rows out here)
+    cached_ok = jnp.concatenate(
+        [jnp.ones((b, c_remote), bool), x[ids_local] > 0.5], axis=1
+    )
+    valid = valid & cached_ok
+    d = jnp.where(
+        valid,
+        jnp.take_along_axis(d_full, jnp.clip(ids, 0, n - 1), axis=1),
+        BIG_COST,
+    )
+    return ids, d, valid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,36 +334,86 @@ def make_step_batched(
     its last request (zero on the rest); `occupancy` repeats the
     post-update value.
     """
-    scale = float(batch) if eta_scale is None else float(eta_scale)
-    cfg_up = dataclasses.replace(
-        cfg, oma=dataclasses.replace(cfg.oma, eta=cfg.oma.eta * scale)
-    )
+    cfg_up = scaled_config(cfg, batch, eta_scale)
 
     def step(state: CacheState, rs: jax.Array):
-        key, k_round = jax.random.split(state.key)
-        n = state.y.shape[0]
         ids, d, valid = candidate_fn_batched(rs, state.x)     # (B, C)
-        ids_c = jnp.clip(ids, None, n - 1)
-        x_cand = jnp.where(valid, state.x[ids_c], 0.0)
-        y_cand = jnp.where(valid, state.y[ids_c], 0.0)
-
-        served = gain_lib.serve_batch(d, x_cand, cfg.k, cfg.c_f)
-        gain_frac, g_cand = gain_lib.gain_and_subgradient_batch(
-            d, y_cand, cfg.k, cfg.c_f
-        )
-
-        g_full = (
-            jnp.zeros_like(state.y)
-            .at[ids_c.reshape(-1)]
-            .add(jnp.where(valid, g_cand, 0.0).reshape(-1) / batch)
-        )
-        y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg_up.oma)
-        return finish_step_batched(
-            cfg_up, state, key, k_round, batch, y_new, served.gain,
-            gain_frac, served.cost,
-            jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
+        return apply_candidates_batched(
+            cfg, cfg_up, state, batch, ids, d, valid,
             local_overflow=_overflow_counter(cfg, candidate_fn_batched,
                                              state.x))
+
+    return step
+
+
+def apply_candidates_batched(cfg: AcaiConfig, cfg_up: AcaiConfig,
+                             state: CacheState, batch: int, ids, d, valid,
+                             alive=None, local_overflow=None):
+    """Shared serve+update tail of every mini-batch step: consumes a
+    precomputed candidate slab (ids, d, valid) and runs serve (Eq. 2),
+    gain/subgradient (Eq. 55), the averaged OMA + projection update, and
+    `finish_step_batched`.  `make_step_batched` traces it right after its
+    candidate generator; the mutable-catalog step (`make_mutable_step`)
+    jits it standalone, with `alive` enforcing the invalidation invariant
+    (y = x = 0 on tombstoned rows, DESIGN.md §10).  One tail, two serving
+    modes — with `alive=None` the computation is exactly the static path's.
+    """
+    key, k_round = jax.random.split(state.key)
+    n = state.y.shape[0]
+    ids_c = jnp.clip(ids, None, n - 1)
+    x_cand = jnp.where(valid, state.x[ids_c], 0.0)
+    y_cand = jnp.where(valid, state.y[ids_c], 0.0)
+
+    served = gain_lib.serve_batch(d, x_cand, cfg.k, cfg.c_f)
+    gain_frac, g_cand = gain_lib.gain_and_subgradient_batch(
+        d, y_cand, cfg.k, cfg.c_f
+    )
+
+    g_full = (
+        jnp.zeros_like(state.y)
+        .at[ids_c.reshape(-1)]
+        .add(jnp.where(valid, g_cand, 0.0).reshape(-1) / batch)
+    )
+    y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg_up.oma)
+    if alive is not None:
+        # invalidation invariant: no fractional mass on dead rows (the
+        # Y_FLOOR clip would otherwise resurrect them with 1e-12 mass,
+        # and rounding could then physically cache a removed object)
+        y_new = jnp.where(alive, y_new, 0.0)
+    return finish_step_batched(
+        cfg_up, state, key, k_round, batch, y_new, served.gain,
+        gain_frac, served.cost,
+        jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
+        local_overflow=local_overflow)
+
+
+def scaled_config(cfg: AcaiConfig, batch: int,
+                  eta_scale: float | None = None) -> AcaiConfig:
+    """Mini-batch learning-rate scaling (DESIGN.md §6): one averaged OMA
+    step moves as far as `batch` sequential steps to first order."""
+    scale = float(batch) if eta_scale is None else float(eta_scale)
+    return dataclasses.replace(
+        cfg, oma=dataclasses.replace(cfg.oma, eta=cfg.oma.eta * scale))
+
+
+def make_mutable_step(cfg: AcaiConfig, batch: int,
+                      eta_scale: float | None = None) -> Callable:
+    """Jitted tail for the mutable-catalog serving mode (DESIGN.md §10):
+    (state, ids, d, valid, alive) -> (state', StepMetrics (B,)).
+
+    Candidate slabs are generated *eagerly* against the current index
+    structures (which mutate between steps, so they cannot be closed over
+    by a cached jit) and handed to this step; `alive` is the catalog's
+    liveness mask, threaded as a runtime argument so add/remove/refresh
+    never retraces at fixed capacity.  With `alive` all-True the state
+    advance matches `make_step_batched`'s exactly.
+    """
+    cfg_up = scaled_config(cfg, batch, eta_scale)
+
+    @jax.jit
+    def step(state: CacheState, ids, d, valid, alive):
+        return apply_candidates_batched(cfg, cfg_up, state, batch, ids, d,
+                                        valid, alive=alive)
 
     return step
 
@@ -384,7 +480,17 @@ class AcaiCache:
     that case (the sharded step owns candidate generation); `cfg.index`
     may name the sharded backend ("ivf_sharded", built through the same
     registry) or be None for the exact sharded scan; `sharded_kwargs`
-    (e.g. `scan_chunk`) further configure the step."""
+    (e.g. `scan_chunk`) further configure the step.
+
+    Online catalog mutation (DESIGN.md §10): `add_objects(vectors)` /
+    `remove_objects(ids)` / `refresh()` admit and expire objects without a
+    rebuild.  The first mutation flips serving to the mutable mode — eager
+    candidate slabs against the live structures plus the jitted
+    `make_mutable_step` tail — which never retraces under churn at fixed
+    capacity and enforces the invalidation invariant (tombstoned rows
+    carry zero y/x mass forever, so a removed object can neither be served
+    nor re-fetched).  Not yet supported with `mesh` or with explicit
+    `candidate_fn*` escape hatches."""
 
     def __init__(self, catalog: jax.Array, cfg: "AcaiConfig", candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
@@ -423,8 +529,18 @@ class AcaiCache:
         self.index = None  # the spec-built index (None = exact/escape hatch)
         self._sharded_kwargs = dict(sharded_kwargs or {})
         self._bsteps: dict[int, Callable] = {}
+        # mutable-catalog bookkeeping (DESIGN.md §10): the cache starts on
+        # the static jitted path and flips to the mutable two-stage path
+        # (eager candidates + jitted apply tail) on the first add/remove.
+        self.valid = jnp.ones((catalog.shape[0],), bool)
+        self._live = int(catalog.shape[0])
+        self._n_slots = int(catalog.shape[0])
+        self._mutated = False
+        self._mut_fn: Callable | None = None
+        self._mut_steps: dict[int, Callable] = {}
         explicit_fn = (candidate_fn is not None
                        or candidate_fn_batched is not None)
+        self._custom_fn = explicit_fn
         if explicit_fn and cfg.index is not None:
             import warnings
 
@@ -494,6 +610,9 @@ class AcaiCache:
                                  **self._sharded_kwargs)
 
     def serve_update(self, r: jax.Array) -> StepMetrics:
+        if self._mutated:  # B = 1 view of the mutable batch step
+            m = self.serve_update_batch(r[None, :])
+            return jax.tree_util.tree_map(lambda a: a[0], m)
         if self._step is None:  # lazy B = 1 view of the sharded step
             b1 = self._sharded_step(1)
 
@@ -508,9 +627,19 @@ class AcaiCache:
     def serve_update_batch(self, rs: jax.Array) -> StepMetrics:
         """Serve a request mini-batch (B, d): one OMA + rounding update for
         the whole batch, per-request StepMetrics (B,).  The jitted step is
-        cached per batch size."""
+        cached per batch size.  Once the catalog has mutated the step runs
+        in two stages (eager candidate slab against the live structures +
+        the jitted `make_mutable_step` tail)."""
         rs = jnp.atleast_2d(rs)
         b = rs.shape[0]
+        if self._mutated:
+            ids, d, valid = self._mut_fn(rs, self.state.x)
+            step = self._mut_steps.get(b)
+            if step is None:
+                step = make_mutable_step(self.cfg, b)
+                self._mut_steps[b] = step
+            self.state, metrics = step(self.state, ids, d, valid, self.valid)
+            return metrics
         step = self._bsteps.get(b)
         if step is None:
             if self.mesh is not None:
@@ -520,6 +649,130 @@ class AcaiCache:
             self._bsteps[b] = step
         self.state, metrics = step(self.state, rs)
         return metrics
+
+    # -- online catalog mutation (DESIGN.md §10) ----------------------------
+
+    def _check_mutable_supported(self) -> None:
+        """Reject mutation on configurations that cannot serve it — before
+        anything is touched, so a failed call leaves the cache exactly as
+        it was (still on the static jitted path)."""
+        if self._mutated:
+            return
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "online catalog mutation on a sharded mesh is not "
+                "implemented yet (ROADMAP open item) — churn the "
+                "single-device cache or rebuild the sharded one")
+        if self._custom_fn:
+            raise ValueError(
+                "AcaiCache was built with an explicit candidate_fn*: the "
+                "cache cannot rebuild a custom generator after catalog "
+                "mutation — drop the escape hatch or rebuild the cache")
+
+    def _enter_mutable(self) -> None:
+        """Flip from the static jitted path to the mutable serving mode
+        after a successful first mutation (the static path's traced
+        constants would serve the pre-mutation catalog forever)."""
+        if self._mutated:
+            return
+        if self.index is not None:
+            from repro.index.candidates import mutable_index_candidate_fn
+
+            self._mut_fn = mutable_index_candidate_fn(
+                self.index, self.cfg.c_remote, self.cfg.c_local,
+                h=self.cfg.h)
+        else:
+
+            def _exact(rs, x):
+                return exact_mutable_candidates(
+                    rs, x, self.catalog, self.valid, self.cfg.c_remote,
+                    self.cfg.c_local)
+
+            self._mut_fn = _exact
+        self._mutated = True
+
+    def _sync_capacity(self, new_ids) -> None:
+        """Grow the OMA state to the (possibly doubled) slab capacity and
+        admit the new rows at the uniform prior y = h / n_live (Alg. 1's
+        y_1 for the object, fresh-start semantics; the next projection
+        renormalises the small capacity excess)."""
+        cap = self.catalog.shape[0]
+        y, x = self.state.y, self.state.x
+        if y.shape[0] != cap:
+            y = jnp.pad(y, (0, cap - y.shape[0]))
+            x = jnp.pad(x, (0, cap - x.shape[0]))
+        prior = min(1.0, self.cfg.h / max(self._live, 1))
+        y = y.at[jnp.asarray(new_ids)].set(prior)
+        self.state = CacheState(y, x, self.state.t, self.state.key)
+
+    def add_objects(self, vectors) -> "np.ndarray":
+        """Admit new catalog objects online: append to the shared slab
+        (and the remote index's structures, when one is configured),
+        grow the OMA state, and seed the new rows with the uniform prior.
+        Returns their (monotonic, never-recycled) row ids."""
+        self._check_mutable_supported()
+        vectors = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        if self.index is not None:
+            ids = self.index.add(vectors)
+            self.catalog = self.index.embeddings
+            self.valid = self.index.valid
+        else:
+            from repro.index.base import slab_append
+
+            self.catalog = jnp.asarray(self.catalog, jnp.float32)
+            self.catalog, self.valid, ids = slab_append(
+                self.catalog, self.valid, self._n_slots, vectors)
+        self._n_slots += len(ids)
+        self._live += len(ids)
+        self._sync_capacity(ids)
+        self._enter_mutable()
+        return ids
+
+    def remove_objects(self, ids) -> None:
+        """Drop catalog objects online: tombstone the rows and zero their
+        fractional + physical cache mass (the invalidation invariant — a
+        removed object is never served, never fetched, and frees its cache
+        slot immediately; `make_mutable_step` keeps the rows at zero)."""
+        self._check_mutable_supported()
+        import numpy as np
+
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if self.index is not None:
+            self.index.remove(ids)
+            self.valid = self.index.valid
+        else:
+            if len(ids) and (ids.min() < 0 or ids.max() >= self._n_slots):
+                raise ValueError(
+                    f"remove_objects: ids must be assigned rows in "
+                    f"[0, {self._n_slots})")
+            if len(np.unique(ids)) != len(ids):
+                raise ValueError("remove_objects: duplicate ids in one "
+                                 "batch")
+            alive = np.asarray(self.valid[jnp.asarray(ids)])
+            if not alive.all():
+                raise ValueError(
+                    f"remove_objects: rows {ids[~alive].tolist()} are "
+                    f"already dead")
+            self.catalog = jnp.asarray(self.catalog, jnp.float32)
+            self.valid = self.valid.at[jnp.asarray(ids)].set(False)
+        self._live -= len(ids)
+        self._enter_mutable()
+        jid = jnp.asarray(ids)
+        self.state = CacheState(
+            self.state.y.at[jid].set(0.0), self.state.x.at[jid].set(0.0),
+            self.state.t, self.state.key)
+
+    def refresh(self) -> None:
+        """Rebuild the remote index's structures over the live rows
+        (tombstone compaction / quantizer re-train; see Index.refresh).
+        A no-op for exact candidates, whose masked scan never drifts."""
+        if self.index is not None and self._mutated:
+            self.index.refresh()
+
+    @property
+    def live_count(self) -> int:
+        """Live (non-tombstoned) catalog objects."""
+        return self._live
 
     @property
     def cached_ids(self):

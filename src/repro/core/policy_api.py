@@ -51,7 +51,12 @@ from repro.core.policy import StepMetrics
 
 @runtime_checkable
 class CachePolicy(Protocol):
-    """Batched cache policy over a fixed catalog.
+    """Batched cache policy over a catalog of object embeddings.
+
+    This is the one step contract every registered policy — AÇAI and the
+    five LRU-family baselines — speaks, so harnesses (`replay_trace`, the
+    experiment grids, the churn driver, the serving tier) never branch on
+    the policy name.
 
     Required surface (the conformance contract pinned by
     tests/test_policy_api.py):
@@ -62,15 +67,36 @@ class CachePolicy(Protocol):
       leading axis.  `ts` are trace positions into the policy's
       `ServerOracle` (baselines need them to read precomputed server
       answers; None means "online" — the oracle computes answers on
-      demand).  AÇAI ignores `ts`.
+      demand, which is also the only valid mode under catalog churn).
+      AÇAI ignores `ts`.
     * `spec: PolicySpec` — the spec the policy was built from.
     * `k: int`, `c_f: float`, `h: int` — the cost-model/capacity knobs
       every metric is normalised by.
-    * `normalized_gain(total_gain, t) -> float` — NAG, Eq. (11).
+    * `normalized_gain(total_gain, t) -> float` — NAG, Eq. (11):
+      total gain / (k · c_f · t), the paper's headline metric.
+
+    Mutable-catalog surface (DESIGN.md §10; every registered policy
+    implements it, pinned by tests/test_mutable_index.py):
+
+    * `add_objects(vectors (B, d)) -> (B,) int32 ids` — admit new catalog
+      objects online (monotonic row ids, never recycled).
+    * `remove_objects(ids)` — expire objects online: they are dropped from
+      the cache state immediately and can never be served again.
+    * `refresh()` — rebuild approximate structures over the live rows
+      (AÇAI over an ANN index; a no-op for exact candidates and for the
+      oracle-exact baselines).
 
     Optional: `replay(reqs (T, d), ts) -> dict` — whole-trace replay
     (AÇAI runs a jitted lax.scan; the default helper `replay_trace` loops
     `serve_update_batch`).
+
+    Example::
+
+        pol = build_policy(PolicySpec("acai", {"h": 200}), catalog,
+                           CostModel(c_f=1.0))
+        m = pol.serve_update_batch(reqs[:8])          # one mini-batch step
+        new_ids = pol.add_objects(fresh_embeddings)   # online insertion
+        pol.remove_objects(new_ids[:2])               # online expiry
     """
 
     spec: "PolicySpec"
@@ -89,13 +115,28 @@ class CachePolicy(Protocol):
 class PolicySpec:
     """Serializable policy selection: policy name + build kwargs.
 
-    `params` are passed verbatim to the registered builder, so valid keys
-    are exactly the builder's keyword arguments — e.g.
-    ``PolicySpec("sim_lru", {"k_prime": 20, "c_theta": 1.5,
+    The policy twin of `repro.index.base.IndexSpec` (DESIGN.md §9): one
+    value that names a policy and everything needed to rebuild it, usable
+    anywhere a config travels — experiment-grid rows, benchmark JSON,
+    `launch/serve.py --policy/--policy-opt`, dry-run provenance records,
+    `SemanticCachedLM(policy_spec=...)`.
+
+    `name` must be a registered policy (`registered_policies()`; today
+    ``acai | lru | sim_lru | cls_lru | rnd_lru | qcache``).  `params` are
+    passed verbatim to the registered builder, so valid keys are exactly
+    the builder's keyword arguments — e.g.
+    ``PolicySpec("sim_lru", {"h": 200, "k_prime": 20, "c_theta": 1.5,
     "augmented": True})`` or ``PolicySpec("acai", {"h": 200, "eta":
-    0.05})``.  Round-trips through a flat dict (`to_dict` / `from_dict`)
-    so a spec can live in CLI flags, benchmark grids and dry-run records:
-    ``{"policy": "sim_lru", "k_prime": 20, ...}``.
+    0.05, "batch": 8})``.  Common params: ``h`` (required — cache
+    capacity in objects), ``k`` (answers per request), ``c_f`` (fetch
+    cost, overrides the build-time CostModel so a serialized spec is
+    self-contained), ``augmented`` (every baseline: AÇAI's serving rule
+    over the baseline's updates, Fig. 7), ``seed``.
+
+    Round-trips through a flat dict (`to_dict` / `from_dict`) with the
+    name under the ``"policy"`` key: ``{"policy": "sim_lru", "k_prime":
+    20, ...}``; `with_params` derives sweep variants; `label` renders a
+    stable human-readable row name for benchmark tables.
     """
 
     name: str
@@ -205,13 +246,32 @@ def build_policy(spec, catalog, cost_model: CostModel, *, oracle=None,
                  index_spec=None, mesh=None, seed: int = 0) -> CachePolicy:
     """Construct the policy a spec describes over `catalog`.
 
-    `cost_model` supplies (c_f, metric); `oracle` is the trace's shared
-    `ServerOracle` (baselines require one — built on demand in online
-    mode when omitted; AÇAI ignores it); `index_spec`/`mesh` route AÇAI's
-    candidate generation through the unified index registry / the sharded
-    multi-device step (baselines reject both — their serving is
-    oracle-exact by construction).  Unknown policies and bad params raise
-    ValueError/TypeError at build time.
+    Args:
+      spec: a `PolicySpec`, a registered policy name, or the flat-dict
+        form (``{"policy": "acai", "h": 200, ...}``) — all normalised
+        through `resolve_policy_spec`.
+      catalog: (N, d) object embeddings (numpy or jax; AÇAI moves them to
+        device, the baselines keep a float32 host copy).
+      cost_model: supplies (c_f, metric); spec params ``c_f`` / ``metric``
+        override it so serialized specs are self-contained.
+      oracle: the trace's shared `ServerOracle` — baselines require one
+        (built on demand in *online* mode when omitted, answers computed
+        per mini-batch through the fused chunked scan); AÇAI ignores it.
+      index_spec: route AÇAI's remote-catalog candidate generation through
+        the unified index registry (DESIGN.md §8); baselines reject it —
+        their serving is oracle-exact by construction.
+      mesh: serve AÇAI through the sharded multi-device step
+        (DESIGN.md §7); baselines reject it.
+      seed: rounding / randomized-policy seed (spec param ``seed`` wins).
+
+    Returns:
+      A `CachePolicy` — step it with `serve_update_batch`, replay a trace
+      with `replay_trace(pol, reqs, ts)`, mutate the catalog online with
+      `add_objects` / `remove_objects` / `refresh`.
+
+    Raises:
+      ValueError/TypeError at build time (before any jit tracing) for
+      unknown policies and bad params.
     """
     if isinstance(spec, (str, Mapping)):
         spec = resolve_policy_spec(spec)
@@ -305,6 +365,20 @@ class AcaiPolicy:
 
         return self.cache.serve_update(jnp.asarray(r))
 
+    # -- online catalog mutation (DESIGN.md §10) --------------------------
+
+    def add_objects(self, vectors):
+        """Admit new catalog objects online (delegates to AcaiCache)."""
+        return self.cache.add_objects(vectors)
+
+    def remove_objects(self, ids) -> None:
+        """Expire catalog objects online (tombstone + state invalidation)."""
+        self.cache.remove_objects(ids)
+
+    def refresh(self) -> None:
+        """Rebuild the remote index's structures over the live rows."""
+        self.cache.refresh()
+
     def normalized_gain(self, total_gain: float, t: int) -> float:
         return self.cache.normalized_gain(total_gain, t)
 
@@ -312,6 +386,10 @@ class AcaiPolicy:
         import jax
         import jax.numpy as jnp
 
+        if self.cache._mutated:
+            # the scanned replay would close over pre-mutation structures;
+            # mutated caches replay through the generic mini-batch loop
+            return replay_trace_steps(self, reqs, ts, batch=self.batch)
         reqs = jnp.asarray(reqs)
         t, b = reqs.shape[0], self.batch
         tt = (t // b) * b
@@ -430,6 +508,27 @@ class BaselinePolicy:
         m = self.serve_update_batch(np.atleast_2d(np.asarray(r)), ts)
         return jtu.tree_map(lambda a: a[0], m)
 
+    # -- online catalog mutation (DESIGN.md §10) --------------------------
+
+    def add_objects(self, vectors) -> np.ndarray:
+        """Admit new objects: the server oracle learns the rows (stale
+        precomputed answers are invalidated — serve with ts=None after a
+        mutation) and the policy's catalog reference follows."""
+        ids = self.oracle.add_objects(np.asarray(vectors, np.float32))
+        self.policy.catalog = self.oracle.catalog
+        return ids
+
+    def remove_objects(self, ids) -> None:
+        """Expire objects: tombstoned in the oracle (they vanish from all
+        future kNN answers) and cached entries referencing them are
+        evicted, so a removed object is never served again."""
+        self.oracle.remove_objects(ids)
+        self.policy.catalog = self.oracle.catalog
+        self.policy.drop_objects(ids)
+
+    def refresh(self) -> None:
+        """No-op: baseline serving is oracle-exact (nothing drifts)."""
+
     def normalized_gain(self, total_gain: float, t: int) -> float:
         return float(total_gain) / (self.k * self.c_f * max(t, 1))
 
@@ -458,6 +557,14 @@ def replay_trace(pol: CachePolicy, reqs, ts=None, *, batch: int = 8) -> dict:
     (AÇAI's jitted scan) are dispatched to it instead."""
     if hasattr(pol, "replay"):
         return pol.replay(reqs, ts)
+    return replay_trace_steps(pol, reqs, ts, batch=batch)
+
+
+def replay_trace_steps(pol: CachePolicy, reqs, ts=None, *,
+                       batch: int = 8) -> dict:
+    """The mini-batch stepping loop behind `replay_trace` (no native-replay
+    dispatch) — also the path a mutated AÇAI cache replays through, since
+    its scanned replay would close over pre-mutation structures."""
     reqs = np.asarray(reqs)
     t = reqs.shape[0]
     tt = (t // batch) * batch

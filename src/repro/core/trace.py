@@ -22,12 +22,22 @@ statistically matched stand-ins:
   chasing recent requests keeps paying full misses.  This is the regime
   where OMA's no-regret guarantee (Theorem IV.1) — and nothing weaker —
   still holds.
+* `rolling_catalog` — the mutable-catalog workload (DESIGN.md §10):
+  the catalog itself churns.  Only a warm window is live at t = 0;
+  a deterministic insert+expire stream (`rolling_catalog_events`, rate =
+  `churn_rate` events per request) rolls the window forward over the
+  object universe, and every request targets the *currently live* set.
+  At `churn_rate = 0` this degenerates to `sift_like` over the warm
+  window — the static-replay consistency anchor the churn bench pins.
 
 Every generator returns (catalog (N,d), request embeddings (T,d),
 request ids (T,)).  Requests are *for catalog points* (the k=1 exact
 target exists), matching the benchmark datasets where queries are
 held-out points of the same distribution — we optionally jitter the
-request embedding.
+request embedding.  For `rolling_catalog` the returned catalog is the
+whole object universe (live + not-yet-inserted + expired rows); the event
+schedule that says *when* each row goes live/dead is a pure function of
+the same params, re-derivable via `rolling_catalog_events`.
 
 `TraceSpec` + `build_trace` mirror the index layer's `IndexSpec` +
 `build_index` (DESIGN.md §8/§9): a serializable (scenario name + kwargs)
@@ -223,6 +233,82 @@ def adversarial(
     return catalog, catalog[ids].copy(), ids
 
 
+def rolling_catalog_events(
+    n: int = 20000,
+    t: int = 30000,
+    churn_rate: float = 0.02,
+    warm: float = 0.5,
+    **_unused,
+):
+    """Deterministic insert/expire schedule for `rolling_catalog`.
+
+    A pure function of (n, t, churn_rate, warm) — no RNG — so the trace
+    generator, the churn replay driver, the bench suite and the tests all
+    derive the *same* schedule from the same TraceSpec params (the extra
+    **kwargs swallow the generator-only params like d/zipf_a/seed, so the
+    full spec param dict can be splatted in).
+
+    The live window starts as rows [0, n0), n0 = round(warm * n).  E =
+    min(round(churn_rate * t), n - n0) events are spread evenly over the
+    trace; event i fires *before* request step ((i + 1) * t) // (E + 1),
+    inserts row n0 + i and expires row i — a rolling window of constant
+    population n0.  Returns a list of (step, insert_ids (np.int32),
+    remove_ids (np.int32)) with strictly increasing steps (events landing
+    on the same step are merged).
+    """
+    n0 = max(int(round(warm * n)), 1)
+    e = min(int(round(churn_rate * t)), n - n0)
+    merged: "dict[int, tuple[list, list]]" = {}
+    for i in range(e):
+        step = ((i + 1) * t) // (e + 1)
+        ins, rem = merged.setdefault(step, ([], []))
+        ins.append(n0 + i)
+        rem.append(i)
+    return [(step, np.asarray(ins, np.int32), np.asarray(rem, np.int32))
+            for step, (ins, rem) in sorted(merged.items())]
+
+
+def rolling_catalog(
+    n: int = 20000,
+    d: int = 32,
+    t: int = 30000,
+    churn_rate: float = 0.02,
+    warm: float = 0.5,
+    zipf_a: float = 0.9,
+    seed: int = 17,
+):
+    """Rolling-window catalog churn: requests always target the live set.
+
+    The object universe is SIFT-like (n points ~ U[0,1]^d) with the
+    paper's barycentric IRM popularity over the *whole* universe; at any
+    step only the rows the `rolling_catalog_events` schedule has made live
+    can be requested (popularity renormalised over the live window per
+    inter-event epoch).  Content "freshness" churn with stationary
+    geometry: the embedding distribution never drifts, only membership —
+    isolating the index/cache-invalidation cost from distribution shift
+    (amazon_like/flash_crowd cover the latter).
+    """
+    rng = np.random.default_rng(seed)
+    catalog = rng.random((n, d), dtype=np.float32)
+    lam = _barycentric_popularity(catalog, zipf_a)
+    events = rolling_catalog_events(n, t, churn_rate=churn_rate, warm=warm)
+    n0 = max(int(round(warm * n)), 1)
+    live = np.zeros(n, bool)
+    live[:n0] = True
+    ids = np.empty(t, dtype=np.int64)
+    prev = 0
+    for step, ins, rem in events + [(t, np.empty(0, np.int32),
+                                     np.empty(0, np.int32))]:
+        if step > prev:
+            p = np.where(live, lam, 0.0)
+            p = p / p.sum()
+            ids[prev:step] = rng.choice(n, size=step - prev, p=p)
+        live[ins] = True
+        live[rem] = False
+        prev = max(prev, step)
+    return catalog, catalog[ids].copy(), ids
+
+
 def ranked_popularity(ids: np.ndarray, n: int) -> np.ndarray:
     counts = np.bincount(ids, minlength=n).astype(np.float64)
     return np.sort(counts)[::-1]
@@ -236,11 +322,28 @@ def ranked_popularity(ids: np.ndarray, n: int) -> np.ndarray:
 class TraceSpec:
     """Serializable workload selection: scenario name + generator kwargs.
 
-    `params` are passed verbatim to the registered generator, so valid
-    keys are exactly its keyword arguments — e.g.
-    ``TraceSpec("flash_crowd", {"n": 4000, "shocks": 6})``.  Round-trips
-    through a flat dict (`to_dict` / `from_dict`) so a spec can live in
-    benchmark grids, CLI flags and provenance records.
+    The workload twin of `IndexSpec`/`PolicySpec` (DESIGN.md §8/§9): one
+    value naming a scenario and everything needed to regenerate it, so a
+    benchmark row or provenance record fully determines its trace.
+
+    `name` must be a registered scenario (`registered_traces()`; today
+    ``sift_like | amazon_like | flash_crowd | adversarial |
+    rolling_catalog``).  `params` are passed verbatim to the registered
+    generator, so valid keys are exactly its keyword arguments — e.g.
+    ``TraceSpec("flash_crowd", {"n": 4000, "shocks": 6})``.  Common
+    params: ``n`` (catalog size), ``d`` (embedding dim), ``t`` (trace
+    length), ``seed``, plus per-scenario knobs (``drift``, ``shocks``,
+    ``phases``, ``churn_rate`` ...).
+
+    Round-trips through a flat dict (`to_dict` / `from_dict`) with the
+    name under the ``"name"`` key, so a spec can live in benchmark grids,
+    CLI flags and provenance records; `with_params` derives size-reduced
+    or swept variants.
+
+    Example::
+
+        spec = TraceSpec("rolling_catalog", {"churn_rate": 0.05})
+        catalog, reqs, ids = build_trace(spec, n=2000, t=4096)
     """
 
     name: str
@@ -300,9 +403,22 @@ def _unknown_trace_msg(name: str) -> str:
 def build_trace(spec, **overrides):
     """Generate the (catalog, requests, ids) a spec describes.
 
-    Accepts a TraceSpec, a scenario-name string, or the flat dict form;
-    `overrides` (e.g. n=..., t=... size reductions from the harness) merge
-    over the spec params."""
+    Args:
+      spec: a `TraceSpec`, a registered scenario name, or the flat dict
+        form (``{"name": "sift_like", "n": 4000}``).
+      **overrides: generator kwargs merged *over* the spec params — the
+        experiment harness uses this for size reductions (n=..., t=...)
+        without rewriting the spec.
+
+    Returns:
+      (catalog (N, d) float32, requests (T, d) float32, ids (T,)) — the
+      object embeddings, the request stream, and each request's target
+      catalog row.  Generators are deterministic in their ``seed`` param,
+      so equal specs yield bitwise-equal traces.
+
+    Raises:
+      ValueError for unregistered scenario names (listing the registry).
+    """
     if isinstance(spec, str):
         spec = TraceSpec(spec)
     elif isinstance(spec, Mapping):
@@ -318,6 +434,7 @@ register_trace("sift_like")(sift_like)
 register_trace("amazon_like")(amazon_like)
 register_trace("flash_crowd")(flash_crowd)
 register_trace("adversarial")(adversarial)
+register_trace("rolling_catalog")(rolling_catalog)
 
 
 # Smallest sensible generator kwargs per scenario (fractions of a second
@@ -330,4 +447,6 @@ TINY_TRACE_KWARGS = {
     "flash_crowd": {"n": 256, "d": 16, "t": 64, "shocks": 2,
                     "shock_objects": 8},
     "adversarial": {"n": 256, "d": 16, "t": 64, "phases": 4},
+    "rolling_catalog": {"n": 256, "d": 16, "t": 64, "churn_rate": 0.1,
+                        "warm": 0.5},
 }

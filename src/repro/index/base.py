@@ -21,6 +21,30 @@ that pluggability first-class:
 
 Backends register themselves via `register_backend`, so adding a new one
 is a single registration — no cross-cutting edits in core/serve/launch.
+
+Mutable catalogs (DESIGN.md §10): every registered backend additionally
+implements the batched mutation contract —
+
+* `add(vectors (B, d)) -> (B,) int32 row ids` — online insertion.  New
+  rows are *appended* at the slab high-water mark (flat append, IVF/LSH
+  list append with capacity doubling, IVF-PQ encode-on-insert, NSW
+  incremental linking); row ids are assigned monotonically and **never
+  recycled**, so stale references (policy state, payload tables, cached
+  entries) can never alias a new object.
+* `remove(ids)` — online expiry via tombstones: the rows flip in the
+  (capacity,) `valid` mask, auxiliary structures are untouched, and every
+  query path masks tombstoned rows so they can never surface (the fused
+  scans fold them into their -1 invalid-slot convention).
+* `refresh()` — periodic rebuild: re-derive the auxiliary structures
+  (quantizers, inverted lists, buckets, graphs, entry points) from the
+  live rows only, restoring fresh-build recall after heavy churn.  Row
+  ids are stable across refresh (the slab is not compacted) — only the
+  structures are.
+
+Query paths take the mutable arrays (slab, mask, tables) as *runtime*
+jit arguments, so add/remove/refresh at fixed capacity never retrace;
+recompilation happens only when the capacity-doubling growth changes
+array shapes — O(log growth) times over an index's lifetime.
 """
 
 from __future__ import annotations
@@ -29,6 +53,8 @@ import dataclasses
 from typing import Any, Callable, Dict, Mapping, Protocol, Tuple, runtime_checkable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 @runtime_checkable
@@ -52,6 +78,16 @@ class Index(Protocol):
       (embedding slab + tables/codes), the cost side of the paper's
       quality/cost trade-off.
 
+    Mutation surface (implemented by every registered single-device
+    backend; see the module docstring and tests/test_mutable_index.py):
+
+    * `add(vectors (B, d)) -> (B,) int32 row ids` — append new objects.
+    * `remove(ids)` — tombstone rows (mask-only; ids never recycled).
+    * `refresh()` — rebuild auxiliary structures over the live rows.
+    * `valid: (capacity,) bool` — the tombstone mask; `capacity: int` and
+      `n_slots: int` (high-water mark) describe the slab; `n` counts
+      *live* rows only.
+
     Optional: `shard(mesh)` — return a mesh-sharded equivalent consumed by
     `repro.core.distributed.make_step_sharded` (today only the IVF family
     implements the sharded layout, via the `ivf_sharded` backend).
@@ -73,6 +109,131 @@ class Index(Protocol):
 def arrays_bytes(*arrays) -> int:
     """Sum of .nbytes over the given arrays (None entries skipped)."""
     return int(sum(a.size * a.dtype.itemsize for a in arrays if a is not None))
+
+
+# ---------------------------------------------------------------------------
+# Mutable-catalog slab machinery (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def grow_capacity(n_slots: int, needed: int, cap: int) -> int:
+    """Capacity-doubling growth schedule: the smallest power-of-two-style
+    doubling of `cap` that fits `n_slots + needed` rows.  Doubling keeps
+    reallocation (and the shape-driven jit retrace that comes with it)
+    amortised O(log growth) over an index's lifetime."""
+    new_cap = max(cap, 1)
+    while n_slots + needed > new_cap:
+        new_cap *= 2
+    return new_cap
+
+
+def slab_append(emb: jax.Array, valid: jax.Array, n_slots: int,
+                vectors) -> Tuple[jax.Array, jax.Array, np.ndarray]:
+    """Append rows to a capacity slab, growing by doubling when full.
+
+    Args:
+      emb: (cap, d) float32 embedding slab (rows >= n_slots are unused).
+      valid: (cap,) bool liveness mask (False on unused + tombstoned rows).
+      n_slots: current high-water mark (rows ever assigned).
+      vectors: (B, d) new embeddings.
+
+    Returns:
+      (emb', valid', ids): the (possibly grown) slab and mask with the new
+      rows written and marked live, plus their assigned row ids
+      (np.int32 (B,), = arange(n_slots, n_slots + B)).  Ids are never
+      recycled — tombstoned slots stay dead until a full rebuild.
+    """
+    vectors = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+    b = vectors.shape[0]
+    cap = emb.shape[0]
+    if n_slots + b > cap:
+        new_cap = grow_capacity(n_slots, b, cap)
+        emb = jnp.pad(emb, ((0, new_cap - cap), (0, 0)))
+        valid = jnp.pad(valid, (0, new_cap - cap), constant_values=False)
+    ids = np.arange(n_slots, n_slots + b, dtype=np.int32)
+    emb = emb.at[ids].set(vectors)
+    valid = valid.at[ids].set(True)
+    return emb, valid, ids
+
+
+class MutableRows:
+    """Capacity-slab + tombstone bookkeeping shared by every backend.
+
+    Owns `embeddings` (capacity, d), `valid` (capacity,) bool, the
+    high-water mark `n_slots` and the live count `n` — the state side of
+    the mutation contract.  Backends call `_append_rows` from `add` (slab
+    growth + id assignment) and `_tombstone_rows` from `remove`, and add
+    their structure-specific bookkeeping on top.
+    """
+
+    embeddings: jax.Array
+    valid: jax.Array
+
+    def _init_rows(self, embeddings) -> None:
+        self.embeddings = jnp.atleast_2d(
+            jnp.asarray(embeddings, jnp.float32))
+        self._n_slots = int(self.embeddings.shape[0])
+        self._live = self._n_slots
+        self.valid = jnp.ones((self._n_slots,), bool)
+
+    @property
+    def n(self) -> int:
+        """Live (indexed, non-tombstoned) objects."""
+        return self._live
+
+    @property
+    def capacity(self) -> int:
+        """Slab rows allocated (= the id-space bound every query result
+        respects; grows by doubling)."""
+        return int(self.embeddings.shape[0])
+
+    @property
+    def n_slots(self) -> int:
+        """High-water mark: rows ever assigned (live + tombstoned)."""
+        return self._n_slots
+
+    def live_rows(self) -> np.ndarray:
+        """Row ids of the live objects, ascending (refresh rebuilds walk
+        this order so a refreshed structure matches a fresh build on the
+        live rows modulo the id remap)."""
+        return np.nonzero(np.asarray(self.valid))[0]
+
+    def _append_rows(self, vectors) -> np.ndarray:
+        self.embeddings, self.valid, ids = slab_append(
+            self.embeddings, self.valid, self._n_slots, vectors)
+        self._n_slots += len(ids)
+        self._live += len(ids)
+        return ids
+
+    def _tombstone_rows(self, ids) -> np.ndarray:
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if len(ids) == 0:
+            return ids
+        if ids.min() < 0 or ids.max() >= self._n_slots:
+            raise ValueError(
+                f"remove: ids must be assigned rows in [0, {self._n_slots});"
+                f" got range [{ids.min()}, {ids.max()}]")
+        alive = np.asarray(self.valid[ids])
+        if not alive.all():
+            raise ValueError(
+                f"remove: rows {ids[~alive].tolist()} are already dead "
+                f"(tombstoned or never assigned)")
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError("remove: duplicate ids in one batch")
+        self.valid = self.valid.at[ids].set(False)
+        self._live -= len(ids)
+        return ids
+
+    def add(self, vectors) -> np.ndarray:
+        """Default `add`: slab append only (structure-free backends)."""
+        return self._append_rows(vectors)
+
+    def remove(self, ids) -> None:
+        """Tombstone `ids` (mask-only: every query path filters through
+        `valid`, so the rows can never surface again)."""
+        self._tombstone_rows(ids)
+
+    def refresh(self) -> None:
+        """Default refresh: nothing to rebuild (mask-exact backends)."""
 
 
 @dataclasses.dataclass(frozen=True)

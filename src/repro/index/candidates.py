@@ -19,6 +19,8 @@ full-catalog O(N·d) per-request scan of the seed implementation is gone.
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -126,3 +128,88 @@ def index_candidate_fn(
     return per_request_view(index_candidate_fn_batched(
         index, catalog, c_remote, c_local, h=h, local_cap=local_cap
     ))
+
+
+# ---------------------------------------------------------------------------
+# Mutable-catalog candidate generation (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("c_local", "cap", "c_remote", "rerank"))
+def _assemble_mutable_slab(rs, x, catalog, alive, ids_remote, d_remote,
+                           c_local: int, cap: int, c_remote: int,
+                           rerank: bool):
+    """Jitted slab assembly behind `mutable_index_candidate_fn`: takes the
+    index's (eagerly computed) remote candidates plus the live catalog
+    slab/mask as runtime arguments and produces the standard candidate
+    slab (ids, dists, valid) — same layout as index_candidate_fn_batched,
+    with tombstoned rows resolved to invalid slots throughout."""
+    n = catalog.shape[0]
+    b = rs.shape[0]
+    if rerank:
+        # exact re-rank of approximate-distance retrievals, tombstones
+        # folded to -1 inside the fused scan
+        d_remote, ids_remote = ops.ivf_scan_auto(
+            rs, catalog, ids_remote, c_remote, alive)
+    else:
+        # the index's own masking already excludes tombstones; belt and
+        # braces for foreign indexes that predate the mutation contract
+        dead = (ids_remote >= 0) & ~alive[jnp.clip(ids_remote, 0, n - 1)]
+        ids_remote = jnp.where(dead, -1, ids_remote)
+        d_remote = jnp.where(dead, jnp.inf, d_remote)
+    rmiss = ids_remote < 0
+    ids_remote = jnp.where(rmiss, n, ids_remote)             # n = invalid
+    d_remote = jnp.where(rmiss, BIG_COST, d_remote)
+
+    # local side: identical to the static generator — the x(dead) = 0
+    # invalidation invariant keeps tombstoned rows out of the gather
+    cached = jnp.nonzero(x > 0.5, size=cap, fill_value=-1)[0]    # (cap,)
+    cached_embs = catalog[jnp.clip(cached, 0, n - 1)]            # (cap, d)
+    d_loc = ops.pairwise_l2_xla(rs, cached_embs)                 # (B, cap)
+    ok = (cached >= 0) & alive[jnp.clip(cached, 0, n - 1)]
+    d_loc = jnp.where(ok[None, :], d_loc, jnp.inf)
+    neg, pos = jax.lax.top_k(-d_loc, c_local)
+    ids_local = jnp.where(jnp.isfinite(neg), cached[pos], -1)
+    d_local = -neg
+    lmiss = ids_local < 0
+    ids_local = jnp.where(lmiss, n, ids_local)
+    d_local = jnp.where(lmiss, BIG_COST, d_local)
+
+    ids = jnp.concatenate([ids_remote, ids_local], axis=1)
+    d = jnp.concatenate([d_remote, d_local], axis=1)
+    valid = dedup_mask_batched(ids, n)
+    d = jnp.where(valid, d, BIG_COST)
+    return ids, d, valid
+
+
+def mutable_index_candidate_fn(
+    index, c_remote: int, c_local: int,
+    h: int | None = None, local_cap: int | None = None,
+):
+    """Mutable-catalog candidate generator over an ANN index.
+
+    The static `index_candidate_fn_batched` closes over the index arrays
+    at trace time, so a mutated index would serve stale candidates from a
+    cached jit.  This variant runs in two stages per step instead: the
+    index's `query` (itself jitted over its *runtime* structure arrays)
+    executes eagerly, then `_assemble_mutable_slab` builds the candidate
+    slab with the current embedding slab + liveness mask as arguments —
+    zero retraces under churn at fixed capacity, one on each capacity
+    doubling.
+
+    Returns fn(rs (B, d), x (N,)) -> (ids, dists, valid) with the same
+    slab conventions as `index_candidate_fn_batched` (N = the slab
+    capacity, which `fn` reads from the live index on every call).
+    Carries `local_cap` like the static generator so the debug overflow
+    counter keeps working.
+    """
+    rerank = not getattr(index, "exact_distances", False)
+
+    def fn(rs: jax.Array, x: jax.Array):
+        d_remote, ids_remote = index.query(rs, c_remote)
+        cap = _local_cap(index.capacity, c_local, h, local_cap)
+        return _assemble_mutable_slab(
+            rs, x, index.embeddings, index.valid, ids_remote, d_remote,
+            c_local, cap, c_remote, rerank)
+
+    fn.local_cap = _local_cap(index.capacity, c_local, h, local_cap)
+    return fn

@@ -1,5 +1,11 @@
 """Exact (flat) kNN index — the recall=1 reference and the local-catalog
 workhorse (h <= a few thousand objects: a flat MXU scan beats any structure).
+
+Mutable catalog (DESIGN.md §10): the embedding table is a capacity slab
+with a tombstone mask — `add` appends (doubling growth), `remove` flips
+the mask, `refresh` is a no-op (the masked scan is already exact over the
+live rows).  The slab and mask are runtime jit arguments, so mutation at
+fixed capacity never retraces the query.
 """
 
 from __future__ import annotations
@@ -9,11 +15,34 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.index.base import arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes
 from repro.kernels import ops
 
 
-class FlatIndex:
+@partial(jax.jit, static_argnames=("k", "kernel", "masked"))
+def _flat_query(q: jax.Array, emb: jax.Array, valid: jax.Array, k: int,
+                kernel: str, masked: bool):
+    """(B, d) x (cap, d) slab -> (dists (B, k), ids (B, k)).
+
+    `masked=False` (the fresh-build fast path: every slab row live) skips
+    the tombstone mask entirely, so an unmutated index is bitwise the
+    pre-mutable-catalog scan."""
+    q = jnp.atleast_2d(q)
+    v = valid if masked else None
+    if kernel == "auto":
+        return ops.topk_l2_auto(q, emb, k, v)
+    if kernel == "pallas":
+        return ops.topk_l2(q, emb, k, valid=v)
+    d = ops.pairwise_l2_xla(q, emb)
+    if v is not None:
+        d = jnp.where(v[None, :], d, jnp.inf)
+    neg, ids = jax.lax.top_k(-d, k)
+    if v is not None:
+        ids = jnp.where(jnp.isfinite(neg), ids, -1)
+    return -neg, ids
+
+
+class FlatIndex(MutableRows):
     """Brute-force index.  kernel='xla' uses the fused-XLA distance path,
     'pallas' the Pallas kernel (interpret-mode on CPU), 'auto' dispatches
     by backend (pallas on TPU) via ops.topk_l2_auto."""
@@ -21,26 +50,18 @@ class FlatIndex:
     exact_distances = True  # query() distances need no re-rank
 
     def __init__(self, embeddings: jax.Array, kernel: str = "auto"):
-        self.embeddings = jnp.asarray(embeddings, jnp.float32)
+        self._init_rows(embeddings)
         self.kernel = kernel
 
-    @property
-    def n(self) -> int:
-        return self.embeddings.shape[0]
-
     def memory_bytes(self) -> int:
-        return arrays_bytes(self.embeddings)
+        return arrays_bytes(self.embeddings, self.valid)
 
-    @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
-        q = jnp.atleast_2d(q)
-        if self.kernel == "auto":
-            return ops.topk_l2_auto(q, self.embeddings, k)
-        if self.kernel == "pallas":
-            return ops.topk_l2(q, self.embeddings, k)
-        d = ops.pairwise_l2_xla(q, self.embeddings)
-        neg, ids = jax.lax.top_k(-d, k)
-        return -neg, ids
+        # masked only once a row has ever died or the slab has spare
+        # capacity — the fresh-build path stays bitwise identical
+        masked = self._live != self.capacity
+        return _flat_query(q, self.embeddings, self.valid, k, self.kernel,
+                           masked)
 
     def __hash__(self):  # allow use as a static jit argument
         return id(self)

@@ -4,6 +4,15 @@ JAX/TPU adaptation of the FAISS inverted-file layout: inverted lists are a
 dense (nlist, cap) id table padded with -1, so probing is a static gather —
 no pointer chasing, shapes jit/shard cleanly (the table shards row-wise over
 the `model` mesh axis at scale).
+
+Mutable catalog (DESIGN.md §10): `add` assigns new rows to their nearest
+*existing* centroid and appends to that inverted list (per-table capacity
+doubling when a list fills); `remove` tombstones rows — stale list entries
+are folded into the scan's -1 invalid-slot convention at query time via the
+validity mask; `refresh` re-trains the coarse quantizer and rebuilds the
+lists over the live rows only (row ids stay stable).  The quantizer drifts
+between refreshes (new objects are binned by stale centroids), which is
+exactly the recall-vs-refresh-cost trade-off the churn bench measures.
 """
 
 from __future__ import annotations
@@ -14,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
 
@@ -33,7 +42,41 @@ def build_invlists(assign: np.ndarray, nlist: int, cap: int | None = None):
     return table
 
 
-class IVFFlatIndex:
+def invlist_append(table: np.ndarray, cursor: np.ndarray, assign: np.ndarray,
+                   ids: np.ndarray) -> np.ndarray:
+    """Append `ids` to their assigned inverted lists, doubling the table's
+    column capacity when any destination list would overflow.  Returns the
+    (possibly reallocated) table; `cursor` is advanced in place."""
+    counts = np.bincount(assign, minlength=table.shape[0])
+    need = int((cursor + counts).max())
+    if need > table.shape[1]:
+        new_cap = max(2 * table.shape[1], need)
+        table = np.pad(table, ((0, 0), (0, new_cap - table.shape[1])),
+                       constant_values=-1)
+    for i, a in zip(ids, assign):
+        table[a, cursor[a]] = i
+        cursor[a] += 1
+    return table
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "masked"))
+def _ivf_query(q, emb, centroids, invlists, valid, k: int, nprobe: int,
+               masked: bool):
+    """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow.
+
+    The probed lists go through the fused gather+L2+top-k scan
+    (repro.kernels.ivf_scan on TPU, its XLA oracle elsewhere), so the
+    (B, P, d) gathered embeddings never materialise in HBM.  `masked`
+    threads the tombstone mask through the scan (fresh builds skip it and
+    stay bitwise identical to the static-catalog path)."""
+    q = jnp.atleast_2d(q)
+    dc = ops.pairwise_l2_xla(q, centroids)              # (B, nlist)
+    _, probe = jax.lax.top_k(-dc, nprobe)                # (B, nprobe)
+    cand = invlists[probe].reshape(q.shape[0], -1)       # (B, nprobe*cap)
+    return ops.ivf_scan_auto(q, emb, cand, k, valid if masked else None)
+
+
+class IVFFlatIndex(MutableRows):
     exact_distances = True  # probed lists are scanned with exact L2
 
     def __init__(
@@ -44,33 +87,67 @@ class IVFFlatIndex:
         train_iters: int = 12,
         seed: int = 0,
     ):
-        self.embeddings = jnp.asarray(embeddings, jnp.float32)
+        self._init_rows(embeddings)
         self.nlist, self.nprobe = nlist, nprobe
-        key = jax.random.PRNGKey(seed)
-        self.centroids, assign = kmeans(key, self.embeddings, nlist, train_iters)
-        self.invlists = jnp.asarray(
-            build_invlists(np.asarray(assign), nlist), jnp.int32
-        )
+        self.train_iters, self.seed = train_iters, seed
+        self._build_structures()
 
-    @property
-    def n(self) -> int:
-        return self.embeddings.shape[0]
+    # -- structure (re)build ------------------------------------------------
+
+    def _build_structures(self) -> None:
+        """(Re-)train the coarse quantizer and lists over the live rows.
+
+        Row ids are stable: the k-means/table build runs over the live
+        rows in slab order and the resulting local ids are remapped back
+        to slab ids, so a refreshed index answers exactly like a fresh
+        build on the live rows (modulo that id remap)."""
+        live = self.live_rows()
+        n_live = len(live)
+        emb_live = (self.embeddings if n_live == self.capacity
+                    else self.embeddings[jnp.asarray(live)])
+        nlist = min(self.nlist, max(n_live, 1))
+        key = jax.random.PRNGKey(self.seed)
+        self.centroids, assign = kmeans(key, emb_live, nlist,
+                                        self.train_iters)
+        table = build_invlists(np.asarray(assign), nlist)
+        if n_live != self.capacity:  # remap local ids -> slab row ids
+            table = np.where(table >= 0, live[np.clip(table, 0, None)], -1)
+        self._inv_np = table
+        self._cursor = (table >= 0).sum(axis=1).astype(np.int32)
+        self.invlists = jnp.asarray(table, jnp.int32)
+
+    # -- mutation -----------------------------------------------------------
+
+    def add(self, vectors) -> np.ndarray:
+        """Append rows and bin them by the *current* (possibly stale)
+        coarse quantizer — FAISS's add-time behaviour.  A full list
+        doubles its capacity column-wise (one table reallocation)."""
+        ids = self._append_rows(vectors)
+        vecs = self.embeddings[jnp.asarray(ids)]
+        assign = np.asarray(
+            jnp.argmin(ops.pairwise_l2_xla(vecs, self.centroids), axis=1))
+        self._inv_np = invlist_append(self._inv_np, self._cursor, assign, ids)
+        self.invlists = jnp.asarray(self._inv_np, jnp.int32)
+        return ids
+
+    def refresh(self) -> None:
+        """Re-train the quantizer + rebuild the lists over the live rows
+        (restores fresh-build recall; quadratic drift gone)."""
+        self._build_structures()
+
+    # -- queries ------------------------------------------------------------
 
     def memory_bytes(self) -> int:
-        return arrays_bytes(self.embeddings, self.centroids, self.invlists)
+        return arrays_bytes(self.embeddings, self.centroids, self.invlists,
+                            self.valid)
 
-    @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
-        """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow.
-
-        The probed lists go through the fused gather+L2+top-k scan
-        (repro.kernels.ivf_scan on TPU, its XLA oracle elsewhere), so the
-        (B, P, d) gathered embeddings never materialise in HBM."""
-        q = jnp.atleast_2d(q)
-        dc = ops.pairwise_l2_xla(q, self.centroids)        # (B, nlist)
-        _, probe = jax.lax.top_k(-dc, self.nprobe)          # (B, nprobe)
-        cand = self.invlists[probe].reshape(q.shape[0], -1)  # (B, nprobe*cap)
-        return ops.ivf_scan_auto(q, self.embeddings, cand, k)
+        # candidates come from the id tables (never from unused slab rows),
+        # so the mask is only needed once a row has been tombstoned
+        return _ivf_query(q, self.embeddings, self.centroids, self.invlists,
+                          self.valid, k,
+                          min(self.nprobe, self.centroids.shape[0]),
+                          masked=self._live != self._n_slots)
 
     def __hash__(self):
         return id(self)

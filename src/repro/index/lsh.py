@@ -6,6 +6,13 @@ candidate slab in one pass, masks cross-table duplicates to the -1 invalid
 sentinel, and hands the slab to the fused gather+L2+top-k scan
 (`ops.ivf_scan_auto` — the same kernel the IVF probe uses), so the
 (B, P, d) gathered embeddings never materialise in HBM on TPU.
+
+Mutable catalog (DESIGN.md §10): the hyperplanes are immutable, so `add`
+is exact — new rows hash into the same buckets a fresh build would use
+(per-bucket capacity doubling when one fills); `remove` tombstones (stale
+bucket entries masked at query time); `refresh` just rebuilds the bucket
+tables over the live rows, reclaiming tombstone slots — recall is
+mask-exact between refreshes, unlike the trained backends.
 """
 
 from __future__ import annotations
@@ -16,67 +23,115 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes
 from repro.kernels import ops
 
 
-class LSHIndex:
+@partial(jax.jit, static_argnames=("k", "masked"))
+def _lsh_query(q, emb, planes, buckets, valid, k: int, masked: bool):
+    """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow."""
+    q = jnp.atleast_2d(q)
+    b = q.shape[0]
+    tables, bits, _ = planes.shape
+    sig = jnp.einsum("tbd,nd->ntb", planes, q) > 0          # (B, t, bits)
+    weights = (1 << jnp.arange(bits, dtype=jnp.int32))
+    codes = jnp.sum(sig.astype(jnp.int32) * weights[None, None, :], -1)
+    cand = buckets[jnp.arange(tables)[None, :], codes].reshape(b, -1)
+    # the same object sits in multiple tables' buckets: mask repeats to
+    # the fused scan's -1 invalid sentinel (first occurrence kept)
+    order = jnp.argsort(cand, axis=1)
+    sid = jnp.take_along_axis(cand, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1
+    )
+    dup = jnp.zeros_like(dup_sorted)
+    dup = dup.at[jnp.arange(b)[:, None], order].set(dup_sorted)
+    cand = jnp.where(dup, -1, cand)
+    return ops.ivf_scan_auto(q, emb, cand, k, valid if masked else None)
+
+
+class LSHIndex(MutableRows):
     exact_distances = True  # candidates scored with exact L2
 
     def __init__(self, embeddings, tables: int = 8, bits: int = 10,
                  cap: int | None = None, seed: int = 0):
-        emb = np.asarray(embeddings, np.float32)
-        n, d = emb.shape
+        self._init_rows(embeddings)
         rng = np.random.default_rng(seed)
+        d = self.embeddings.shape[1]
         self.planes = rng.normal(size=(tables, bits, d)).astype(np.float32)
-        self.tables, self.bits = tables, bits
-        nb = 2 ** bits
-        sig = (np.einsum("tbd,nd->tnb", self.planes, emb) > 0)
-        codes = (sig * (1 << np.arange(bits))[None, None, :]).sum(-1)  # (t, n)
-        counts = np.stack([np.bincount(codes[t], minlength=nb)
-                           for t in range(tables)])
-        cap = int(counts.max()) if cap is None else cap
-        table = np.full((tables, nb, cap), -1, np.int32)
-        cursor = np.zeros((tables, nb), np.int32)
-        for t in range(tables):
-            for i, b in enumerate(codes[t]):
-                c = cursor[t, b]
-                if c < cap:
-                    table[t, b, c] = i
-                    cursor[t, b] = c + 1
-        self.buckets = jnp.asarray(table)
         self.planes_j = jnp.asarray(self.planes)
-        self.embeddings = jnp.asarray(emb)
+        self.tables, self.bits = tables, bits
+        self._fixed_cap = cap
+        self._build_structures()
 
-    @property
-    def n(self) -> int:
-        return self.embeddings.shape[0]
+    def _codes_np(self, emb_np: np.ndarray) -> np.ndarray:
+        """(n, d) -> (tables, n) bucket codes (numpy, build/insert path)."""
+        sig = (np.einsum("tbd,nd->tnb", self.planes, emb_np) > 0)
+        return (sig * (1 << np.arange(self.bits))[None, None, :]).sum(-1)
+
+    def _build_structures(self) -> None:
+        live = self.live_rows()
+        emb_np = np.asarray(self.embeddings)[live]
+        nb = 2 ** self.bits
+        codes = self._codes_np(emb_np)                       # (t, n_live)
+        counts = np.stack([np.bincount(codes[t], minlength=nb)
+                           for t in range(self.tables)])
+        cap = (int(counts.max()) if self._fixed_cap is None
+               else self._fixed_cap)
+        cap = max(cap, 1)
+        table = np.full((self.tables, nb, cap), -1, np.int32)
+        cursor = np.zeros((self.tables, nb), np.int32)
+        for t in range(self.tables):
+            for i, bb in zip(live, codes[t]):
+                c = cursor[t, bb]
+                if c < cap:
+                    table[t, bb, c] = i
+                    cursor[t, bb] = c + 1
+        self._buckets_np, self._cursor = table, cursor
+        self.buckets = jnp.asarray(table)
+
+    # -- mutation -----------------------------------------------------------
+
+    def add(self, vectors) -> np.ndarray:
+        """Hash-and-append: exact LSH insertion (the planes are immutable,
+        so insert-time buckets match a fresh build's)."""
+        ids = self._append_rows(vectors)
+        vecs = np.asarray(self.embeddings)[ids]
+        codes = self._codes_np(vecs)                         # (t, B)
+        cap = self._buckets_np.shape[2]
+        # a fixed user cap keeps FAISS-LSH truncation semantics; otherwise
+        # grow a full bucket by doubling the shared column capacity
+        if self._fixed_cap is None:
+            need = int(self._cursor.max()) + len(ids)        # loose bound
+            if need > cap:
+                new_cap = max(2 * cap, need)
+                self._buckets_np = np.pad(
+                    self._buckets_np, ((0, 0), (0, 0), (0, new_cap - cap)),
+                    constant_values=-1)
+                cap = new_cap
+        for t in range(self.tables):
+            for i, bb in zip(ids, codes[t]):
+                c = self._cursor[t, bb]
+                if c < cap:
+                    self._buckets_np[t, bb, c] = i
+                    self._cursor[t, bb] = c + 1
+        self.buckets = jnp.asarray(self._buckets_np)
+        return ids
+
+    def refresh(self) -> None:
+        """Rebuild the bucket tables over the live rows (drops tombstone
+        slots; the hash itself never drifts)."""
+        self._build_structures()
+
+    # -- queries ------------------------------------------------------------
 
     def memory_bytes(self) -> int:
-        return arrays_bytes(self.embeddings, self.buckets, self.planes_j)
+        return arrays_bytes(self.embeddings, self.buckets, self.planes_j,
+                            self.valid)
 
-    @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
-        """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow."""
-        q = jnp.atleast_2d(q)
-        b = q.shape[0]
-        sig = jnp.einsum("tbd,nd->ntb", self.planes_j, q) > 0  # (B, t, bits)
-        weights = (1 << jnp.arange(self.bits, dtype=jnp.int32))
-        codes = jnp.sum(sig.astype(jnp.int32) * weights[None, None, :], -1)
-        cand = self.buckets[
-            jnp.arange(self.tables)[None, :], codes
-        ].reshape(b, -1)                                        # (B, t*cap)
-        # the same object sits in multiple tables' buckets: mask repeats to
-        # the fused scan's -1 invalid sentinel (first occurrence kept)
-        order = jnp.argsort(cand, axis=1)
-        sid = jnp.take_along_axis(cand, order, axis=1)
-        dup_sorted = jnp.concatenate(
-            [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1
-        )
-        dup = jnp.zeros_like(dup_sorted)
-        dup = dup.at[jnp.arange(b)[:, None], order].set(dup_sorted)
-        cand = jnp.where(dup, -1, cand)
-        return ops.ivf_scan_auto(q, self.embeddings, cand, k)
+        return _lsh_query(q, self.embeddings, self.planes_j, self.buckets,
+                          self.valid, k, masked=self._live != self._n_slots)
 
     def __hash__(self):
         return id(self)

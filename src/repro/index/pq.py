@@ -6,6 +6,15 @@ adaptation of the GPU shared-memory gather (DESIGN.md §3).  An optional
 exact re-rank of the top candidates (refine factor) recovers recall, which
 is standard FAISS practice and what AÇAI needs to estimate true server-side
 dissimilarity costs.
+
+Mutable catalog (DESIGN.md §10): `add` is encode-on-insert — new rows are
+PQ-coded with the *frozen* codebooks and binned by the stale coarse
+quantizer (FAISS add-time semantics); `remove` tombstones (stale list
+entries and codes are masked at query time); `refresh` re-trains both the
+coarse quantizer and the PQ codebooks over the live rows and re-encodes
+them.  Codebook drift between refreshes costs ADC accuracy on inserted
+rows — the refine re-rank absorbs most of it, and the churn bench
+quantifies the rest.
 """
 
 from __future__ import annotations
@@ -16,10 +25,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import arrays_bytes
-from repro.index.ivf import build_invlists
+from repro.index.base import MutableRows, arrays_bytes
+from repro.index.ivf import build_invlists, invlist_append
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
+
+
+@jax.jit
+def _pq_encode(data: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """(n, d) x (m, ksub, dsub) codebooks -> (n, m) int32 codes.
+
+    Codebooks are a *runtime* argument (not a static self): refresh
+    re-trains them without leaving stale compiled entries pinned in the
+    jit cache — the long-running churn regime rebuilds codecs repeatedly.
+    """
+    n, d = data.shape
+    m, _, dsub = codebooks.shape
+    sub = data.reshape(n, m, dsub).transpose(1, 0, 2)
+    d2 = jax.vmap(ops.pairwise_l2_xla)(sub, codebooks)   # (m, n, ksub)
+    return jnp.argmin(d2, axis=-1).T.astype(jnp.int32)    # (n, m)
+
+
+@jax.jit
+def _pq_decode(codes: jax.Array, codebooks: jax.Array) -> jax.Array:
+    gathered = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1))(
+        codebooks, codes
+    )  # (m, n, dsub)
+    return gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+
+
+def _pq_adc_lut(q: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """(B, d) -> (B, m, ksub) per-subspace distance tables (traced inside
+    _ivfpq_query; codebooks ride as a runtime argument)."""
+    b = q.shape[0]
+    m, _, dsub = codebooks.shape
+    sub = q.reshape(b, m, dsub).transpose(1, 0, 2)        # (m, B, dsub)
+    lut = jax.vmap(ops.pairwise_l2_xla)(sub, codebooks)   # (m, B, ksub)
+    return lut.transpose(1, 0, 2)
+
+
+_pq_adc_lut_jit = jax.jit(_pq_adc_lut)
 
 
 class PQCodec:
@@ -41,27 +86,15 @@ class PQCodec:
             cents = jnp.concatenate([cents, pad], axis=1)
         self.codebooks = cents  # (m, ksub, dsub)
 
-    @partial(jax.jit, static_argnames=("self",))
     def encode(self, data: jax.Array) -> jax.Array:
-        n, d = data.shape
-        sub = data.reshape(n, self.m, self.dsub).transpose(1, 0, 2)
-        d2 = jax.vmap(ops.pairwise_l2_xla)(sub, self.codebooks)  # (m, n, ksub)
-        return jnp.argmin(d2, axis=-1).T.astype(jnp.int32)       # (n, m)
+        return _pq_encode(data, self.codebooks)
 
-    @partial(jax.jit, static_argnames=("self",))
     def decode(self, codes: jax.Array) -> jax.Array:
-        gathered = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1))(
-            self.codebooks, codes
-        )  # (m, n, dsub)
-        return gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+        return _pq_decode(codes, self.codebooks)
 
-    @partial(jax.jit, static_argnames=("self",))
     def adc_lut(self, q: jax.Array) -> jax.Array:
         """(B, d) -> (B, m, ksub) per-subspace distance tables."""
-        b = q.shape[0]
-        sub = q.reshape(b, self.m, self.dsub).transpose(1, 0, 2)  # (m, B, dsub)
-        lut = jax.vmap(ops.pairwise_l2_xla)(sub, self.codebooks)  # (m, B, ksub)
-        return lut.transpose(1, 0, 2)
+        return _pq_adc_lut_jit(q, self.codebooks)
 
     def __hash__(self):
         return id(self)
@@ -70,27 +103,102 @@ class PQCodec:
         return self is other
 
 
-class IVFPQIndex:
+@partial(jax.jit, static_argnames=("k", "nprobe", "refine", "masked"))
+def _ivfpq_query(q, emb, centroids, invlists, codes, codebooks, valid,
+                 k: int, nprobe: int, refine: int, masked: bool):
+    q = jnp.atleast_2d(q)
+    b = q.shape[0]
+    dc = ops.pairwise_l2_xla(q, centroids)
+    _, probe = jax.lax.top_k(-dc, nprobe)
+    cand = invlists[probe].reshape(b, -1)               # (B, P)
+    if masked:  # tombstoned rows -> the -1 invalid-slot convention
+        cand = jnp.where(
+            (cand >= 0) & valid[jnp.clip(cand, 0, emb.shape[0] - 1)],
+            cand, -1)
+    valid_slot = cand >= 0
+    safe = jnp.clip(cand, 0, None)
+
+    lut = _pq_adc_lut(q, codebooks)                      # (B, m, ksub)
+    gathered = codes[safe]                               # (B, P, m)
+    # per-query ADC over its own candidate rows
+    d_adc = jax.vmap(lambda l, c: ops.pq_adc(l[None], c)[0])(lut, gathered)
+    d_adc = jnp.where(valid_slot, d_adc, jnp.inf)
+
+    if refine and refine > 1:
+        r = min(refine * k, d_adc.shape[1])
+        neg, pos = jax.lax.top_k(-d_adc, r)              # approx top-r
+        rid = jnp.take_along_axis(cand, pos, axis=1)
+        rid = jnp.where(jnp.isfinite(neg), rid, -1)
+        # exact re-rank through the fused gather+L2+top-k scan (cand was
+        # already validity-masked above)
+        return ops.ivf_scan_auto(q, emb, rid, k)
+
+    neg, pos = jax.lax.top_k(-d_adc, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+
+
+class IVFPQIndex(MutableRows):
     """Coarse IVF + PQ-coded residual-free storage + optional exact refine."""
 
     def __init__(self, embeddings, nlist: int = 64, nprobe: int = 8,
                  m: int = 8, refine: int = 4, seed: int = 0):
-        self.embeddings = jnp.asarray(embeddings, jnp.float32)
+        self._init_rows(embeddings)
         self.nlist, self.nprobe, self.refine = nlist, nprobe, refine
+        self.m, self.seed = m, seed
         # with refine the final top-k is exactly re-ranked; without it the
         # returned distances are ADC approximations (re-rank downstream)
         self.exact_distances = bool(refine and refine > 1)
-        key = jax.random.PRNGKey(seed)
-        self.centroids, assign = kmeans(key, self.embeddings, nlist)
-        self.invlists = jnp.asarray(
-            build_invlists(np.asarray(assign), nlist), jnp.int32
-        )
-        self.codec = PQCodec(self.embeddings, m=m, seed=seed + 1)
-        self.codes = self.codec.encode(self.embeddings)  # (N, m)
+        self._build_structures()
 
-    @property
-    def n(self) -> int:
-        return self.embeddings.shape[0]
+    def _build_structures(self) -> None:
+        """(Re-)train quantizer + codebooks and (re-)encode the live rows;
+        ids are stable (local build ids remap to slab rows)."""
+        live = self.live_rows()
+        n_live = len(live)
+        emb_live = (self.embeddings if n_live == self.capacity
+                    else self.embeddings[jnp.asarray(live)])
+        nlist = min(self.nlist, max(n_live, 1))
+        key = jax.random.PRNGKey(self.seed)
+        self.centroids, assign = kmeans(key, emb_live, nlist)
+        table = build_invlists(np.asarray(assign), nlist)
+        if n_live != self.capacity:
+            table = np.where(table >= 0, live[np.clip(table, 0, None)], -1)
+        self._inv_np = table
+        self._cursor = (table >= 0).sum(axis=1).astype(np.int32)
+        self.invlists = jnp.asarray(table, jnp.int32)
+        self.codec = PQCodec(emb_live, m=self.m, seed=self.seed + 1)
+        codes_live = self.codec.encode(emb_live)         # (n_live, m)
+        codes = np.zeros((self.capacity, self.m), np.int32)
+        codes[live] = np.asarray(codes_live)
+        self._codes_np = codes
+        self.codes = jnp.asarray(codes)
+
+    # -- mutation -----------------------------------------------------------
+
+    def add(self, vectors) -> np.ndarray:
+        """Encode-on-insert: PQ-code the new rows with the frozen codebooks
+        and append to the (stale-centroid) inverted lists."""
+        ids = self._append_rows(vectors)
+        if self._codes_np.shape[0] < self.capacity:     # slab grew
+            self._codes_np = np.pad(
+                self._codes_np,
+                ((0, self.capacity - self._codes_np.shape[0]), (0, 0)))
+        vecs = self.embeddings[jnp.asarray(ids)]
+        self._codes_np[ids] = np.asarray(self.codec.encode(vecs))
+        self.codes = jnp.asarray(self._codes_np)
+        assign = np.asarray(
+            jnp.argmin(ops.pairwise_l2_xla(vecs, self.centroids), axis=1))
+        self._inv_np = invlist_append(self._inv_np, self._cursor, assign, ids)
+        self.invlists = jnp.asarray(self._inv_np, jnp.int32)
+        return ids
+
+    def refresh(self) -> None:
+        """Full re-train + re-encode over the live rows (restores both
+        quantizer binning and codebook accuracy after churn)."""
+        self._build_structures()
+
+    # -- queries ------------------------------------------------------------
 
     def memory_bytes(self) -> int:
         """Everything resident at query time, like every other backend:
@@ -99,7 +207,7 @@ class IVFPQIndex:
         `compressed_bytes()`."""
         return arrays_bytes(self.embeddings, self.codes,
                             self.codec.codebooks, self.centroids,
-                            self.invlists)
+                            self.invlists, self.valid)
 
     def compressed_bytes(self) -> int:
         """PQ-only footprint (codes + codebooks + coarse layer): what a
@@ -108,33 +216,12 @@ class IVFPQIndex:
         return arrays_bytes(self.codes, self.codec.codebooks,
                             self.centroids, self.invlists)
 
-    @partial(jax.jit, static_argnames=("self", "k"))
     def query(self, q: jax.Array, k: int):
-        q = jnp.atleast_2d(q)
-        b = q.shape[0]
-        dc = ops.pairwise_l2_xla(q, self.centroids)
-        _, probe = jax.lax.top_k(-dc, self.nprobe)
-        cand = self.invlists[probe].reshape(b, -1)          # (B, P)
-        valid = cand >= 0
-        safe = jnp.clip(cand, 0, None)
-
-        lut = self.codec.adc_lut(q)                          # (B, m, ksub)
-        codes = self.codes[safe]                             # (B, P, m)
-        # per-query ADC over its own candidate rows
-        d_adc = jax.vmap(lambda l, c: ops.pq_adc(l[None], c)[0])(lut, codes)
-        d_adc = jnp.where(valid, d_adc, jnp.inf)
-
-        if self.refine and self.refine > 1:
-            r = min(self.refine * k, d_adc.shape[1])
-            neg, pos = jax.lax.top_k(-d_adc, r)              # approx top-r
-            rid = jnp.take_along_axis(cand, pos, axis=1)
-            rid = jnp.where(jnp.isfinite(neg), rid, -1)
-            # exact re-rank through the fused gather+L2+top-k scan
-            return ops.ivf_scan_auto(q, self.embeddings, rid, k)
-
-        neg, pos = jax.lax.top_k(-d_adc, k)
-        ids = jnp.take_along_axis(cand, pos, axis=1)
-        return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+        return _ivfpq_query(q, self.embeddings, self.centroids,
+                            self.invlists, self.codes,
+                            self.codec.codebooks, self.valid, k,
+                            min(self.nprobe, self.centroids.shape[0]),
+                            self.refine, masked=self._live != self._n_slots)
 
     def __hash__(self):
         return id(self)

@@ -21,6 +21,12 @@ masked to +inf before selection, so they can never displace a real
 candidate; queries with fewer than k valid candidates surface +inf
 distances, which the wrapper turns into id = -1 (underflow contract shared
 with IVFFlatIndex.query).
+
+Mutable catalogs (DESIGN.md §10) reuse the same convention: the wrapper
+(`ops.ivf_scan_topk(..., valid=mask)`) folds candidate ids whose catalog
+row is tombstoned into the -1 sentinel *before* the scan, so removed
+objects can never surface from stale inverted lists — the kernel itself
+needs no mutation awareness.
 """
 
 from __future__ import annotations

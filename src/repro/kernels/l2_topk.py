@@ -45,7 +45,12 @@ def extract_block_topk(d: jax.Array, base, k: int):
     return outd, outi
 
 
-def _l2_topk_kernel(k: int, n_valid: int, q_ref, x_ref, od_ref, oi_ref):
+def _l2_topk_kernel(k: int, n_valid: int, masked: bool, *refs):
+    if masked:
+        q_ref, x_ref, m_ref, od_ref, oi_ref = refs
+    else:
+        q_ref, x_ref, od_ref, oi_ref = refs
+        m_ref = None
     q = q_ref[...].astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)
     dots = jax.lax.dot_general(
@@ -60,30 +65,46 @@ def _l2_topk_kernel(k: int, n_valid: int, q_ref, x_ref, od_ref, oi_ref):
     # mask padded catalog rows so they never displace real candidates
     gcol = base + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     d = jnp.where(gcol >= n_valid, _INF, d)
+    if m_ref is not None:
+        # additive row penalty (0 = live, +inf = tombstoned): the
+        # mutable-catalog validity mask of DESIGN.md §10
+        d = d + m_ref[...]
 
     od_ref[...], oi_ref[...] = extract_block_topk(d, base, k)
 
 
 def l2_topk_pallas(
     q: jax.Array, x: jax.Array, k: int, *, n_valid: int | None = None,
-    interpret: bool = False
+    mask: jax.Array | None = None, interpret: bool = False
 ):
     """Returns per-block partial results (Q, nblocks*k) dists + global ids.
 
     Callers merge with lax.top_k (see ops.topk_l2).  `n_valid` marks the
-    number of real catalog rows (the rest are padding)."""
+    number of real catalog rows (the rest are padding).  `mask` is an
+    optional (1, N) float32 additive row penalty — 0 for live rows, +inf
+    for tombstoned ones — so a mutable catalog's removed rows can never
+    displace real candidates (their partial dists come back +inf and the
+    merge turns them into id = -1)."""
     qq, d = q.shape
     n, _ = x.shape
     assert qq % BQ == 0 and n % BN == 0 and k <= BN
+    if mask is not None:
+        assert mask.shape == (1, n), (mask.shape, n)
     grid = (qq // BQ, n // BN)
     nb = n // BN
+    in_specs = [
+        pl.BlockSpec((BQ, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((BN, d), lambda i, j: (j, 0)),
+    ]
+    args = (q, x)
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, BN), lambda i, j: (0, j)))
+        args = (q, x, mask.astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(_l2_topk_kernel, k, n if n_valid is None else n_valid),
+        functools.partial(_l2_topk_kernel, k,
+                          n if n_valid is None else n_valid, mask is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((BQ, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BN, d), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((BQ, k), lambda i, j: (i, j)),
             pl.BlockSpec((BQ, k), lambda i, j: (i, j)),
@@ -93,4 +114,4 @@ def l2_topk_pallas(
             jax.ShapeDtypeStruct((qq, nb * k), jnp.int32),
         ],
         interpret=interpret,
-    )(q, x)
+    )(*args)

@@ -79,13 +79,18 @@ def pq_adc(lut: jax.Array, codes: jax.Array, *, interpret: bool | None = None):
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None):
+def topk_l2(q: jax.Array, x: jax.Array, k: int, *, valid: jax.Array | None = None,
+            interpret: bool | None = None):
     """Fused blocked distance + top-k: the (Q, N) matrix never hits HBM.
 
     Args:
       q: (Q, D) query embeddings.
       x: (N, D) catalog embeddings.
       k: number of nearest neighbours per query (static).
+      valid: optional (N,) bool tombstone mask (mutable catalog,
+        DESIGN.md §10).  Masked rows never surface; queries with fewer
+        than k live rows underflow as dist = +inf, id = -1.  With
+        valid=None the output is bitwise the pre-mutation scan.
       interpret: see `pairwise_l2`.
 
     Returns:
@@ -99,14 +104,24 @@ def topk_l2(q: jax.Array, x: jax.Array, k: int, *, interpret: bool | None = None
     qq, n = q.shape[0], x.shape[0]
     qp = _pad_rows(q, l2_topk_kernel.BQ)
     xp = _pad_rows(x, l2_topk_kernel.BN)
-    pd, pi = l2_topk_kernel.l2_topk_pallas(qp, xp, k, n_valid=n, interpret=interp)
+    mask = None
+    if valid is not None:
+        # additive per-row penalty: 0 live, +inf tombstoned (padded tail
+        # rows are already masked by n_valid inside the kernel)
+        mask = jnp.where(_pad_rows(valid[None, :].T, l2_topk_kernel.BN,
+                                   value=False).T, 0.0, jnp.inf)
+    pd, pi = l2_topk_kernel.l2_topk_pallas(qp, xp, k, n_valid=n, mask=mask,
+                                           interpret=interp)
     neg, pos = jax.lax.top_k(-pd, k)
     ids = jnp.take_along_axis(pi, pos, axis=1)
+    if valid is not None:
+        ids = jnp.where(jnp.isfinite(neg), ids, -1)
     return (-neg)[:qq], ids[:qq]
 
 
 @partial(jax.jit, static_argnames=("k", "chunk"))
-def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int):
+def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int,
+                    valid: jax.Array | None = None):
     """Chunked fused distance + top-k in pure XLA: the memory-roofline
     oracle of the Pallas `topk_l2` kernel for non-TPU backends.
 
@@ -117,16 +132,23 @@ def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int):
       k: neighbours per query (static).
       chunk: catalog rows per scan step (static) — peak extra memory is
         O(Q · (chunk + k)) instead of O(Q · N).
+      valid: optional (N,) bool tombstone mask (mutable catalog,
+        DESIGN.md §10): masked rows scan as +inf, chunk by chunk, so a
+        removed object can never enter the running top-k.  Queries with
+        fewer than k live rows surface dist = +inf, id = -1 slots.
 
     Returns:
       (dists (Q, k), ids (Q, k)) exactly as `topk_l2`: ascending squared
       distances, int32 row ids.  Used by the distributed retrieval step
-      (`repro.core.distributed`) so a catalog shard is scanned without ever
-      materialising the (B, N_shard) distance matrix.
+      (`repro.core.distributed`) and the baselines' `ServerOracle` so a
+      catalog (shard) is scanned without ever materialising the (B, N)
+      distance matrix.
     """
     n = x.shape[0]
     b = q.shape[0]
     xp = _pad_rows(x, chunk)
+    vp = None if valid is None else _pad_rows(valid[:, None], chunk,
+                                              value=False)[:, 0]
     nchunks = xp.shape[0] // chunk
     qn = jnp.sum(q * q, axis=1, keepdims=True)
 
@@ -137,6 +159,9 @@ def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int):
         d2 = jnp.maximum(qn - 2.0 * q @ blk.T + cn, 0.0)
         ids = j * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
         d2 = jnp.where(ids < n, d2, jnp.inf)                 # padded tail
+        if vp is not None:                                   # tombstones
+            vblk = jax.lax.dynamic_slice_in_dim(vp, j * chunk, chunk, 0)
+            d2 = jnp.where(vblk[None, :], d2, jnp.inf)
         cat_d = jnp.concatenate([best_d, d2], axis=1)
         cat_i = jnp.concatenate(
             [best_i, jnp.broadcast_to(ids, (b, chunk))], axis=1)
@@ -146,11 +171,14 @@ def topk_l2_chunked(q: jax.Array, x: jax.Array, k: int, chunk: int):
     init = (jnp.full((b, k), jnp.inf, jnp.float32),
             jnp.zeros((b, k), jnp.int32))
     (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    if valid is not None:
+        best_i = jnp.where(jnp.isfinite(best_d), best_i, -1)
     return best_d, best_i
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_scan_topk(q: jax.Array, x: jax.Array, cand: jax.Array, k: int, *,
+                  valid: jax.Array | None = None,
                   interpret: bool | None = None):
     """Fused gather + L2 + top-k over per-query candidate id lists.
 
@@ -158,10 +186,19 @@ def ivf_scan_topk(q: jax.Array, x: jax.Array, cand: jax.Array, k: int, *,
     (inverted-list padding, dedup sentinels).  Returns (dists (B, k),
     ids (B, k)); underflowing slots come back as dist = +inf, id = -1.
 
+    `valid` (N,) bool is the mutable-catalog tombstone mask (DESIGN.md
+    §10): candidate ids pointing at tombstoned rows are folded into the
+    kernel's existing -1 invalid-slot convention *before* the scan, so a
+    removed object can never surface from a stale inverted list or
+    bucket — no kernel change, one extra gather + where.
+
     The fused kernel's per-block extraction handles k up to its tile width
     (BP = 128); larger k falls back to the XLA reference, which has no
     such limit.
     """
+    if valid is not None:
+        cand = jnp.where(
+            (cand >= 0) & valid[jnp.clip(cand, 0, x.shape[0] - 1)], cand, -1)
     if k > ivf_scan_kernel.BP:
         return ref.ivf_scan_ref(q, x, cand, k)
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -186,31 +223,37 @@ topk_l2_xla = jax.jit(ref.l2_topk_ref, static_argnames=("k",))
 ivf_scan_xla = jax.jit(ref.ivf_scan_ref, static_argnames=("k",))
 
 
-def topk_l2_auto(q: jax.Array, x: jax.Array, k: int):
+def topk_l2_auto(q: jax.Array, x: jax.Array, k: int,
+                 valid: jax.Array | None = None):
     """Hot-path dispatch: compiled Pallas kernel on TPU, fused XLA reference
     elsewhere (interpret-mode Pallas is a correctness harness, not a perf
-    path — see kernel_bench)."""
+    path — see kernel_bench).  `valid` is the optional tombstone mask
+    (every dispatch target honors it, DESIGN.md §10)."""
     if _on_tpu():
-        return topk_l2(q, x, k)
-    return topk_l2_xla(q, x, k)
+        return topk_l2(q, x, k, valid=valid)
+    return topk_l2_xla(q, x, k, valid)
 
 
-def ivf_scan_auto(q: jax.Array, x: jax.Array, cand: jax.Array, k: int):
+def ivf_scan_auto(q: jax.Array, x: jax.Array, cand: jax.Array, k: int,
+                  valid: jax.Array | None = None):
     """Hot-path dispatch for the fused IVF scan (same policy as
-    topk_l2_auto)."""
+    topk_l2_auto).  `valid` folds tombstoned rows into the -1 invalid-slot
+    convention before the scan."""
     if _on_tpu():
-        return ivf_scan_topk(q, x, cand, k)
-    return ivf_scan_xla(q, x, cand, k)
+        return ivf_scan_topk(q, x, cand, k, valid=valid)
+    return ivf_scan_xla(q, x, cand, k, valid)
 
 
-def topk_l2_fused(q: jax.Array, x: jax.Array, k: int, *, chunk: int):
+def topk_l2_fused(q: jax.Array, x: jax.Array, k: int, *, chunk: int,
+                  valid: jax.Array | None = None):
     """Memory-roofline dispatch: fused Pallas `topk_l2` on TPU, the chunked
     XLA oracle elsewhere — on either backend the (Q, N) distance matrix is
     never materialised.  This is the scan the distributed retrieval step
-    runs per catalog shard when `scan_chunk > 0`."""
+    runs per catalog shard when `scan_chunk > 0`, and (with `valid`) the
+    mutable-catalog `ServerOracle` scan."""
     if _on_tpu():
-        return topk_l2(q, x, k)
-    return topk_l2_chunked(q, x, k, chunk)
+        return topk_l2(q, x, k, valid=valid)
+    return topk_l2_chunked(q, x, k, chunk, valid)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "q_offset",

@@ -27,16 +27,27 @@ def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
                       onehot.astype(jnp.float32))
 
 
-def l2_topk_ref(q: jnp.ndarray, x: jnp.ndarray, k: int):
-    """Exact top-k smallest distances: returns (dists (Q,k), ids (Q,k))."""
+def l2_topk_ref(q: jnp.ndarray, x: jnp.ndarray, k: int, valid=None):
+    """Exact top-k smallest distances: returns (dists (Q,k), ids (Q,k)).
+
+    `valid` (N,) bool marks live catalog rows (mutable-catalog tombstone
+    mask, DESIGN.md §10): masked rows never surface, and queries with
+    fewer than k live rows underflow as dist = +inf, id = -1.  With
+    valid=None the output is exactly the unmasked scan (no -1s possible).
+    """
     import jax
 
     d = pairwise_l2_ref(q, x)
+    if valid is None:
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, idx
+    d = jnp.where(valid[None, :], d, jnp.inf)
     neg, idx = jax.lax.top_k(-d, k)
-    return -neg, idx
+    return -neg, jnp.where(jnp.isfinite(neg), idx, -1)
 
 
-def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int):
+def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int,
+                 valid=None):
     """Gathered-candidate top-k: the oracle for kernels.ivf_scan.
 
     q (B, d), x (N, d), cand (B, P) int32 with -1 marking invalid slots.
@@ -44,10 +55,17 @@ def ivf_scan_ref(q: jnp.ndarray, x: jnp.ndarray, cand: jnp.ndarray, k: int):
     has fewer than k valid candidates — including the structural case
     k > P (a narrower slab than requested underflows rather than crashing,
     matching the Pallas path, whose slab is tile-padded).
+
+    `valid` (N,) bool is the mutable-catalog tombstone mask (DESIGN.md
+    §10): candidate ids whose row is tombstoned are treated as -1 slots,
+    so a removed object can never surface from a stale inverted list.
     """
     import jax
 
     q = q.astype(jnp.float32)
+    if valid is not None:
+        cand = jnp.where(
+            (cand >= 0) & valid[jnp.clip(cand, 0, x.shape[0] - 1)], cand, -1)
     x = x.astype(jnp.float32)
     embs = x[jnp.clip(cand, 0, None)]                  # (B, P, d)
     diff = embs - q[:, None, :]

@@ -15,6 +15,14 @@ and `--index-opt key=value` passes builder kwargs, e.g.:
   ... --remote-index ivf --index-opt nlist=256 --index-opt nprobe=16
   ... --mesh-shards 4 --remote-index ivf_sharded --index-opt nlist=64
 
+`--churn-rate R` exercises the mutable catalog (DESIGN.md §10): the cache
+starts on the warm `--churn-warm` fraction of the catalog and R insert+
+expire events fire per request (a rolling window — new results admitted
+online via SemanticCachedLM.add_documents, the oldest expired via
+remove_documents), for any policy and index backend:
+
+  ... --churn-rate 0.2 --remote-index ivf --index-opt nlist=32
+
 `--mesh-shards P` serves the semantic-cache tier through the sharded
 multi-device path (catalog + cache state sharded over a (1, P) mesh,
 repro.core.distributed) — on hosts without accelerators it forces P
@@ -97,6 +105,13 @@ def main():
                     metavar="KEY=VALUE",
                     help="policy spec param (repeatable), e.g. k_prime=8 "
                          "augmented=true")
+    ap.add_argument("--churn-rate", type=float, default=0.0,
+                    help="catalog churn: insert+expire events per request "
+                         "(rolling window over the catalog, DESIGN.md §10; "
+                         "0 = frozen catalog)")
+    ap.add_argument("--churn-warm", type=float, default=0.5,
+                    help="fraction of --catalog live at start under churn "
+                         "(the rest inserts over the run)")
     args = ap.parse_args()
 
     try:
@@ -133,6 +148,13 @@ def main():
                 f"{('exact',) + registered_backends(sharded=True)}")
     elif args.index_opt:
         raise SystemExit("--index-opt needs --remote-index")
+
+    if args.churn_rate < 0 or not 0.0 < args.churn_warm <= 1.0:
+        raise SystemExit("--churn-rate must be >= 0 and --churn-warm in (0, 1]")
+    if args.churn_rate > 0 and args.mesh_shards > 1:
+        raise SystemExit(
+            "--churn-rate needs the single-device cache (online mutation "
+            "on a sharded mesh is a ROADMAP open item)")
 
     mesh = None
     if args.mesh_shards > 1:
@@ -177,10 +199,25 @@ def main():
     def gen_fn(prompt_tokens):
         return generate(params, cfg, prompt_tokens[None], steps=4)
 
-    lm = SemanticCachedLM(params, cfg, catalog, payloads, gen_fn,
-                          h=args.cache_size, k=4, mesh=mesh,
+    # under churn the cache starts on the warm prefix of the catalog and
+    # the cold rows stream in online (one expiry per insert: a rolling
+    # window, the mutable-catalog regime of DESIGN.md §10)
+    n_warm = (max(int(round(args.churn_warm * args.catalog)), 1)
+              if args.churn_rate > 0 else args.catalog)
+    lm = SemanticCachedLM(params, cfg, catalog[:n_warm], payloads[:n_warm],
+                          gen_fn, h=args.cache_size, k=4, mesh=mesh,
                           index_spec=index_spec, policy_spec=policy_spec)
+    insert_ptr, expire_ptr, acc = n_warm, 0, 0.0
+    events = 0
     for i in range(args.requests):
+        acc += args.churn_rate
+        while acc >= 1.0 and insert_ptr < args.catalog:
+            lm.add_documents(catalog[insert_ptr][None], [payloads[insert_ptr]])
+            lm.remove_documents([expire_ptr])
+            insert_ptr += 1
+            expire_ptr += 1
+            events += 1
+            acc -= 1.0
         toks = jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
                            jnp.int32)
         lm.query(toks)
@@ -190,6 +227,8 @@ def main():
     tier += f", policy={lm.policy_spec.to_dict()}"
     if args.policy == "acai":
         tier += f", index={(index_spec.to_dict() if index_spec else 'exact')}"
+    if args.churn_rate > 0:
+        tier += f", churn={args.churn_rate:g} ({events} insert/expire events)"
     print(f"semantic cache ({tier}): {s.requests} requests, "
           f"{s.served_local}/{s.requests * lm.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")

@@ -18,6 +18,11 @@ serving tier is policy-agnostic.
 
 `embed_prompt` derives the request embedding from the LM's own token
 embedding table (mean pooled + normalised) — no extra encoder needed.
+
+The catalog is mutable (DESIGN.md §10): `add_documents` / `remove_documents`
+admit freshly computed results and expire stale ones online, for any
+registered policy — the rolling-catalog regime real edge deployments live
+in (`launch/serve.py --churn-rate` drives it end to end).
 """
 
 from __future__ import annotations
@@ -59,7 +64,7 @@ class SemanticCachedLM:
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
-        self.payloads = catalog_payloads
+        self.payloads = list(catalog_payloads)
         self.generate_fn = generate_fn
         c_f = c_f if c_f is not None else float(
             calibrate_fetch_cost(catalog_embs, kth=min(50, len(catalog_payloads) - 1)))
@@ -145,6 +150,36 @@ class SemanticCachedLM:
                 self.stats.generated += 1
                 _ = self.generate_fn(p)
         return m
+
+    # -- online catalog mutation (DESIGN.md §10) ----------------------------
+
+    def add_documents(self, embeddings, payloads) -> list:
+        """Admit freshly computed results online: the policy's catalog
+        (and its remote index, when one is configured) learns the
+        embeddings without a rebuild, and the payload table grows with
+        them.  Returns the new documents' ids (stable handles for
+        `remove_documents`)."""
+        embeddings = jnp.atleast_2d(jnp.asarray(embeddings, jnp.float32))
+        payloads = list(payloads)
+        if len(payloads) != embeddings.shape[0]:
+            raise ValueError(
+                f"add_documents: {embeddings.shape[0]} embeddings but "
+                f"{len(payloads)} payloads")
+        ids = [int(i) for i in self.policy.add_objects(embeddings)]
+        # ids are monotonic (never recycled): pad the payload table up to
+        # the new high-water mark, then place the new payloads
+        self.payloads.extend([None] * (max(ids) + 1 - len(self.payloads)))
+        for i, p in zip(ids, payloads):
+            self.payloads[i] = p
+        return ids
+
+    def remove_documents(self, ids) -> None:
+        """Expire documents online: tombstoned in the policy (they can
+        never be served again, and any cached copy is dropped at once);
+        their payload slots are cleared but never reused."""
+        self.policy.remove_objects(ids)
+        for i in ids:
+            self.payloads[int(i)] = None
 
     @property
     def nag(self) -> float:
