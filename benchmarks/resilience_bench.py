@@ -1,0 +1,193 @@
+"""Resilient serving tier sweep (DESIGN.md §11) — BENCH_resilience.json.
+
+Fault scenarios × policies through the retry/hedge/deadline/degrade
+ladder (`repro.serve.resilience`), all on the deterministic virtual-time
+fault simulator (`repro.serve.remote.FaultyRemote` — no sleeping, bit-
+replayable).  Per row: NAG (and its ratio to the same policy's
+fault-free row), goodput (fraction of requests answered, healthy or
+degraded), degraded/shed shares, virtual latency p50/p99, retry /
+deadline-miss / hedge totals, circuit-breaker transitions, and the p50
+serving-step wall time.
+
+Two built-in checks:
+
+* the fault-free AÇAI row doubles as the bitwise anchor — at fault-rate
+  0 every batch takes the static jitted step, so the resilient replay's
+  per-request gains must equal `make_replay_batched`'s exactly (the
+  stronger full-state pin lives in tests/test_resilience.py);
+* the outage row records the acceptance target honestly — degraded mode
+  should retain >= 60% of fault-free NAG while shedding < 5% of
+  requests; `outage_target` in the JSON says whether it did.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import policy, trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel, calibrate_fetch_cost
+from repro.serve.remote import FaultSpec, FaultyRemote
+from repro.serve.resilience import (BreakerConfig, ResilienceConfig,
+                                    ResilientPolicy, replay_resilient)
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_resilience.json"
+
+BATCH = 8
+
+
+def _policies(c_f: float, h: int, k: int):
+    """(label, PolicySpec) cells of the sweep."""
+    return (
+        ("acai", PA.PolicySpec("acai", {"h": h, "k": k, "batch": BATCH})),
+        ("sim_lru", PA.PolicySpec("sim_lru",
+                                  {"h": h, "k": k, "k_prime": 2 * k,
+                                   "c_theta": 1.5 * c_f})),
+        ("qcache", PA.PolicySpec("qcache", {"h": h, "k": k})),
+    )
+
+
+def _scenarios(t: int):
+    """(name, FaultSpec, ResilienceConfig) triples.
+
+    `fault_free` is the bitwise anchor; `outage` blacks the remote out
+    for the middle 20% of the trace (plus breaker fast-fail ringing
+    around it); `slow_spikes` pairs a GC-pause latency train with a
+    tight deadline and hedging."""
+    base = dict(latency_ms=5.0, seed=3)
+    rc = ResilienceConfig(deadline_ms=250.0)
+    return (
+        ("fault_free", FaultSpec(**base), rc),
+        ("flaky", FaultSpec(error_rate=0.15, **base), rc),
+        ("corrupt", FaultSpec(corrupt_rate=0.10, **base), rc),
+        # NB: the breaker cooldown must not divide spike_every — a
+        # 64-request cooldown against a 64-request spike period puts
+        # every half-open probe back inside a spike train and the breaker
+        # never recloses (goodput -> 0; the resonance is real and worth
+        # knowing about, but it is a breaker-tuning bug, not the
+        # tail-latency scenario this row studies)
+        ("slow_spikes",
+         FaultSpec(latency_ms=40.0, latency_sigma=0.3, spike_every=64,
+                   spike_width=16, spike_ms=400.0, seed=3),
+         ResilienceConfig(deadline_ms=250.0, hedge_ms=80.0,
+                          breaker=BreakerConfig(cooldown_requests=48))),
+        ("outage",
+         FaultSpec(outages=((int(0.4 * t), int(0.6 * t)),), **base), rc),
+    )
+
+
+def _run_cell(label, spec, scenario, fault, rcfg, catalog, reqs, cm,
+              seed=0):
+    pol = ResilientPolicy(PA.build_policy(spec, catalog, cm, seed=seed),
+                          remote=FaultyRemote(fault), resilience=rcfg)
+    t0 = time.time()
+    res = replay_resilient(pol, reqs, batch=BATCH)
+    wall = time.time() - t0
+    tt = res["requests"]
+    c = res["counters"]
+    return {
+        "policy": spec.to_dict(), "label": label, "scenario": scenario,
+        "fault": fault.to_dict(),
+        "deadline_ms": rcfg.deadline_ms, "hedge_ms": rcfg.hedge_ms,
+        "nag": round(float(res["gain"].sum()) / (pol.k * pol.c_f * tt), 4),
+        "goodput": round(res["goodput"], 4),
+        "degraded_share": round(res["degraded_share"], 4),
+        "shed_share": round(res["shed_share"], 4),
+        "hit_ratio": round(float(res["hit"].mean()), 4),
+        "p50_ms": round(res["p50_ms"], 2),
+        "p99_ms": round(res["p99_ms"], 2),
+        "remote_failures": int(c["remote_failures"]),
+        "retries": int(c["retries"]),
+        "deadline_misses": int(c["deadline_misses"]),
+        "hedges": int(c["hedges"]),
+        "fast_fails": int(c["fast_fails"]),
+        "slow_fetches": int(c["slow_fetches"]),
+        "breaker_transitions": int(res["breaker_transitions"]),
+        "p50_step_us": round(res["p50_step_s"] * 1e6, 1),
+        "us_per_request": round(wall / tt * 1e6, 2),
+        "requests": tt,
+    }, res
+
+
+def main(full: bool = False, kind: str = None) -> None:
+    if kind not in (None, "sift"):
+        raise ValueError(
+            "the resilience suite sweeps fault scenarios on the sift_like "
+            "trace (faults are the variable under study); --trace does "
+            "not apply here")
+    n, t, d = (20000, 8192, 32) if full else (2000, 2048, 16)
+    h, k = (400, 10) if full else (64, 8)
+
+    import jax
+    import jax.numpy as jnp
+
+    catalog, reqs, _ = trace.sift_like(n=n, d=d, t=t, jitter=0.05, seed=17)
+    c_f = float(calibrate_fetch_cost(jnp.asarray(catalog),
+                                     kth=min(50, n - 1), sample=256))
+    cm = CostModel(c_f=c_f)
+    tt = (t // BATCH) * BATCH
+
+    rows = []
+    baseline_nag = {}   # label -> fault-free NAG (the ratio denominator)
+    for scenario, fault, rcfg in _scenarios(t):
+        for label, spec in _policies(c_f, h, k):
+            row, res = _run_cell(label, spec, scenario, fault, rcfg,
+                                 catalog, reqs, cm)
+            if scenario == "fault_free":
+                baseline_nag[label] = row["nag"]
+                if label == "acai":
+                    # bitwise anchor: fault-rate 0 == the static replay
+                    pol2 = PA.build_policy(spec, catalog, cm, seed=0)
+                    ref = pol2.replay(reqs)
+                    assert np.array_equal(res["gain"], ref["gain"]), (
+                        "fault-free resilient path diverged from "
+                        "make_replay_batched")
+                    common.emit("resilience/bitwise-anchor", 0.0,
+                                "fault_free acai == static replay")
+            row["nag_vs_fault_free"] = (
+                round(row["nag"] / baseline_nag[label], 4)
+                if baseline_nag.get(label) else None)
+            rows.append(row)
+            common.emit(
+                f"resilience/{scenario}/{label}", row["p50_step_us"],
+                f"NAG={row['nag']:.4f};goodput={row['goodput']:.3f};"
+                f"degraded={row['degraded_share']:.3f};"
+                f"p99={row['p99_ms']:.0f}ms")
+
+    # acceptance target, recorded honestly either way: under the hard
+    # outage AÇAI's degraded mode should retain >= 60% of fault-free NAG
+    # while shedding < 5% of requests
+    acai_out = next(r for r in rows
+                    if r["label"] == "acai" and r["scenario"] == "outage")
+    target = {
+        "nag_ratio": acai_out["nag_vs_fault_free"],
+        "shed_share": acai_out["shed_share"],
+        "met": bool(acai_out["nag_vs_fault_free"] is not None
+                    and acai_out["nag_vs_fault_free"] >= 0.6
+                    and acai_out["shed_share"] < 0.05),
+    }
+    common.emit("resilience/outage-target", 0.0,
+                f"nag_ratio={target['nag_ratio']};"
+                f"shed={target['shed_share']};met={target['met']}")
+
+    BENCH_JSON.write_text(json.dumps(
+        {"full": full, "n": n, "d": d, "t": t, "h": h, "k": k,
+         "batch": BATCH, "c_f": round(c_f, 6), "requests": tt,
+         "backend": jax.default_backend(), "outage_target": target,
+         "rows": rows}, indent=2) + "\n")
+    common.emit("resilience/json", 0.0, str(BENCH_JSON.name))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    main(ap.parse_args().full)

@@ -38,7 +38,8 @@ def main() -> None:
                             experiments, fig1_gain_vs_requests,
                             fig2_gain_vs_h, fig3_gain_vs_cf, fig4_gain_vs_k,
                             fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
-                            fig8_rounding, kernel_bench, regret, serve_bench)
+                            fig8_rounding, kernel_bench, regret,
+                            resilience_bench, serve_bench)
 
     suites = {
         "fig1": (fig1_gain_vs_requests.main, ["sift", "amazon"]),
@@ -67,6 +68,9 @@ def main() -> None:
         # mutable-catalog sweep: rolling_catalog churn rates × policies +
         # the refresh-amortization curve — emits BENCH_churn.json
         "churn": (churn_bench.main, ["sift"]),
+        # resilient serving tier: fault scenarios × policies through the
+        # retry/degrade ladder (DESIGN.md §11) — emits BENCH_resilience.json
+        "resilience": (resilience_bench.main, ["sift"]),
     }
 
     if args.list:
@@ -88,6 +92,13 @@ def main() -> None:
                 fn(args.full, kind)
                 print(f"# {name}/{kind} done in {time.time() - t0:.0f}s",
                       file=sys.stderr)
+            except SystemExit as e:  # a suite (or its subprocess wrapper)
+                # called sys.exit: a non-zero/None-coded exit is a dead
+                # suite and must fail the run, not silently end it
+                if e.code not in (0, None):
+                    failures += 1
+                    print(f"# {name}/{kind} FAILED (exit {e.code})",
+                          file=sys.stderr)
             except Exception:  # noqa: BLE001 — keep the suite running
                 failures += 1
                 print(f"# {name}/{kind} FAILED", file=sys.stderr)

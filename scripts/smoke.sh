@@ -118,6 +118,52 @@ print(f"churn smoke OK ({len(events)} events, "
       f"NAG={res['gain'].sum() / (cfg.k * cfg.c_f * res['requests']):.3f})")
 EOF
 
+echo "== resilient-serving smoke: outage + recovery (DESIGN.md §11) =="
+python - <<'EOF'
+import numpy as np
+from repro.core import policy_api as PA
+from repro.core import trace
+from repro.core.costs import CostModel
+from repro.serve.remote import FaultSpec, FaultyRemote
+from repro.serve.resilience import (BreakerConfig, ResilienceConfig,
+                                    ResilientPolicy, replay_resilient)
+
+catalog, reqs, _ = trace.sift_like(n=256, d=16, t=96, seed=0)
+spec = PA.PolicySpec("acai", PA.TINY_POLICY_KWARGS["acai"])
+cm = CostModel(c_f=1.0)
+
+# hard outage across the middle third, recovery after (short breaker
+# cooldown so the half-open probe recloses inside the 96-request trace)
+rcfg = ResilienceConfig(breaker=BreakerConfig(cooldown_requests=16))
+pol = ResilientPolicy(PA.build_policy(spec, catalog, cm, seed=0),
+                      remote=FaultyRemote(FaultSpec(outages=((32, 64),))),
+                      resilience=rcfg)
+res = replay_resilient(pol, reqs, batch=8)
+c = res["counters"]
+assert c["remote_failures"] >= 32, c
+assert c["degraded"] + c["shed"] == c["remote_failures"], c
+assert res["goodput"] > 0.9, res["goodput"]          # ladder held
+deg = np.asarray(res["degraded"])
+assert deg[32:40].all(), "outage window not degraded"
+assert not deg[:32].any(), "pre-outage requests touched the ladder"
+assert pol.session.breaker.transitions >= 1          # opened on the outage
+assert np.isfinite(np.asarray(pol.inner.cache.state.y)).all()
+# recovery: the tail serves healthy again once the breaker recloses
+assert np.asarray(res["remote_failures"])[-8:].sum() == 0, "no recovery"
+
+# fault-rate 0 == the static replay, bit for bit
+pol0 = ResilientPolicy(PA.build_policy(spec, catalog, cm, seed=0),
+                       remote=FaultyRemote(FaultSpec()),
+                       resilience=ResilienceConfig())
+ref = PA.build_policy(spec, catalog, cm, seed=0).replay(reqs)
+got = replay_resilient(pol0, reqs, batch=8)
+assert np.array_equal(got["gain"], np.asarray(ref["gain"]))
+print(f"resilience smoke OK ({c['remote_failures']} failures, "
+      f"{c['degraded']} degraded, {c['shed']} shed, "
+      f"goodput={res['goodput']:.3f}, "
+      f"{pol.session.breaker.transitions} breaker transitions)")
+EOF
+
 echo "== examples (tiny mode) =="
 for ex in examples/*.py; do
     echo "-- $ex --tiny"

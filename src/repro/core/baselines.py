@@ -102,6 +102,12 @@ class ServerOracle:
         self._base = 0  # trace position of table row 0
         self.ids = np.empty((0, self.kmax), np.int32)
         self.d2 = np.empty((0, self.kmax), np.float32)  # squared euclidean
+        # stale-read repair block (DESIGN.md §11): per-position recomputed
+        # answers from `ensure`, each booked as a remote call; bare stale
+        # reads without an `ensure` still raise (silent staleness is the
+        # bug the PR-5 KeyError was added to catch).
+        self._repaired: dict[int, tuple] = {}
+        self.remote_recomputes = 0
         if requests is not None:
             self.extend(requests)
 
@@ -142,6 +148,7 @@ class ServerOracle:
         self._base = self.t
         self.ids = np.empty((0, self.kmax), np.int32)
         self.d2 = np.empty((0, self.kmax), np.float32)
+        self._repaired = {}  # repairs answer the *old* catalog: stale too
 
     def add_objects(self, embs: np.ndarray) -> np.ndarray:
         """Append new catalog rows; returns their (monotonic) ids."""
@@ -198,26 +205,61 @@ class ServerOracle:
                 f"requests= / extend) or pass ts=None for online mode")
         return row
 
+    def ensure(self, ts: np.ndarray, rs: np.ndarray) -> int:
+        """Repair stale answer-table reads (DESIGN.md §11): recompute the
+        answers for any of `ts` outside the retained block from the
+        request embeddings `rs` (aligned with `ts`) and hold them in a
+        per-batch repair block that `knn`/`knn_block`/`empty_cost`
+        consult first.  Each recomputed position is booked as a remote
+        call in `remote_recomputes` — this IS a server fetch, just an
+        explicit one — so churned baselines compose with the fault model
+        instead of crashing on the PR-5 KeyError.  Returns the number of
+        positions recomputed (0 = everything was already retained)."""
+        ts = np.atleast_1d(np.asarray(ts, np.int64))
+        rs = np.atleast_2d(np.ascontiguousarray(rs, np.float32))
+        rows = ts - self._base
+        need = np.nonzero((rows < 0) | (rows >= self.ids.shape[0]))[0]
+        if need.size == 0:
+            return 0
+        # repairs are per-batch: policies never re-read past positions,
+        # so the block is reset instead of growing without bound
+        self._repaired = {}
+        for s in range(0, need.size, self._QUERY_BLOCK):
+            blk = need[s:s + self._QUERY_BLOCK]
+            ids, d2 = self._scan(rs[blk])
+            for j, pos in enumerate(blk):
+                self._repaired[int(ts[pos])] = (ids[j], d2[j])
+        self.remote_recomputes += int(need.size)
+        return int(need.size)
+
     def knn(self, t: int, k: int):
+        rep = self._repaired.get(int(t))
+        if rep is not None:
+            return rep[0][:k], rep[1][:k]
         row = self._row(t)
         return self.ids[row, :k], self.d2[row, :k]
 
     def knn_block(self, ts: np.ndarray, k: int) -> np.ndarray:
         """Answer ids for a whole batch of trace positions: (B, k)."""
-        rows = np.asarray(ts) - self._base
-        bad = (rows < 0) | (rows >= self.ids.shape[0])
-        if bad.any():
-            raise KeyError(
-                f"trace positions {np.asarray(ts)[bad]} are outside the "
-                f"retained answer block [{self._base}, {self.t}) — "
-                f"precompute them (constructor requests= / extend) or pass "
-                f"ts=None for online mode")
-        return self.ids[rows, :k]
+        ts = np.asarray(ts)
+        rows = ts - self._base
+        retained = (rows >= 0) & (rows < self.ids.shape[0])
+        if retained.all():
+            return self.ids[rows, :k]
+        # stale positions resolve through the repair block (or raise,
+        # via knn -> _row, when no ensure() repaired them)
+        out = np.empty((len(ts), k), np.int32)
+        for j, t in enumerate(ts):
+            out[j] = self.knn(int(t), k)[0]
+        return out
 
     def empty_cost(self, t: int, k: int, c_f: float, metric: str = "sqeuclidean"):
-        row = self._row(t)
-        d = (self.d2[row, :k] if metric == "sqeuclidean"
-             else np.sqrt(self.d2[row, :k]))
+        rep = self._repaired.get(int(t))
+        if rep is not None:
+            d2 = rep[1][:k]
+        else:
+            d2 = self.d2[self._row(t), :k]
+        d = d2 if metric == "sqeuclidean" else np.sqrt(d2)
         return float(d.sum() + k * c_f)
 
 
@@ -385,7 +427,10 @@ class KeyValueCache:
             key_tab = np.empty((b, 0), np.float32)
         req_gram = _dist2_cross(rs, rs)
         # serving costs: every object the batch can cache or serve = the
-        # batch-start cache content + each request's k' server answers
+        # batch-start cache content + each request's k' server answers;
+        # positions the (possibly churned) oracle no longer retains are
+        # repaired first — each a booked remote recompute (DESIGN.md §11)
+        self.oracle.ensure(np.asarray(ts), rs)
         cached = self.cached_object_ids()
         srv = self.oracle.knn_block(ts, max(self.k, self.k_prime))
         cat_ids = np.unique(np.concatenate([cached.ravel(), srv.ravel()]))
@@ -469,6 +514,39 @@ class KeyValueCache:
     def _answer_cost_miss(self, t: int) -> StepResult:
         cost = self.oracle.empty_cost(t, self.k, self.c_f, self.metric)
         return StepResult(cost, 0.0, False, 0, self.k_prime)
+
+    def step_degraded(self, r_emb: np.ndarray, *, ceiling: float = 2.0):
+        """Remote-failure serve (DESIGN.md §11): answer from cached
+        objects only.  No oracle read and no entry insert/touch — the LRU
+        state must not learn from a request whose fetch failed.  Cached
+        objects within `ceiling x` the request's best healthy-serve cost
+        (nearest catalog dissimilarity + c_f — the same scale-free
+        ceiling as repro.serve.resilience.degraded_serve) are eligible;
+        with none the request is shed.  The empty-cache reference cost is
+        computed locally against the live catalog (distances are
+        edge-local metadata — only payload fetches need the remote
+        tier), so gains stay comparable with the healthy path's.
+
+        Returns (StepResult, shed: bool)."""
+        r_emb = np.asarray(r_emb, np.float32)
+        valid = getattr(self.oracle, "valid", None)
+        cat = (self.catalog if valid is None
+               else self.catalog[valid[: len(self.catalog)]])
+        d_all = self._cost(np.sort(_dist2(r_emb, cat))[: self.k])
+        empty_slots = d_all + self.c_f  # j-th cheapest all-remote answer
+        empty_cost = float(empty_slots.sum())
+        ids = self.cached_object_ids()
+        if ids.size == 0:
+            return StepResult(empty_cost, 0.0, False, 0, 0), True
+        d_loc = self._cost(np.sort(_dist2(r_emb, self.catalog[ids])))
+        d_loc = d_loc[d_loc <= ceiling * (d_all[0] + self.c_f)][: self.k]
+        if d_loc.size == 0:
+            return StepResult(empty_cost, 0.0, False, 0, 0), True
+        # per-slot pairing against the empty-cache answer, clamped at 0
+        gain = float(np.maximum(empty_slots[: d_loc.size] - d_loc,
+                                0.0).sum())
+        return StepResult(float(d_loc.sum()), gain, True, int(d_loc.size),
+                          0), False
 
     # -- per-policy hooks ---------------------------------------------------
 

@@ -52,6 +52,14 @@ class StepMetrics(NamedTuple):
     # max(0, |x_t| - cap), 0 when debug is off or the generator is uncapped
     # (see repro.index.candidates._local_cap).
     local_overflow: jax.Array | int = 0
+    # resilient-serving counters (DESIGN.md §11): all zero on the
+    # fault-free path, populated by repro.serve.resilience when a
+    # RemoteBackend is attached.
+    degraded: jax.Array | int = 0         # served locally under failure
+    shed: jax.Array | int = 0             # failed, nothing local in ceiling
+    remote_failures: jax.Array | int = 0  # request's remote tier failed
+    retries: jax.Array | int = 0          # extra attempts beyond the first
+    deadline_misses: jax.Array | int = 0  # deadline budget exceeded
 
 
 class CacheState(NamedTuple):
@@ -250,6 +258,7 @@ def make_step(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
         y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg.oma)
         x_new = _round_state(cfg, k_round, y_new, state.y, state.x, state.t)
 
+        zero = jnp.zeros((), jnp.int32)
         metrics = StepMetrics(
             gain_int=served.gain,
             gain_frac=gain_frac,
@@ -258,6 +267,8 @@ def make_step(cfg: AcaiConfig, candidate_fn: Callable) -> Callable:
             fetched=rounding_lib.movement(x_new, state.x),
             occupancy=jnp.sum(x_new),
             local_overflow=_overflow_counter(cfg, candidate_fn, state.x),
+            degraded=zero, shed=zero, remote_failures=zero, retries=zero,
+            deadline_misses=zero,
         )
         return CacheState(y_new, x_new, state.t + 1, key), metrics
 
@@ -302,6 +313,9 @@ def finish_step_batched(cfg_up: AcaiConfig, state: CacheState, key, k_round,
     moved = rounding_lib.movement(x_new, state.x)
     if local_overflow is None:
         local_overflow = jnp.zeros((), jnp.int32)
+    zeros = jnp.zeros((batch,), jnp.int32)  # resilience counters: always
+    # materialized as arrays so tree_map/reshape over metrics never meets
+    # a Python-int leaf (repro.serve.resilience overrides them per batch)
     metrics = StepMetrics(
         gain_int=gain_int, gain_frac=gain_frac, cost=cost,
         served_local=served_local,
@@ -309,6 +323,8 @@ def finish_step_batched(cfg_up: AcaiConfig, state: CacheState, key, k_round,
             [jnp.zeros((batch - 1,), moved.dtype), moved[None]]),
         occupancy=jnp.full((batch,), jnp.sum(x_new)),
         local_overflow=jnp.full((batch,), local_overflow),
+        degraded=zeros, shed=zeros, remote_failures=zeros, retries=zeros,
+        deadline_misses=zeros,
     )
     return CacheState(y_new, x_new, state.t + batch, key), metrics
 
@@ -494,7 +510,8 @@ class AcaiCache:
 
     def __init__(self, catalog: jax.Array, cfg: "AcaiConfig", candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
-                 sharded_kwargs: dict | None = None, c_f: float | None = None):
+                 sharded_kwargs: dict | None = None, c_f: float | None = None,
+                 remote=None, resilience=None):
         from repro.index.base import resolve_spec
 
         if not isinstance(cfg, AcaiConfig):
@@ -602,6 +619,32 @@ class AcaiCache:
                 candidate_fn = per_request_view(candidate_fn_batched)
             self._step = jax.jit(make_step(cfg, candidate_fn))
         self.state = init_state(catalog.shape[0], cfg, seed=seed)
+        # resilient serving mode (DESIGN.md §11): None until a
+        # RemoteBackend is attached; then serve_update(_batch) dispatch
+        # through the retry/degrade ladder in repro.serve.resilience.
+        self._res = None
+        if remote is not None or resilience is not None:
+            self.attach_remote(remote, resilience)
+
+    def attach_remote(self, remote=None, resilience=None):
+        """Switch serving to the resilient mode (DESIGN.md §11): requests
+        first run their remote interaction (retries / hedging / deadline /
+        circuit breaker) against `remote` — a `repro.serve.remote`
+        backend — and failed requests are served through the graceful-
+        degradation ladder.  With a healthy backend (or `remote=None`,
+        the always-ok `OracleRemote`) every batch still takes the static
+        jitted step, bitwise identical to the unattached cache.  Returns
+        the `AcaiResilience` controller (counters, breaker log, reports).
+        """
+        from repro.serve.resilience import AcaiResilience
+
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "resilient serving on a sharded mesh is not implemented "
+                "yet (ROADMAP open item) — attach the remote to a "
+                "single-device cache")
+        self._res = AcaiResilience(self, remote, resilience)
+        return self._res
 
     def _sharded_step(self, batch: int) -> Callable:
         from repro.core.distributed import make_step_sharded
@@ -610,9 +653,13 @@ class AcaiCache:
                                  **self._sharded_kwargs)
 
     def serve_update(self, r: jax.Array) -> StepMetrics:
-        if self._mutated:  # B = 1 view of the mutable batch step
+        if self._res is not None or self._mutated:
+            # B = 1 view of the resilient / mutable batch step
             m = self.serve_update_batch(r[None, :])
             return jax.tree_util.tree_map(lambda a: a[0], m)
+        from repro.index.base import check_finite_queries
+
+        check_finite_queries(r, "AcaiCache.serve_update")
         if self._step is None:  # lazy B = 1 view of the sharded step
             b1 = self._sharded_step(1)
 
@@ -629,7 +676,20 @@ class AcaiCache:
         the whole batch, per-request StepMetrics (B,).  The jitted step is
         cached per batch size.  Once the catalog has mutated the step runs
         in two stages (eager candidate slab against the live structures +
-        the jitted `make_mutable_step` tail)."""
+        the jitted `make_mutable_step` tail).  With a RemoteBackend
+        attached (`attach_remote`), the batch routes through the
+        resilience ladder instead (DESIGN.md §11)."""
+        from repro.index.base import check_finite_queries
+
+        rs = jnp.atleast_2d(rs)
+        check_finite_queries(rs, "AcaiCache.serve_update_batch")
+        if self._res is not None:
+            return self._res.serve_update_batch(rs)
+        return self._serve_batch_direct(rs)
+
+    def _serve_batch_direct(self, rs: jax.Array) -> StepMetrics:
+        """The fault-oblivious serving step (also the all-ok fast path of
+        the resilient mode, keeping fault-rate 0 bitwise identical)."""
         rs = jnp.atleast_2d(rs)
         b = rs.shape[0]
         if self._mutated:

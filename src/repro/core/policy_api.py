@@ -483,13 +483,18 @@ class BaselinePolicy:
     h = property(lambda self: self.policy.h)
 
     def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        from repro.index.base import check_finite_queries
+
         rs = np.atleast_2d(np.asarray(rs, np.float32))
+        check_finite_queries(rs, f"{self.spec.name}.serve_update_batch")
         if ts is None:  # online mode: answer the new requests on demand
             ts = self.oracle.extend(rs)
         results = self.policy.step_batch(np.asarray(ts), rs)
         self._total_gain += float(sum(r.gain for r in results))
         self._t += len(results)
         occ = float(len(self.policy.cached_object_ids()))
+        zeros = np.zeros(len(results), np.int32)  # resilience counters:
+        # arrays (not the int defaults) so tree_map over metrics is safe
         return StepMetrics(
             gain_int=np.array([r.gain for r in results]),
             gain_frac=np.array([r.gain for r in results]),
@@ -499,6 +504,8 @@ class BaselinePolicy:
             fetched=np.array([r.fetched for r in results], np.int32),
             occupancy=np.full(len(results), occ),
             local_overflow=np.zeros(len(results), np.int32),
+            degraded=zeros, shed=zeros, remote_failures=zeros,
+            retries=zeros, deadline_misses=zeros,
         )
 
     def serve_update(self, r, t=None) -> StepMetrics:

@@ -111,6 +111,29 @@ def arrays_bytes(*arrays) -> int:
     return int(sum(a.size * a.dtype.itemsize for a in arrays if a is not None))
 
 
+def check_finite_queries(rs, where: str) -> None:
+    """Query-path input hygiene: reject NaN/Inf query vectors with a clear
+    error instead of letting them corrupt top-k and OMA state (a NaN query
+    makes every distance NaN, which silently breaks the top-k masking and
+    then poisons the subgradient forever).
+
+    Host-side check only: under `jax.jit` tracing (the candidate
+    generators call `Index.query` inside traced functions) the values are
+    abstract, so the check is skipped — eager entry points
+    (`AcaiCache.serve_update*`, `BaselinePolicy.serve_update*`, direct
+    backend queries) are where poisoned inputs actually enter."""
+    if isinstance(rs, jax.core.Tracer):
+        return
+    a = np.asarray(rs)
+    if np.issubdtype(a.dtype, np.floating) and not np.isfinite(a).all():
+        rows = (np.nonzero(~np.isfinite(a.reshape(a.shape[0], -1)).all(
+            axis=1))[0].tolist() if a.ndim > 1 else [0])
+        raise ValueError(
+            f"{where}: query vector(s) contain NaN/Inf (rows {rows}) — "
+            f"refusing to serve; sanitize the embedding upstream (a NaN "
+            f"query would corrupt top-k and OMA state)")
+
+
 # ---------------------------------------------------------------------------
 # Mutable-catalog slab machinery (DESIGN.md §10)
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.index.base import MutableRows, arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
 from repro.kernels import ops
 
 
@@ -57,6 +57,7 @@ class FlatIndex(MutableRows):
         return arrays_bytes(self.embeddings, self.valid)
 
     def query(self, q: jax.Array, k: int):
+        check_finite_queries(q, "FlatIndex.query")
         # masked only once a row has ever died or the slab has spare
         # capacity — the fresh-build path stays bitwise identical
         masked = self._live != self.capacity

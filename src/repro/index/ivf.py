@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
 
@@ -142,6 +142,7 @@ class IVFFlatIndex(MutableRows):
                             self.valid)
 
     def query(self, q: jax.Array, k: int):
+        check_finite_queries(q, "IVFFlatIndex.query")
         # candidates come from the id tables (never from unused slab rows),
         # so the mask is only needed once a row has been tombstoned
         return _ivf_query(q, self.embeddings, self.centroids, self.invlists,

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
 from repro.kernels import ops
 
 
@@ -130,6 +130,7 @@ class LSHIndex(MutableRows):
                             self.valid)
 
     def query(self, q: jax.Array, k: int):
+        check_finite_queries(q, "LSHIndex.query")
         return _lsh_query(q, self.embeddings, self.planes_j, self.buckets,
                           self.valid, k, masked=self._live != self._n_slots)
 

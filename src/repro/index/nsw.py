@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
 from repro.kernels import ops
 
 
@@ -218,6 +218,7 @@ class NSWIndex(MutableRows):
                             self.valid)
 
     def query(self, q: jax.Array, k: int):
+        check_finite_queries(q, "NSWIndex.query")
         # dead nodes keep routing until refresh (mark-deleted semantics),
         # so the mask is needed as soon as any row is tombstoned; unlinked
         # slab rows beyond n_slots are unreachable (no in-edges).

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes
+from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
 from repro.index.ivf import build_invlists, invlist_append
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
@@ -217,6 +217,7 @@ class IVFPQIndex(MutableRows):
                             self.centroids, self.invlists)
 
     def query(self, q: jax.Array, k: int):
+        check_finite_queries(q, "IVFPQIndex.query")
         return _ivfpq_query(q, self.embeddings, self.centroids,
                             self.invlists, self.codes,
                             self.codec.codebooks, self.valid, k,

@@ -28,6 +28,17 @@ multi-device path (catalog + cache state sharded over a (1, P) mesh,
 repro.core.distributed) — on hosts without accelerators it forces P
 host-platform placeholder devices, so the XLA flag must be set before any
 jax import (same discipline as launch/dryrun.py).
+
+The `--remote-fault-*` flags inject a deterministic fault schedule into
+the remote tier and route every request through the resilient serving
+path (DESIGN.md §11): retries with capped backoff, optional hedging
+(`--hedge-ms`), per-request deadlines (`--deadline-ms`), a circuit
+breaker, and graceful degradation to the best local candidates when the
+remote is down.  Works for any policy:
+
+  ... --remote-fault-rate 0.2 --deadline-ms 250
+  ... --remote-fault-outage 10:30 --policy sim_lru
+  ... --remote-fault-latency-ms 40 --hedge-ms 80 --retries 3
 """
 
 from __future__ import annotations
@@ -112,6 +123,29 @@ def main():
     ap.add_argument("--churn-warm", type=float, default=0.5,
                     help="fraction of --catalog live at start under churn "
                          "(the rest inserts over the run)")
+    res = ap.add_argument_group(
+        "resilient serving (DESIGN.md §11; any flag here switches the "
+        "semantic-cache tier onto the resilient remote path)")
+    res.add_argument("--remote-fault-rate", type=float, default=0.0,
+                     help="per-attempt transient error probability")
+    res.add_argument("--remote-fault-corrupt", type=float, default=0.0,
+                     help="per-attempt corrupt-payload (NaN) probability")
+    res.add_argument("--remote-fault-latency-ms", type=float, default=5.0,
+                     help="median remote fetch latency (lognormal)")
+    res.add_argument("--remote-fault-outage", action="append", default=[],
+                     metavar="START:END",
+                     help="hard outage window in request indices "
+                          "(repeatable), e.g. 10:30")
+    res.add_argument("--remote-fault-seed", type=int, default=0,
+                     help="fault-schedule seed (same seed = same faults)")
+    res.add_argument("--deadline-ms", type=float, default=None,
+                     help="per-request deadline budget (virtual ms); a "
+                          "late success counts as a miss")
+    res.add_argument("--hedge-ms", type=float, default=None,
+                     help="fire a hedged second request this far into a "
+                          "slow attempt (tail-latency insurance)")
+    res.add_argument("--retries", type=int, default=None,
+                     help="extra attempts after the first (default 2)")
     args = ap.parse_args()
 
     try:
@@ -155,6 +189,39 @@ def main():
         raise SystemExit(
             "--churn-rate needs the single-device cache (online mutation "
             "on a sharded mesh is a ROADMAP open item)")
+
+    # resilient remote tier (DESIGN.md §11): any fault/deadline/hedge flag
+    # switches the semantic-cache tier onto the resilient serving path
+    from repro.serve.remote import FaultSpec, FaultyRemote, \
+        parse_outage_windows
+    from repro.serve.resilience import ResilienceConfig, RetryConfig
+
+    faulty = (args.remote_fault_rate > 0 or args.remote_fault_corrupt > 0
+              or args.remote_fault_outage
+              or args.remote_fault_latency_ms != 5.0
+              or args.remote_fault_seed != 0)
+    resilient = (faulty or args.deadline_ms is not None
+                 or args.hedge_ms is not None or args.retries is not None)
+    remote = resilience = None
+    if resilient:
+        if args.mesh_shards > 1:
+            raise SystemExit(
+                "the resilient serving path needs the single-device cache "
+                "(a fault-aware sharded step is a ROADMAP open item)")
+        try:
+            fault = FaultSpec(
+                error_rate=args.remote_fault_rate,
+                corrupt_rate=args.remote_fault_corrupt,
+                latency_ms=args.remote_fault_latency_ms,
+                outages=parse_outage_windows(args.remote_fault_outage),
+                seed=args.remote_fault_seed)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        remote = FaultyRemote(fault)
+        retry = (RetryConfig(max_retries=args.retries)
+                 if args.retries is not None else RetryConfig())
+        resilience = ResilienceConfig(deadline_ms=args.deadline_ms,
+                                      retry=retry, hedge_ms=args.hedge_ms)
 
     mesh = None
     if args.mesh_shards > 1:
@@ -206,7 +273,8 @@ def main():
               if args.churn_rate > 0 else args.catalog)
     lm = SemanticCachedLM(params, cfg, catalog[:n_warm], payloads[:n_warm],
                           gen_fn, h=args.cache_size, k=4, mesh=mesh,
-                          index_spec=index_spec, policy_spec=policy_spec)
+                          index_spec=index_spec, policy_spec=policy_spec,
+                          remote=remote, resilience=resilience)
     insert_ptr, expire_ptr, acc = n_warm, 0, 0.0
     events = 0
     for i in range(args.requests):
@@ -232,6 +300,17 @@ def main():
     print(f"semantic cache ({tier}): {s.requests} requests, "
           f"{s.served_local}/{s.requests * lm.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")
+    if resilient:
+        ses = lm.policy.session
+        c = ses.counters
+        pct = ses.latency_percentiles()
+        print(f"resilience (fault={fault.to_dict()}): "
+              f"{c.remote_failures} remote failures, {c.retries} retries, "
+              f"{c.degraded} degraded, {c.shed} shed, "
+              f"{c.deadline_misses} deadline misses, {c.hedges} hedges, "
+              f"{c.fast_fails} breaker fast-fails, "
+              f"{ses.breaker.transitions} breaker transitions, "
+              f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,20 @@
 """Serving substrate: prefill/decode engine with KV/SSM caches, continuous
-batching, and the AÇAI semantic cache tier."""
+batching, the AÇAI semantic cache tier, and the resilient remote tier
+(fault-injected backend + retry/hedge/deadline/degrade, DESIGN.md §11)."""
 
 from repro.serve.engine import ServeEngine, generate, make_decode_step, make_prefill
+from repro.serve.remote import (FaultSpec, FaultyRemote, OracleRemote,
+                                RemoteBackend, parse_outage_windows,
+                                payload_ok)
+from repro.serve.resilience import (CircuitBreaker, RemoteSession,
+                                    ResilienceConfig, ResilientPolicy,
+                                    RetryConfig, replay_resilient,
+                                    simulate_request)
 from repro.serve.semantic_cache import SemanticCachedLM, embed_prompt
 
-__all__ = ["SemanticCachedLM", "ServeEngine", "embed_prompt", "generate",
-           "make_decode_step", "make_prefill"]
+__all__ = ["CircuitBreaker", "FaultSpec", "FaultyRemote", "OracleRemote",
+           "RemoteBackend", "RemoteSession", "ResilienceConfig",
+           "ResilientPolicy", "RetryConfig", "SemanticCachedLM",
+           "ServeEngine", "embed_prompt", "generate", "make_decode_step",
+           "make_prefill", "parse_outage_windows", "payload_ok",
+           "replay_resilient", "simulate_request"]

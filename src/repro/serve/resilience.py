@@ -1,0 +1,612 @@
+"""Resilient serving tier: deadlines, retries, hedging, circuit breaking,
+and the graceful-degradation ladder (DESIGN.md §11).
+
+The failure model (repro.serve.remote) only blocks *remote fetches*; the
+approximate indexes and the embedding catalog are edge-local metadata, so
+distances stay computable and the OMA ascent (Eq. 55) is fault-
+independent.  That observation shapes the whole ladder — on a remote
+failure the policy still knows exactly which cached object is closest:
+
+1. retry — capped exponential backoff with deterministic jitter, up to
+   `RetryConfig.max_retries` extra attempts inside the deadline budget;
+2. hedge — an optional second request fired `hedge_ms` into a slow
+   attempt, completion = first success (tail-latency insurance);
+3. circuit-break — after `failure_threshold` consecutive failures the
+   breaker opens and requests fail fast for `cooldown_requests`, then a
+   half-open probe decides recovery (closed→open→half-open, with a
+   decision log);
+4. degrade — serve the best *local* candidates within
+   `degrade_ceiling * c_f` dissimilarity, booking their true cost into
+   `StepMetrics` (`degraded` counter); the OMA state keeps ascending and
+   the physical cache `x` freezes only while the batch is fully failed
+   (fetching needs the remote tier);
+5. shed — only when nothing local is inside the ceiling (`shed`
+   counter); NaN/corrupt payloads are detected (`remote.payload_ok`) and
+   treated as failures, never handed to policy state.
+
+Everything runs on a *virtual* clock fed by the remote backend's
+deterministic latency schedule — `simulate_request` is a pure function
+of `(remote, t, config)` modulo breaker state, so fault sweeps are
+replayable bit-for-bit and a null fault schedule leaves the serving path
+bitwise identical to `make_replay_batched` (pinned by
+tests/test_resilience.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gain as gain_lib
+from repro.core import oma as oma_lib
+from repro.core import policy as acai
+from repro.core import rounding as rounding_lib
+from repro.core.policy import StepMetrics
+from repro.serve.remote import (FaultSpec, FaultyRemote, OracleRemote,
+                                RemoteBackend, payload_ok)
+from repro.train.fault import StragglerMonitor
+
+#: schedule index of an attempt's hedge twin — far outside any plausible
+#: retry count, so hedge draws never collide with retry draws
+HEDGE_ATTEMPT_OFFSET = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryConfig:
+    """Per-attempt timeout + capped exponential backoff with jitter."""
+
+    max_retries: int = 2            # extra attempts after the first
+    backoff_ms: float = 10.0        # base delay before retry #1
+    backoff_cap_ms: float = 100.0   # exponential growth cap
+    jitter: float = 0.1             # uniform multiplicative jitter in [0, j]
+    attempt_timeout_ms: Optional[float] = 100.0  # None = wait forever
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Circuit-breaker thresholds (request-count based: the serving loop
+    has no wall clock, cooldown is measured in request indices)."""
+
+    failure_threshold: int = 8      # consecutive failures before opening
+    cooldown_requests: int = 64     # open duration before half-open
+    half_open_probes: int = 1       # probes allowed through half-open
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Everything the resilient serving path needs, in one knob."""
+
+    deadline_ms: Optional[float] = 250.0  # per-request budget (None = off)
+    retry: RetryConfig = dataclasses.field(default_factory=RetryConfig)
+    hedge_ms: Optional[float] = None      # fire a hedge this far into an
+    #                                       attempt (None = no hedging)
+    breaker: BreakerConfig = dataclasses.field(default_factory=BreakerConfig)
+    # degraded serve: local candidates within ceiling x the request's best
+    # healthy-serve cost (nearest dissimilarity + c_f) are eligible; shed
+    # past it (scale-free — see degraded_serve)
+    degrade_ceiling: float = 2.0
+    slow_fetch_factor: float = 3.0  # StragglerMonitor threshold on fetches
+    seed: int = 0                   # backoff-jitter stream
+
+    def __post_init__(self):
+        if self.degrade_ceiling <= 0:
+            raise ValueError(
+                f"degrade_ceiling must be > 0: {self.degrade_ceiling}")
+
+
+class RequestReport(NamedTuple):
+    """What one request experienced at the remote tier (virtual time)."""
+
+    ok: bool
+    retries: int          # attempts beyond the first
+    hedged: bool          # a hedge request fired
+    deadline_miss: bool   # the budget was exceeded
+    latency_ms: float     # virtual completion time
+    failure_kind: str     # '' | 'error' | 'corrupt' | 'outage' |
+    #                       'timeout' | 'deadline' | 'breaker_open'
+    fast_failed: bool     # breaker open: not even attempted
+
+
+class CircuitBreaker:
+    """closed -> open -> half-open state machine with a decision log.
+
+    `allow(t)` gates request `t` (False = fail fast), `record(t, ok)`
+    feeds the outcome back.  Transitions are appended to `log` as
+    `{"t", "from", "to", "reason"}` dicts — the decision log the bench
+    reports and the tests pin."""
+
+    def __init__(self, cfg: BreakerConfig = BreakerConfig()):
+        self.cfg = cfg
+        self.state = "closed"
+        self.failures = 0           # consecutive, while closed
+        self.opened_at = -1
+        self.probes_left = 0
+        self.log: List[dict] = []
+
+    def _to(self, state: str, t: int, reason: str) -> None:
+        self.log.append({"t": int(t), "from": self.state, "to": state,
+                         "reason": reason})
+        self.state = state
+
+    def allow(self, t: int) -> bool:
+        if self.state == "open":
+            if t - self.opened_at >= self.cfg.cooldown_requests:
+                self._to("half_open", t, "cooldown elapsed")
+                self.probes_left = self.cfg.half_open_probes
+            else:
+                return False
+        if self.state == "half_open":
+            if self.probes_left <= 0:
+                return False
+            self.probes_left -= 1
+        return True
+
+    def record(self, t: int, ok: bool) -> None:
+        if ok:
+            if self.state == "half_open":
+                self._to("closed", t, "probe succeeded")
+            self.failures = 0
+            return
+        if self.state == "half_open":
+            self.opened_at = t
+            self._to("open", t, "probe failed")
+        elif self.state == "closed":
+            self.failures += 1
+            if self.failures >= self.cfg.failure_threshold:
+                self.opened_at = t
+                self._to("open", t,
+                         f"{self.failures} consecutive failures")
+
+    @property
+    def transitions(self) -> int:
+        return len(self.log)
+
+
+def _one_attempt(remote: RemoteBackend, t: int, attempt: int,
+                 rc: RetryConfig) -> Tuple[bool, float, str]:
+    """(success, virtual latency, failure kind) of a single attempt."""
+    o = remote.outcome(t, attempt)
+    tmo = rc.attempt_timeout_ms
+    if o.kind == "ok":
+        if tmo is not None and o.latency_ms > tmo:
+            return False, tmo, "timeout"   # cancelled at the timeout
+        return True, o.latency_ms, ""
+    lat = o.latency_ms if tmo is None else min(o.latency_ms, tmo)
+    return False, lat, o.kind
+
+
+def _attempt_with_hedge(remote: RemoteBackend, t: int, attempt: int,
+                        cfg: ResilienceConfig) -> Tuple[bool, float, str, bool]:
+    """One attempt plus its optional hedge twin; completion = first
+    success (min over the two virtual finish times)."""
+    rc = cfg.retry
+    ok1, lat1, kind1 = _one_attempt(remote, t, attempt, rc)
+    if cfg.hedge_ms is None or lat1 <= cfg.hedge_ms:
+        return ok1, lat1, kind1, False
+    ok2, lat2, kind2 = _one_attempt(
+        remote, t, attempt + HEDGE_ATTEMPT_OFFSET, rc)
+    done2 = cfg.hedge_ms + lat2
+    if ok1 and ok2:
+        return True, min(lat1, done2), "", True
+    if ok1:
+        return True, lat1, "", True
+    if ok2:
+        return True, done2, "", True
+    return False, max(lat1, done2), kind1, True
+
+
+def _backoff_ms(rc: RetryConfig, seed: int, t: int, attempt: int) -> float:
+    base = min(rc.backoff_ms * (2.0 ** attempt), rc.backoff_cap_ms)
+    if rc.jitter <= 0:
+        return base
+    u = np.random.default_rng(
+        np.random.SeedSequence((seed, int(t), int(attempt), 0xB0FF))).random()
+    return base * (1.0 + rc.jitter * u)
+
+
+def simulate_request(remote: RemoteBackend, t: int, cfg: ResilienceConfig,
+                     breaker: Optional[CircuitBreaker] = None
+                     ) -> RequestReport:
+    """Run one request's remote interaction on the virtual clock.
+
+    Pure given (remote schedule, t, cfg) modulo breaker state: the
+    deterministic core the retry/hedge/deadline tests exercise.  A
+    success that lands past the deadline is a *failure* (the user is
+    gone) and books a deadline miss."""
+    if breaker is not None and not breaker.allow(t):
+        return RequestReport(False, 0, False, False, 0.0, "breaker_open",
+                             True)
+    rc = cfg.retry
+    now, retries, hedged, kind, ok = 0.0, 0, False, "", False
+    attempt = 0
+    while True:
+        ok_a, lat_a, kind_a, h = _attempt_with_hedge(remote, t, attempt, cfg)
+        hedged = hedged or h
+        now += lat_a
+        if ok_a:
+            ok = True
+            break
+        kind = kind_a
+        if attempt >= rc.max_retries:
+            break
+        if cfg.deadline_ms is not None and now >= cfg.deadline_ms:
+            break  # budget exhausted: no point starting another attempt
+        now += _backoff_ms(rc, cfg.seed, t, attempt)
+        if cfg.deadline_ms is not None and now >= cfg.deadline_ms:
+            break
+        attempt += 1
+        retries += 1
+    miss = cfg.deadline_ms is not None and now > cfg.deadline_ms
+    if ok and miss:
+        ok, kind = False, "deadline"  # a late answer is a failed answer
+    if breaker is not None:
+        breaker.record(t, ok)
+    return RequestReport(ok, retries, hedged, miss, now, kind, False)
+
+
+# ---------------------------------------------------------------------------
+# Session bookkeeping shared by the AÇAI and baseline resilient paths
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ResilienceCounters:
+    requests: int = 0
+    remote_failures: int = 0
+    retries: int = 0
+    deadline_misses: int = 0
+    degraded: int = 0
+    shed: int = 0
+    hedges: int = 0
+    fast_fails: int = 0
+    slow_fetches: int = 0   # flagged by the StragglerMonitor
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RemoteSession:
+    """Per-policy resilience state: the remote backend, its circuit
+    breaker, the slow-fetch monitor, cumulative counters, and the full
+    per-request report list (bench latency percentiles read it)."""
+
+    def __init__(self, remote: Optional[RemoteBackend] = None,
+                 cfg: Optional[ResilienceConfig] = None):
+        self.remote = remote if remote is not None else OracleRemote()
+        self.cfg = cfg if cfg is not None else ResilienceConfig()
+        self.breaker = CircuitBreaker(self.cfg.breaker)
+        # reused straggler detector (repro.train.fault): flags fetches
+        # slower than slow_fetch_factor x the running median
+        self.monitor = StragglerMonitor(
+            threshold=self.cfg.slow_fetch_factor, window=64, quiet=True)
+        self.counters = ResilienceCounters()
+        self.reports: List[RequestReport] = []
+        self.t = 0  # request counter = fault-schedule index
+
+    def simulate_batch(self, b: int) -> List[RequestReport]:
+        reps = [simulate_request(self.remote, t, self.cfg, self.breaker)
+                for t in range(self.t, self.t + b)]
+        c = self.counters
+        for off, r in enumerate(reps):
+            c.requests += 1
+            c.retries += r.retries
+            c.remote_failures += int(not r.ok)
+            c.deadline_misses += int(r.deadline_miss)
+            c.hedges += int(r.hedged)
+            c.fast_fails += int(r.fast_failed)
+            # slow-*fetch* detection: only completed fetches feed the
+            # straggler monitor (failures are counted above, not "slow")
+            if r.ok and self.monitor.record(
+                    self.t + off, r.latency_ms / 1e3):
+                c.slow_fetches += 1
+        self.t += b
+        self.reports.extend(reps)
+        return reps
+
+    def latency_percentiles(self) -> dict:
+        lats = [r.latency_ms for r in self.reports if not r.fast_failed]
+        if not lats:
+            return {"p50_ms": 0.0, "p99_ms": 0.0}
+        return {"p50_ms": float(np.percentile(lats, 50)),
+                "p99_ms": float(np.percentile(lats, 99))}
+
+
+# ---------------------------------------------------------------------------
+# AÇAI degraded serving (jitted)
+# ---------------------------------------------------------------------------
+
+def degraded_serve(d: jax.Array, x_cand: jax.Array, k: int, c_f,
+                   ceiling: float):
+    """Local-only serve for one failed request: up to k cached candidates
+    inside the cost ceiling, true dissimilarity costs booked.
+
+    The ceiling is *relative* — a candidate is eligible when its
+    dissimilarity is within `ceiling x` the request's best healthy-serve
+    cost (nearest-candidate dissimilarity + c_f).  An absolute
+    `ceiling * c_f` bound would be scale-dependent: on embeddings whose
+    dissimilarities dwarf c_f it sheds everything, on ones below c_f it
+    never sheds.  Relative to the healthy alternative, "within 2x of
+    what a working remote would have cost" means the same thing on every
+    catalog.
+
+    Returns (gain, cost, served_local, shed).  Gain pairs the j-th
+    cheapest served object against the j-th empty-cache answer slot
+    (d_j + c_f, the cost the request would have paid with a healthy
+    remote and an empty cache), clamped at 0 — the same reference the
+    healthy serve's gain uses, so degraded gains stay comparable."""
+    elig = (x_cand > 0.5) & (d <= ceiling * (jnp.min(d) + c_f))
+    d_elig = jnp.where(elig, d, jnp.inf)
+    neg, _ = jax.lax.top_k(-d_elig, k)
+    d_served = -neg                       # +inf on unserved slots
+    got = jnp.isfinite(d_served)
+    neg_e, _ = jax.lax.top_k(-d, k)       # empty-cache answer slots
+    empty_slots = -neg_e + c_f
+    gain = jnp.sum(jnp.where(got, jnp.maximum(empty_slots - d_served, 0.0),
+                             0.0))
+    cost = jnp.sum(jnp.where(got, d_served, 0.0))
+    n_served = jnp.sum(got.astype(jnp.int32))
+    return gain, cost, n_served, n_served == 0
+
+
+degraded_serve_batch = jax.vmap(degraded_serve,
+                                in_axes=(0, 0, None, None, None))
+
+
+def make_degraded_step(cfg: acai.AcaiConfig, batch: int, ceiling: float,
+                       eta_scale: float | None = None) -> Callable:
+    """Jitted mini-batch step for partially/fully failed batches:
+    (state, ids, d, valid, ok (B,), alive) -> (state', StepMetrics (B,)).
+
+    Mirrors `apply_candidates_batched` exactly on the OMA side — the
+    subgradient needs only local distances, so y ascends on every
+    request, failed or not — and overrides the *serving* outcome on
+    failed rows with the degradation ladder.  The physical cache `x`
+    freezes when the whole batch failed (a fetch needs the remote tier);
+    with any success in the batch, rounding proceeds as usual."""
+    cfg_up = acai.scaled_config(cfg, batch, eta_scale)
+
+    @jax.jit
+    def step(state: acai.CacheState, ids, d, valid, ok, alive):
+        key, k_round = jax.random.split(state.key)
+        n = state.y.shape[0]
+        ids_c = jnp.clip(ids, None, n - 1)
+        x_cand = jnp.where(valid, state.x[ids_c], 0.0)
+        y_cand = jnp.where(valid, state.y[ids_c], 0.0)
+
+        served = gain_lib.serve_batch(d, x_cand, cfg.k, cfg.c_f)
+        deg_gain, deg_cost, deg_served, deg_shed = degraded_serve_batch(
+            d, x_cand, cfg.k, cfg.c_f, ceiling)
+        gain_frac, g_cand = gain_lib.gain_and_subgradient_batch(
+            d, y_cand, cfg.k, cfg.c_f)
+
+        g_full = (
+            jnp.zeros_like(state.y)
+            .at[ids_c.reshape(-1)]
+            .add(jnp.where(valid, g_cand, 0.0).reshape(-1) / batch)
+        )
+        y_new = oma_lib.oma_update(state.y, g_full, cfg.h, cfg_up.oma)
+        y_new = jnp.where(alive, y_new, 0.0)
+        x_rounded = acai._round_state(cfg_up, k_round, y_new, state.y,
+                                      state.x, state.t, width=batch)
+        x_new = jnp.where(jnp.any(ok), x_rounded, state.x)
+        moved = rounding_lib.movement(x_new, state.x)
+
+        ok_b = ok.astype(bool)
+        metrics = StepMetrics(
+            gain_int=jnp.where(ok_b, served.gain, deg_gain),
+            gain_frac=gain_frac,
+            cost=jnp.where(ok_b, served.cost, deg_cost),
+            served_local=jnp.where(
+                ok_b, jnp.sum(served.from_cache.astype(jnp.int32), axis=1),
+                deg_served),
+            fetched=jnp.concatenate(
+                [jnp.zeros((batch - 1,), moved.dtype), moved[None]]),
+            occupancy=jnp.full((batch,), jnp.sum(x_new)),
+            local_overflow=jnp.zeros((batch,), jnp.int32),
+            degraded=(~ok_b & ~deg_shed).astype(jnp.int32),
+            shed=(~ok_b & deg_shed).astype(jnp.int32),
+            remote_failures=(~ok_b).astype(jnp.int32),
+        )
+        return acai.CacheState(y_new, x_new, state.t + batch, key), metrics
+
+    return step
+
+
+class AcaiResilience:
+    """The AÇAI cache's resilient serving mode (built by
+    `AcaiCache.attach_remote`).
+
+    Batches whose every request succeeded take the cache's *static jitted
+    step unchanged* — at fault-rate 0 the resilient path is therefore
+    bitwise identical to `make_replay_batched`.  Batches with failures
+    run the two-stage degraded path: the candidate slab is generated
+    eagerly (same generators as the mutable mode) and handed to the
+    jitted `make_degraded_step` tail."""
+
+    def __init__(self, cache, remote: Optional[RemoteBackend] = None,
+                 resilience: Optional[ResilienceConfig] = None):
+        self.cache = cache
+        self.session = RemoteSession(remote, resilience)
+        self._deg_steps: dict[int, Callable] = {}
+
+    def serve_update_batch(self, rs: jax.Array) -> StepMetrics:
+        rs = jnp.atleast_2d(rs)
+        b = rs.shape[0]
+        reps = self.session.simulate_batch(b)
+        ok = np.array([r.ok for r in reps])
+        retries = np.array([r.retries for r in reps], np.int32)
+        misses = np.array([r.deadline_miss for r in reps], np.int32)
+        cache = self.cache
+        if ok.all():
+            m = cache._serve_batch_direct(rs)
+            if retries.any() or misses.any():  # recovered retries/lates
+                m = m._replace(retries=jnp.asarray(retries),
+                               deadline_misses=jnp.asarray(misses))
+            return m
+        # two-stage degraded path: eager slab + jitted degraded tail
+        if cache._mutated:
+            ids, d, valid = cache._mut_fn(rs, cache.state.x)
+        else:
+            ids, d, valid = cache._fn_batched(rs, cache.state.x)
+        step = self._deg_steps.get(b)
+        if step is None:
+            step = make_degraded_step(cache.cfg, b,
+                                      self.session.cfg.degrade_ceiling)
+            self._deg_steps[b] = step
+        cache.state, m = step(cache.state, ids, d, valid, jnp.asarray(ok),
+                              cache.valid)
+        self.session.counters.degraded += int(jnp.sum(m.degraded))
+        self.session.counters.shed += int(jnp.sum(m.shed))
+        return m._replace(retries=jnp.asarray(retries),
+                          deadline_misses=jnp.asarray(misses))
+
+
+# ---------------------------------------------------------------------------
+# Generic policy wrapper (AÇAI delegates; baselines get the ladder here)
+# ---------------------------------------------------------------------------
+
+class ResilientPolicy:
+    """CachePolicy wrapper adding the resilient remote tier to any
+    registered policy.
+
+    AÇAI policies delegate to the cache's own resilient mode
+    (`AcaiCache.attach_remote`); baseline policies split each mini-batch
+    into consecutive healthy runs — served through the inner policy
+    unchanged — and per-request degraded serves
+    (`KeyValueCache.step_degraded`) for the failures.  Every CachePolicy
+    surface (spec/k/c_f/h, mutation, NAG) passes through, so harnesses
+    never notice the wrapper."""
+
+    def __init__(self, inner, remote: Optional[RemoteBackend] = None,
+                 resilience: Optional[ResilienceConfig] = None):
+        self.inner = inner
+        cache = getattr(inner, "cache", None)
+        if cache is not None and hasattr(cache, "attach_remote"):
+            self._acai = True
+            self.session = cache.attach_remote(remote, resilience).session
+        else:
+            self._acai = False
+            self.session = RemoteSession(remote, resilience)
+
+    spec = property(lambda self: self.inner.spec)
+    k = property(lambda self: self.inner.k)
+    c_f = property(lambda self: self.inner.c_f)
+    h = property(lambda self: self.inner.h)
+
+    def normalized_gain(self, total_gain: float, t: int) -> float:
+        return self.inner.normalized_gain(total_gain, t)
+
+    def add_objects(self, vectors):
+        return self.inner.add_objects(vectors)
+
+    def remove_objects(self, ids) -> None:
+        self.inner.remove_objects(ids)
+
+    def refresh(self) -> None:
+        self.inner.refresh()
+
+    def serve_update(self, r, t=None) -> StepMetrics:
+        import jax.tree_util as jtu
+
+        m = self.serve_update_batch(np.atleast_2d(np.asarray(r)),
+                                    None if t is None else np.asarray([t]))
+        return jtu.tree_map(lambda a: a[0], m)
+
+    def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        if self._acai:
+            return self.inner.serve_update_batch(rs, ts)
+        return self._baseline_batch(rs, ts)
+
+    def _baseline_batch(self, rs, ts) -> StepMetrics:
+        rs = np.atleast_2d(np.asarray(rs, np.float32))
+        b = rs.shape[0]
+        reps = self.session.simulate_batch(b)
+        ok = np.array([r.ok for r in reps])
+        cols = {f: np.zeros(b, np.float64) for f in
+                ("gain_int", "gain_frac", "cost")}
+        icols = {f: np.zeros(b, np.int32) for f in
+                 ("served_local", "fetched", "degraded", "shed")}
+        occ = np.zeros(b, np.float64)
+        pol = self.inner.policy
+        ceiling = self.session.cfg.degrade_ceiling
+        i = 0
+        while i < b:
+            if ok[i]:
+                j = i
+                while j < b and ok[j]:
+                    j += 1
+                sub = self.inner.serve_update_batch(
+                    rs[i:j], None if ts is None else np.asarray(ts)[i:j])
+                for f in cols:
+                    cols[f][i:j] = np.asarray(getattr(sub, f), np.float64)
+                for f in ("served_local", "fetched"):
+                    icols[f][i:j] = np.asarray(getattr(sub, f), np.int32)
+                occ[i:j] = np.asarray(sub.occupancy, np.float64)
+                i = j
+            else:
+                res, shed = pol.step_degraded(rs[i], ceiling=ceiling)
+                cols["gain_int"][i] = cols["gain_frac"][i] = res.gain
+                cols["cost"][i] = res.cost
+                icols["served_local"][i] = res.served_local
+                icols["degraded"][i] = int(not shed)
+                icols["shed"][i] = int(shed)
+                occ[i] = float(len(pol.cached_object_ids()))
+                self.session.counters.degraded += int(not shed)
+                self.session.counters.shed += int(shed)
+                i += 1
+        return StepMetrics(
+            gain_int=cols["gain_int"], gain_frac=cols["gain_frac"],
+            cost=cols["cost"], served_local=icols["served_local"],
+            fetched=icols["fetched"], occupancy=occ,
+            local_overflow=np.zeros(b, np.int32),
+            degraded=icols["degraded"], shed=icols["shed"],
+            remote_failures=(~ok).astype(np.int32),
+            retries=np.array([r.retries for r in reps], np.int32),
+            deadline_misses=np.array([r.deadline_miss for r in reps],
+                                     np.int32),
+        )
+
+
+def replay_resilient(pol, reqs, *, batch: int = 8) -> dict:
+    """Drive a trace through a resilient policy and aggregate the
+    resilience story: per-request metric arrays plus goodput (fraction of
+    requests answered, healthy or degraded), degraded/shed shares,
+    virtual latency percentiles, retry/deadline/hedge totals, and the
+    breaker's transition count.  The generic driver behind
+    `benchmarks/resilience_bench.py` and the smoke-test outage scenario."""
+    import time as _time
+
+    reqs = np.asarray(reqs)
+    t = reqs.shape[0]
+    tt = (t // batch) * batch
+    if tt == 0:
+        raise ValueError(f"trace of {t} requests is shorter than one "
+                         f"mini-batch (batch={batch})")
+    fields = ("gain_int", "cost", "served_local", "fetched", "occupancy",
+              "degraded", "shed", "remote_failures", "retries",
+              "deadline_misses")
+    out = {f: [] for f in fields}
+    times = []
+    for s in range(0, tt, batch):
+        t0 = _time.time()
+        m = pol.serve_update_batch(reqs[s:s + batch], None)
+        times.append(_time.time() - t0)
+        for f in fields:
+            out[f].append(np.asarray(getattr(m, f), np.float64))
+    res = {f: np.concatenate(v) for f, v in out.items()}
+    res["gain"] = res.pop("gain_int")
+    res["hit"] = res["served_local"] > 0
+    res["requests"] = tt
+    res["p50_step_s"] = float(np.percentile(times, 50)) if times else 0.0
+    ses = pol.session
+    res["goodput"] = 1.0 - float(res["shed"].sum()) / tt
+    res["degraded_share"] = float(res["degraded"].sum()) / tt
+    res["shed_share"] = float(res["shed"].sum()) / tt
+    res["counters"] = ses.counters.to_dict()
+    res["breaker_transitions"] = ses.breaker.transitions
+    res["breaker_log"] = list(ses.breaker.log)
+    res.update(ses.latency_percentiles())
+    return res

@@ -60,7 +60,8 @@ class SemanticCachedLM:
                  catalog_payloads: list, generate_fn: Callable,
                  h: int = 64, k: int = 4, c_f: Optional[float] = None,
                  eta: Optional[float] = None, seed: int = 0, mesh=None,
-                 index_spec=None, policy_spec=None):
+                 index_spec=None, policy_spec=None, remote=None,
+                 resilience=None):
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
@@ -103,8 +104,17 @@ class SemanticCachedLM:
         self.policy = policy_api.build_policy(
             spec, catalog_embs, CostModel(c_f=c_f), index_spec=index_spec,
             mesh=mesh, seed=seed)
+        # resilient serving (DESIGN.md §11): with a remote backend and/or
+        # resilience config, every request first runs its remote
+        # interaction (retry / hedge / deadline / breaker) and failures
+        # fall down the degradation ladder — transparently, for any policy
+        if remote is not None or resilience is not None:
+            from repro.serve.resilience import ResilientPolicy
+
+            self.policy = ResilientPolicy(self.policy, remote, resilience)
         # back-compat: the underlying AcaiCache (None for baselines)
-        self.cache = getattr(self.policy, "cache", None)
+        self.cache = getattr(getattr(self.policy, "inner", self.policy),
+                             "cache", None)
         self.stats = ServeStats()
         self._embed_batch = jax.jit(jax.vmap(embed_prompt, in_axes=(None, 0)))
 

@@ -27,19 +27,28 @@ log = logging.getLogger("repro.fault")
 
 
 class StragglerMonitor:
-    def __init__(self, threshold: float = 2.0, window: int = 50):
+    def __init__(self, threshold: float = 2.0, window: int = 50,
+                 quiet: bool = False):
         self.threshold = threshold
         self.times = collections.deque(maxlen=window)
         self.flagged: list[tuple[int, float]] = []
+        # quiet: flag + record without log spam (the resilient serving
+        # tier reuses the monitor per request; its counters report)
+        self.quiet = quiet
 
     def record(self, step: int, seconds: float) -> bool:
         self.times.append(seconds)
-        med = sorted(self.times)[len(self.times) // 2]
+        # true median: even-length windows average the two middle samples
+        # (upper-middle alone biases the threshold high, hiding stragglers)
+        ts = sorted(self.times)
+        mid = len(ts) // 2
+        med = ts[mid] if len(ts) % 2 else 0.5 * (ts[mid - 1] + ts[mid])
         slow = len(self.times) >= 5 and seconds > self.threshold * med
         if slow:
             self.flagged.append((step, seconds))
-            log.warning("straggler: step %d took %.3fs (median %.3fs)",
-                        step, seconds, med)
+            if not self.quiet:
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, seconds, med)
         return slow
 
 

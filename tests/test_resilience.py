@@ -1,0 +1,441 @@
+"""Resilient serving tier (DESIGN.md §11): deterministic fault schedules,
+retry/backoff/hedge/deadline semantics, the circuit-breaker state machine,
+graceful degradation (AÇAI + baselines), input hygiene, the stale-answer
+repair path, and the fault-rate-0 bitwise-parity pin vs
+`make_replay_batched`."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core import policy, trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel
+from repro.core.policy_api import TINY_POLICY_KWARGS as TINY
+from repro.serve.remote import (FaultSpec, FaultyRemote, OracleRemote,
+                                parse_outage_windows, payload_ok)
+from repro.serve.resilience import (BreakerConfig, CircuitBreaker,
+                                    ResilienceConfig, ResilientPolicy,
+                                    RetryConfig, _backoff_ms,
+                                    replay_resilient, simulate_request)
+from repro.train.fault import StragglerMonitor
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog, reqs, _ = trace.sift_like(n=400, d=16, t=96, seed=0)
+    return catalog, reqs, CostModel(c_f=1.0)
+
+
+# ---------------------------------------------------------------------------
+# fault schedule: deterministic, order-independent, per-attempt independent
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic_and_order_independent():
+    spec = FaultSpec(error_rate=0.3, corrupt_rate=0.1, latency_sigma=0.4,
+                     seed=7)
+    a, b = FaultyRemote(spec), FaultyRemote(spec)
+    # same (seed, t, attempt) -> same outcome, regardless of query order
+    fwd = [a.outcome(t) for t in range(32)]
+    rev = [b.outcome(t) for t in reversed(range(32))][::-1]
+    assert fwd == rev
+    # replays bit-for-bit on a fresh instance
+    assert fwd == [FaultyRemote(spec).outcome(t) for t in range(32)]
+    # a retry draws an independent (but reproducible) fate
+    outs = {a.outcome(5, attempt=i) for i in range(16)}
+    assert len(outs) > 1
+    assert a.outcome(5, attempt=3) == b.outcome(5, attempt=3)
+    # different seeds reshuffle the schedule
+    other = FaultyRemote(FaultSpec(error_rate=0.3, corrupt_rate=0.1,
+                                   latency_sigma=0.4, seed=8))
+    assert [other.outcome(t) for t in range(32)] != fwd
+
+
+def test_null_spec_is_always_ok():
+    spec = FaultSpec()
+    assert spec.is_null
+    r = FaultyRemote(spec)
+    assert all(r.outcome(t, a).ok for t in range(64) for a in range(3))
+    assert not FaultSpec(error_rate=0.01).is_null
+    assert not FaultSpec(outages=((3, 9),)).is_null
+
+
+def test_outage_windows_and_parsing():
+    spec = FaultSpec(outages=((10, 20),), seed=0)
+    r = FaultyRemote(spec)
+    assert spec.in_outage(10) and spec.in_outage(19)
+    assert not spec.in_outage(9) and not spec.in_outage(20)
+    assert r.outcome(15).kind == "outage"
+    assert r.outcome(15, attempt=5).kind == "outage"  # retries can't help
+    with pytest.raises(ConnectionError):
+        r.fetch(np.zeros((1, 4), np.float32), 2, t=15)
+    assert parse_outage_windows(["10:20", "40:50"]) == ((10, 20), (40, 50))
+    with pytest.raises(ValueError):
+        parse_outage_windows(["20:10"])
+    with pytest.raises(ValueError):
+        parse_outage_windows(["nope"])
+    with pytest.raises(ValueError):
+        FaultSpec(error_rate=1.5)
+
+
+def test_corrupt_payload_detected_never_consumed(setup):
+    catalog, reqs, _ = setup
+    oracle = B.ServerOracle(catalog, kmax=8)
+    r = FaultyRemote(FaultSpec(corrupt_rate=1.0), inner=OracleRemote(oracle))
+    assert r.outcome(0).kind == "corrupt"
+    ids, d2 = r.fetch(np.asarray(reqs[:2]), 4, t=0)
+    assert np.isnan(d2).any()
+    assert not payload_ok(ids, d2)          # the detection half
+    clean = FaultyRemote(FaultSpec(), inner=OracleRemote(oracle))
+    ids2, d22 = clean.fetch(np.asarray(reqs[:2]), 4, t=0)
+    assert payload_ok(ids2, d22)
+    assert not payload_ok(None)
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff / hedge / deadline
+# ---------------------------------------------------------------------------
+
+def test_retry_accounting_and_recovery():
+    cfg = ResilienceConfig(deadline_ms=None)
+    # permanent failure: every retry burned, failure kind preserved
+    rep = simulate_request(FaultyRemote(FaultSpec(error_rate=1.0)), 0, cfg)
+    assert not rep.ok and rep.retries == cfg.retry.max_retries
+    assert rep.failure_kind == "error"
+    # flaky: some request recovers on a retry (ok with retries > 0)
+    flaky = FaultyRemote(FaultSpec(error_rate=0.5, seed=2))
+    reps = [simulate_request(flaky, t, cfg) for t in range(64)]
+    assert any(r.ok and r.retries > 0 for r in reps)
+    # healthy: no retries, no misses
+    rep = simulate_request(FaultyRemote(FaultSpec()), 0, cfg)
+    assert rep.ok and rep.retries == 0 and not rep.deadline_miss
+
+
+def test_backoff_capped_exponential_with_jitter():
+    rc = RetryConfig(backoff_ms=10.0, backoff_cap_ms=35.0, jitter=0.2)
+    b0, b1, b2 = (_backoff_ms(rc, 0, 7, a) for a in range(3))
+    assert 10.0 <= b0 <= 12.0          # base * (1 + U[0, j])
+    assert 20.0 <= b1 <= 24.0          # doubled
+    assert 35.0 <= b2 <= 42.0          # capped before jitter
+    # deterministic per (seed, t, attempt); seed moves it
+    assert b0 == _backoff_ms(rc, 0, 7, 0)
+    assert b0 != _backoff_ms(rc, 1, 7, 0)
+    rc0 = RetryConfig(backoff_ms=10.0, jitter=0.0)
+    assert _backoff_ms(rc0, 0, 7, 0) == 10.0
+
+
+class _ScriptedRemote:
+    """attempt -> Outcome table (default ok@5ms), for exact-path tests."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def outcome(self, t, attempt=0):
+        from repro.serve.remote import Outcome
+
+        kind, lat = self.table.get(attempt, ("ok", 5.0))
+        return Outcome(kind, lat)
+
+
+def test_hedge_fires_on_slow_attempt_and_rescues():
+    from repro.serve.resilience import HEDGE_ATTEMPT_OFFSET
+
+    cfg = ResilienceConfig(deadline_ms=None, hedge_ms=50.0)
+    # slow primary, fast hedge twin: completion = hedge_ms + hedge latency
+    r = _ScriptedRemote({0: ("ok", 200.0),
+                         HEDGE_ATTEMPT_OFFSET: ("ok", 10.0)})
+    rep = simulate_request(r, 0, cfg)
+    assert rep.ok and rep.hedged and rep.latency_ms == 60.0
+    # fast primary: no hedge fires
+    rep = simulate_request(_ScriptedRemote({0: ("ok", 20.0)}), 0, cfg)
+    assert rep.ok and not rep.hedged and rep.latency_ms == 20.0
+    # hedging off: slow primary just completes
+    rep = simulate_request(_ScriptedRemote({0: ("ok", 200.0)}), 0,
+                           ResilienceConfig(deadline_ms=None,
+                                            retry=RetryConfig(
+                                                attempt_timeout_ms=None)))
+    assert rep.ok and not rep.hedged and rep.latency_ms == 200.0
+
+
+def test_deadline_semantics():
+    # a success landing past the deadline is a failure + a booked miss
+    cfg = ResilienceConfig(deadline_ms=100.0,
+                           retry=RetryConfig(attempt_timeout_ms=None))
+    rep = simulate_request(_ScriptedRemote({0: ("ok", 150.0)}), 0, cfg)
+    assert not rep.ok and rep.deadline_miss and rep.failure_kind == "deadline"
+    # an attempt slower than its timeout is cancelled -> 'timeout'
+    cfg = ResilienceConfig(deadline_ms=None,
+                           retry=RetryConfig(max_retries=0,
+                                             attempt_timeout_ms=100.0))
+    rep = simulate_request(_ScriptedRemote({0: ("ok", 150.0)}), 0, cfg)
+    assert not rep.ok and rep.failure_kind == "timeout"
+    assert rep.latency_ms == 100.0
+    # the retry loop stops once the budget is exhausted
+    cfg = ResilienceConfig(deadline_ms=30.0,
+                           retry=RetryConfig(max_retries=5,
+                                             attempt_timeout_ms=20.0))
+    rep = simulate_request(FaultyRemote(FaultSpec(error_rate=1.0,
+                                                  error_latency_ms=25.0)),
+                           0, cfg)
+    assert not rep.ok and rep.retries < 5 and rep.deadline_miss
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+def test_breaker_state_machine_and_decision_log():
+    br = CircuitBreaker(BreakerConfig(failure_threshold=3,
+                                      cooldown_requests=10,
+                                      half_open_probes=1))
+    for t in range(3):
+        assert br.allow(t)
+        br.record(t, False)
+    assert br.state == "open"
+    assert br.log[-1] == {"t": 2, "from": "closed", "to": "open",
+                          "reason": "3 consecutive failures"}
+    # open: fail fast through the cooldown
+    assert not br.allow(5) and not br.allow(11)
+    # cooldown elapsed: half-open admits exactly one probe
+    assert br.allow(12) and br.state == "half_open"
+    br.record(12, False)              # probe fails -> reopen
+    assert br.state == "open" and not br.allow(13)
+    assert br.log[-1]["reason"] == "probe failed"
+    # second cooldown, successful probe -> closed
+    assert br.allow(22)
+    br.record(22, True)
+    assert br.state == "closed"
+    assert [e["to"] for e in br.log] == ["open", "half_open", "open",
+                                         "half_open", "closed"]
+    # a success resets the consecutive-failure count
+    br.record(23, False)
+    br.record(24, True)
+    br.record(25, False)
+    br.record(26, False)
+    assert br.state == "closed"
+
+
+def test_breaker_fast_fails_requests():
+    cfg = ResilienceConfig(
+        deadline_ms=None,
+        breaker=BreakerConfig(failure_threshold=2, cooldown_requests=100))
+    br = CircuitBreaker(cfg.breaker)
+    remote = FaultyRemote(FaultSpec(error_rate=1.0))
+    reps = [simulate_request(remote, t, cfg, br) for t in range(10)]
+    assert not any(r.ok for r in reps)
+    assert all(r.fast_failed for r in reps[2:])   # opened after 2 failures
+    assert reps[5].failure_kind == "breaker_open"
+    assert reps[5].retries == 0                   # not even attempted
+
+
+# ---------------------------------------------------------------------------
+# fault-rate 0: bitwise parity with the fault-oblivious pipeline
+# ---------------------------------------------------------------------------
+
+def test_fault_rate_zero_bitwise_parity(setup):
+    catalog, reqs, cm = setup
+    spec = PA.PolicySpec("acai", TINY["acai"])
+    res_pol = ResilientPolicy(PA.build_policy(spec, catalog, cm, seed=0),
+                              remote=FaultyRemote(FaultSpec()),
+                              resilience=ResilienceConfig())
+    ref_pol = PA.build_policy(spec, catalog, cm, seed=0)
+    got = replay_resilient(res_pol, reqs, batch=8)
+    ref = ref_pol.replay(reqs)       # make_replay_batched underneath
+    # gains AND full policy state: the resilient path took the static
+    # jitted step for every (all-ok) batch, so everything is bit-equal
+    assert np.array_equal(got["gain"], np.asarray(ref["gain"]))
+    ca, cb = res_pol.inner.cache, ref_pol.cache
+    assert np.array_equal(np.asarray(ca.state.y), np.asarray(cb.state.y))
+    assert np.array_equal(np.asarray(ca.state.x), np.asarray(cb.state.x))
+    assert got["counters"]["remote_failures"] == 0
+    assert got["goodput"] == 1.0 and got["degraded_share"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: AÇAI
+# ---------------------------------------------------------------------------
+
+def test_outage_degrades_freezes_x_keeps_state_finite(setup):
+    catalog, reqs, cm = setup
+    spec = PA.PolicySpec("acai", TINY["acai"])
+    pol = ResilientPolicy(
+        PA.build_policy(spec, catalog, cm, seed=0),
+        remote=FaultyRemote(FaultSpec(outages=((0, 10 ** 9),))),
+        resilience=ResilienceConfig())
+    cache = pol.inner.cache
+    x0 = np.asarray(cache.state.x).copy()
+    y0 = np.asarray(cache.state.y).copy()
+    m = pol.serve_update_batch(jnp.asarray(reqs[:8]))
+    # every request failed: the ladder served (degraded) or shed, never
+    # a healthy remote fetch; failure bookkeeping is per request
+    assert np.asarray(m.remote_failures).sum() == 8
+    assert (np.asarray(m.degraded) + np.asarray(m.shed)).sum() == 8
+    # physical cache frozen (a fetch needs the remote tier)...
+    assert np.array_equal(np.asarray(cache.state.x), x0)
+    # ...but the OMA ascent continued on local distances, and stayed finite
+    y1 = np.asarray(cache.state.y)
+    assert not np.array_equal(y1, y0)
+    assert np.isfinite(y1).all()
+    # degraded rows book true dissimilarity cost, shed rows book nothing
+    deg = np.asarray(m.degraded).astype(bool)
+    assert (np.asarray(m.cost)[deg] >= 0).all()
+    assert (np.asarray(m.served_local)[deg] > 0).all()
+    assert (np.asarray(m.served_local)[np.asarray(m.shed).astype(bool)]
+            == 0).all()
+
+
+def test_partial_failure_batch_still_updates_x(setup):
+    catalog, reqs, cm = setup
+    spec = PA.PolicySpec("acai", TINY["acai"])
+    pol = ResilientPolicy(
+        PA.build_policy(spec, catalog, cm, seed=0),
+        remote=FaultyRemote(FaultSpec(error_rate=0.4, seed=1)),
+        resilience=ResilienceConfig())
+    res = replay_resilient(pol, reqs, batch=8)
+    c = res["counters"]
+    assert 0 < c["remote_failures"] < c["requests"]
+    # mixed batches exist, so rounding proceeded: occupancy stays at h
+    assert np.allclose(res["occupancy"], pol.h)
+    assert np.isfinite(np.asarray(pol.inner.cache.state.y)).all()
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: baselines
+# ---------------------------------------------------------------------------
+
+def test_baseline_resilient_path(setup):
+    catalog, reqs, cm = setup
+    spec = PA.PolicySpec("sim_lru", TINY["sim_lru"])
+    oracle = B.ServerOracle(catalog, kmax=16)
+    # warm the cache with a healthy prefix, then a hard outage
+    pol = ResilientPolicy(
+        PA.build_policy(spec, catalog, cm, oracle=oracle, seed=0),
+        remote=FaultyRemote(FaultSpec(outages=((48, 96),))),
+        resilience=ResilienceConfig())
+    res = replay_resilient(pol, reqs, batch=8)
+    c = res["counters"]
+    assert c["remote_failures"] >= 48 - 8  # outage + breaker ringing
+    assert c["degraded"] + c["shed"] == c["remote_failures"]
+    # the healthy prefix really served through the inner policy
+    assert res["gain"][:48].sum() > 0
+    assert np.asarray(res["degraded"])[:40].sum() == 0
+    # metrics keep the StepMetrics contract (per-request vectors)
+    m = pol.serve_update_batch(reqs[:8])
+    for f in policy.StepMetrics._fields:
+        assert np.asarray(getattr(m, f)).shape == (8,), f
+    # B = 1 view
+    m1 = pol.serve_update(reqs[0])
+    assert np.asarray(m1.gain_int).shape == ()
+
+
+def test_step_degraded_relative_ceiling(setup):
+    catalog, _, cm = setup
+    oracle = B.ServerOracle(catalog, kmax=16)
+    pol = B.SimLRU(catalog, oracle, h=16, k=4, k_prime=8, c_theta=1.5,
+                   c_f=cm.c_f)
+    rng = np.random.default_rng(0)
+    # empty cache: nothing local -> shed, zero gain
+    res, shed = pol.step_degraded(catalog[0] + 0.01 * rng.normal(size=16)
+                                  .astype(np.float32))
+    assert shed and res.gain == 0.0 and res.served_local == 0
+    # warm the cache, then re-ask the most recent request: its k' server
+    # answers are cached, the nearest at distance ~0 -> gain ~= c_f
+    ts = oracle.extend(catalog[:8])
+    for t, r in zip(ts, catalog[:8]):
+        pol.step(int(t), r)
+    res, shed = pol.step_degraded(catalog[7])
+    assert not shed and res.served_local > 0 and res.gain > 0
+    assert res.fetched == 0   # degraded mode never inserts
+    # and the LRU state was untouched: no new entry, no reorder
+    before = list(pol.entries)
+    pol.step_degraded(catalog[7])
+    assert list(pol.entries) == before
+
+
+# ---------------------------------------------------------------------------
+# input hygiene: NaN/Inf queries rejected at every entry point
+# ---------------------------------------------------------------------------
+
+def test_poisoned_queries_rejected(setup):
+    catalog, reqs, cm = setup
+    bad = np.asarray(reqs[:8]).copy()
+    bad[3, 0] = np.nan
+    bad_inf = np.asarray(reqs[:8]).copy()
+    bad_inf[1, 2] = np.inf
+
+    pol = PA.build_policy(PA.PolicySpec("acai", TINY["acai"]), catalog, cm)
+    y0 = np.asarray(pol.cache.state.y).copy()
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        pol.serve_update_batch(bad)
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        pol.cache.serve_update(jnp.asarray(bad[3]))
+    # rejection happened before any state was touched
+    assert np.array_equal(np.asarray(pol.cache.state.y), y0)
+
+    oracle = B.ServerOracle(catalog, kmax=16)
+    bpol = PA.build_policy(PA.PolicySpec("sim_lru", TINY["sim_lru"]),
+                           catalog, cm, oracle=oracle)
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        bpol.serve_update_batch(bad_inf)
+
+    from repro.index.base import IndexSpec, build_index
+    idx = build_index(IndexSpec("flat"), np.asarray(catalog))
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        idx.query(bad, 4)
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: straggler median, stale-answer repair
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_even_window_median():
+    warm = [1.0, 1.0, 1.0, 5.0, 5.0]
+    mon = StragglerMonitor(threshold=2.0, window=8)
+    for i, s in enumerate(warm):
+        mon.record(i, s)
+    # window [1, 1, 1, 5, 5, 6.5]: true median 3.0 -> 6.5 > 2 * 3 flags;
+    # the old upper-middle "median" (5.0) needed > 10 and missed it
+    assert mon.record(5, 6.5)
+    assert mon.flagged[-1] == (5, 6.5)
+    # quiet mode still records + flags (counters report, log stays silent)
+    q = StragglerMonitor(threshold=2.0, window=8, quiet=True)
+    for i, s in enumerate(warm):
+        q.record(i, s)
+    assert q.record(5, 6.5) and q.flagged
+
+
+def test_server_oracle_stale_repair(setup):
+    catalog, reqs, _ = setup
+    oracle = B.ServerOracle(catalog, requests=reqs[:8], kmax=8)
+    ids0, _ = oracle.knn(0, 4)
+    oracle.add_objects(np.asarray(reqs[8:9], np.float32))  # invalidates
+    with pytest.raises(KeyError):
+        oracle.knn(0, 4)            # bare stale read still raises (PR-5 pin)
+    assert oracle.remote_recomputes == 0
+    n = oracle.ensure(np.arange(8), np.asarray(reqs[:8]))
+    assert n == 8 and oracle.remote_recomputes == 8
+    ids1, d21 = oracle.knn(0, 4)
+    assert ids1.shape == (4,) and np.isfinite(d21).all()
+    assert oracle.empty_cost(0, 4, 1.0) > 0
+    assert oracle.knn_block(np.arange(8), 4).shape == (8, 4)
+    # a healthy (retained) table needs no repair at all
+    fresh = B.ServerOracle(catalog, requests=reqs[:8], kmax=8)
+    assert fresh.ensure(np.arange(8), np.asarray(reqs[:8])) == 0
+    assert fresh.remote_recomputes == 0
+
+
+def test_kv_cache_step_batch_repairs_through_oracle(setup):
+    """A churned catalog no longer crashes the batched baselines: stale
+    answer-table reads route through ensure() as booked remote calls."""
+    catalog, reqs, cm = setup
+    oracle = B.ServerOracle(catalog, requests=reqs[:16], kmax=16)
+    pol = B.SimLRU(catalog, oracle, h=16, k=4, k_prime=8, c_theta=1.5,
+                   c_f=cm.c_f)
+    pol.step_batch(np.arange(8), np.asarray(reqs[:8]))
+    oracle.add_objects(np.asarray(reqs[90:92], np.float32))
+    pol.catalog = oracle.catalog    # baselines score against the live rows
+    results = pol.step_batch(np.arange(8, 16), np.asarray(reqs[8:16]))
+    assert len(results) == 8
+    assert oracle.remote_recomputes == 8
