@@ -39,7 +39,7 @@ def main() -> None:
                             fig2_gain_vs_h, fig3_gain_vs_cf, fig4_gain_vs_k,
                             fig5_sensitivity, fig6_mirror_maps, fig7_dissect,
                             fig8_rounding, kernel_bench, regret,
-                            resilience_bench, serve_bench)
+                            resilience_bench, serve_bench, serving_bench)
 
     suites = {
         "fig1": (fig1_gain_vs_requests.main, ["sift", "amazon"]),
@@ -71,6 +71,11 @@ def main() -> None:
         # resilient serving tier: fault scenarios × policies through the
         # retry/degrade ladder (DESIGN.md §11) — emits BENCH_resilience.json
         "resilience": (resilience_bench.main, ["sift"]),
+        # online serving engine: arrival processes × offered loads ×
+        # policies through the queue/batch-former/admission path
+        # (DESIGN.md §12) — emits BENCH_serving.json; asserts the
+        # fixed-window bitwise pin against make_replay_batched every run
+        "serving": (serving_bench.main, ["sift"]),
     }
 
     if args.list:

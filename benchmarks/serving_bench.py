@@ -1,0 +1,194 @@
+"""Online serving sweep (DESIGN.md §12) — BENCH_serving.json.
+
+Latency-vs-offered-load curves through the online serving engine
+(`repro.serve.queue`): seeded arrival processes feed a request queue, the
+dynamic batch former coalesces pending requests into `serve_update_batch`
+calls, and admission control sheds on queue depth — all on the virtual
+clock (deterministic, nothing sleeps).  The grid is {poisson,
+flash_crowd} × {0.5, 0.8, 1.2}·capacity × {acai, sim_lru, qcache}, plus
+one closed-loop row per policy (offered load there adapts to service
+capacity, so it has no load axis).  Per row: p50/p99/p999 end-to-end
+latency with the queue/service split, goodput at the SLO, shed share,
+batch-size histogram, NAG, and the p50 serving-step wall time.
+
+Built-in check, every run: the engine's fixed-window configuration
+(pure size trigger at the offline batch, no admission) must be *bitwise*
+identical — per-request gain AND policy state (y, x) — to
+`make_replay_batched` over the same trace, the same drift pin
+tests/test_serving_engine.py asserts (the PR-6 fault-rate-0 discipline).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel, calibrate_fetch_cost
+from repro.serve.arrivals import ArrivalSpec
+from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                               OnlineServingEngine, ServiceModel,
+                               fixed_window_engine)
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+
+BATCH = 8
+WINDOW_MS = 5.0       # batch-former max wait
+SLO_MS = 25.0         # goodput latency target (virtual ms)
+QUEUE_CAP = 8 * BATCH  # admission: shed beyond this queue depth
+LOADS = (0.5, 0.8, 1.2)  # fraction of ServiceModel capacity at BATCH
+ARRIVAL_SEED = 11
+
+
+def _policies(c_f: float, h: int, k: int):
+    """(label, PolicySpec) cells of the sweep — same trio as the
+    resilience suite so the two benches share row identities."""
+    return (
+        ("acai", PA.PolicySpec("acai", {"h": h, "k": k, "batch": BATCH})),
+        ("sim_lru", PA.PolicySpec("sim_lru",
+                                  {"h": h, "k": k, "k_prime": 2 * k,
+                                   "c_theta": 1.5 * c_f})),
+        ("qcache", PA.PolicySpec("qcache", {"h": h, "k": k})),
+    )
+
+
+def _arrival(kind: str, rate_rps: float) -> ArrivalSpec:
+    if kind == "closed_loop":
+        # population sized so the loop can saturate the server when
+        # think time is short relative to service time
+        return ArrivalSpec(kind="closed_loop", users=2 * BATCH,
+                           think_ms=2.0, seed=ARRIVAL_SEED)
+    return ArrivalSpec(kind=kind, rate_rps=rate_rps, seed=ARRIVAL_SEED)
+
+
+def _run_cell(label, spec, arrival, load, catalog, reqs, cm, service):
+    pol = PA.build_policy(spec, catalog, cm, seed=0)
+    eng = OnlineServingEngine(
+        pol,
+        former=BatchFormerConfig(max_batch=BATCH, max_wait_ms=WINDOW_MS),
+        admission=AdmissionConfig(queue_cap=QUEUE_CAP),
+        service=service)
+    t0 = time.time()
+    res = eng.run(reqs, arrival, slo_ms=SLO_MS)
+    wall = time.time() - t0
+    served = max(res["served"], 1)
+    return {
+        "policy": spec.to_dict(), "label": label,
+        "arrival": arrival.to_dict(), "offered_load": load,
+        "offered_rps": (arrival.rate_rps
+                        if arrival.kind != "closed_loop" else None),
+        "slo_ms": SLO_MS,
+        "nag": round(float(res["gain"].sum()) / (pol.k * pol.c_f * served),
+                     4),
+        "goodput_slo": round(res["goodput_slo"], 4),
+        "shed_share": round(res["shed_share"], 4),
+        "hit_ratio": round(float(res["hit"][~res["shed"]].mean()), 4),
+        "p50_ms": round(res["p50_ms"], 3),
+        "p99_ms": round(res["p99_ms"], 3),
+        "p999_ms": round(res["p999_ms"], 3),
+        "queue_p50_ms": round(res["queue_p50_ms"], 3),
+        "queue_p99_ms": round(res["queue_p99_ms"], 3),
+        "service_p50_ms": round(res["service_p50_ms"], 3),
+        "mean_batch": round(res["mean_batch"], 3),
+        "batch_hist": res["batch_hist"],
+        "batches": res["batches"],
+        "max_queue_depth": res["max_queue_depth"],
+        "p50_step_us": round(res["p50_step_s"] * 1e6, 1),
+        "us_per_request": round(wall / max(res["requests"], 1) * 1e6, 2),
+        "requests": res["requests"],
+        "served": res["served"],
+    }
+
+
+def _assert_offline_pin(spec, catalog, reqs, cm, service):
+    """The drift pin, run on every bench invocation: fixed-window engine
+    == make_replay_batched, bitwise, on gain AND state (y, x)."""
+    pol_on = PA.build_policy(spec, catalog, cm, seed=0)
+    pol_off = PA.build_policy(spec, catalog, cm, seed=0)
+    res = fixed_window_engine(pol_on, BATCH, service).run(
+        reqs, _arrival("poisson", 0.8 * service.capacity_rps(BATCH)))
+    ref = pol_off.replay(reqs)
+    assert np.array_equal(res["gain"], ref["gain"]), (
+        "fixed-window online engine diverged from make_replay_batched "
+        "(gain)")
+    for field in ("y", "x"):
+        a = np.asarray(getattr(pol_on.cache.state, field))
+        b = np.asarray(getattr(pol_off.cache.state, field))
+        assert np.array_equal(a, b), (
+            f"fixed-window online engine diverged from make_replay_batched "
+            f"(state.{field})")
+    common.emit("serving/bitwise-pin", 0.0,
+                "fixed-window engine == make_replay_batched (gain, y, x)")
+
+
+def main(full: bool = False, kind: str = None) -> None:
+    if kind not in (None, "sift"):
+        raise ValueError(
+            "the serving suite sweeps arrival processes on the sift_like "
+            "trace (load is the variable under study); --trace does not "
+            "apply here")
+    n, t, d = (20000, 8192, 32) if full else (2000, 2048, 16)
+    h, k = (400, 10) if full else (64, 8)
+
+    import jax
+    import jax.numpy as jnp
+
+    catalog, reqs, _ = trace.sift_like(n=n, d=d, t=t, jitter=0.05, seed=17)
+    c_f = float(calibrate_fetch_cost(jnp.asarray(catalog),
+                                     kth=min(50, n - 1), sample=256))
+    cm = CostModel(c_f=c_f)
+    service = ServiceModel()
+    cap = service.capacity_rps(BATCH)
+
+    _assert_offline_pin(PA.PolicySpec("acai", {"h": h, "k": k,
+                                               "batch": BATCH}),
+                        catalog, reqs, cm, service)
+
+    rows = []
+    for arr_kind in ("poisson", "flash_crowd"):
+        for load in LOADS:
+            arrival = _arrival(arr_kind, load * cap)
+            for label, spec in _policies(c_f, h, k):
+                row = _run_cell(label, spec, arrival, load, catalog, reqs,
+                                cm, service)
+                rows.append(row)
+                common.emit(
+                    f"serving/{arr_kind}/x{load:g}/{label}",
+                    row["p50_ms"],
+                    f"p99={row['p99_ms']:.1f}ms;"
+                    f"goodput={row['goodput_slo']:.3f};"
+                    f"shed={row['shed_share']:.3f};"
+                    f"batch={row['mean_batch']:.2f}")
+    for label, spec in _policies(c_f, h, k):
+        row = _run_cell(label, spec, _arrival("closed_loop", 0.0), None,
+                        catalog, reqs, cm, service)
+        rows.append(row)
+        common.emit(
+            f"serving/closed_loop/{label}", row["p50_ms"],
+            f"p99={row['p99_ms']:.1f}ms;goodput={row['goodput_slo']:.3f};"
+            f"batch={row['mean_batch']:.2f}")
+
+    BENCH_JSON.write_text(json.dumps(
+        {"full": full, "n": n, "d": d, "t": t, "h": h, "k": k,
+         "batch": BATCH, "c_f": round(c_f, 6),
+         "service": service.to_dict(), "capacity_rps": round(cap, 3),
+         "window_ms": WINDOW_MS, "slo_ms": SLO_MS, "queue_cap": QUEUE_CAP,
+         "loads": list(LOADS), "arrival_seed": ARRIVAL_SEED,
+         "backend": jax.default_backend(), "bitwise_pin": True,
+         "rows": rows}, indent=2) + "\n")
+    common.emit("serving/json", 0.0, str(BENCH_JSON.name))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    main(ap.parse_args().full)

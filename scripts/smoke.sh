@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 tests + a fast all-backends index-API conformance pass + a
-# mutable-catalog churn smoke + every example in tiny mode + a 2-device
-# sharded-serving smoke step, so neither the unified index registry, the
-# churn subsystem, the runnable entry points, nor the distributed path
-# can silently rot on machines without accelerators.
+# mutable-catalog churn smoke + a resilient-serving smoke + an online-
+# serving smoke (two arrival kinds + the fixed-window equivalence pin) +
+# every example in tiny mode + a 2-device sharded-serving smoke step, so
+# neither the unified index registry, the churn subsystem, the serving
+# tiers, the runnable entry points, nor the distributed path can
+# silently rot on machines without accelerators.
 #
 #   bash scripts/smoke.sh
 set -euo pipefail
@@ -162,6 +164,51 @@ print(f"resilience smoke OK ({c['remote_failures']} failures, "
       f"{c['degraded']} degraded, {c['shed']} shed, "
       f"goodput={res['goodput']:.3f}, "
       f"{pol.session.breaker.transitions} breaker transitions)")
+EOF
+
+echo "== online-serving smoke: arrivals + batch former (DESIGN.md §12) =="
+python - <<'EOF'
+import numpy as np
+from repro.core import policy_api as PA
+from repro.core import trace
+from repro.core.costs import CostModel
+from repro.serve.arrivals import ArrivalSpec
+from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                               fixed_window_engine, serve_trace_online)
+
+catalog, reqs, _ = trace.sift_like(n=256, d=16, t=96, seed=0)
+spec = PA.PolicySpec("acai", PA.TINY_POLICY_KWARGS["acai"])
+cm = CostModel(c_f=1.0)
+
+# two arrival kinds through the dynamic batch former + admission control
+for kind in ("poisson", "closed_loop"):
+    arr = (ArrivalSpec(kind="poisson", rate_rps=2500.0, seed=3)
+           if kind == "poisson"
+           else ArrivalSpec(kind="closed_loop", users=6, think_ms=2.0,
+                            seed=3))
+    pol = PA.build_policy(spec, catalog, cm, seed=0)
+    res = serve_trace_online(
+        pol, reqs, arr,
+        former=BatchFormerConfig(max_batch=8, max_wait_ms=4.0),
+        admission=AdmissionConfig(queue_cap=32), slo_ms=25.0)
+    assert res["served"] + res["shed_total"] == 96, kind
+    assert (res["done_ms"] >= res["arrival_ms"]).all(), kind
+    print(f"  {kind:12s} p50={res['p50_ms']:.1f}ms p99={res['p99_ms']:.1f}ms "
+          f"goodput={res['goodput_slo']:.3f} batch={res['mean_batch']:.2f}")
+
+# the equivalence pin: fixed-window engine == make_replay_batched,
+# bitwise, on gain AND final policy state
+pol_on = PA.build_policy(spec, catalog, cm, seed=0)
+pol_off = PA.build_policy(spec, catalog, cm, seed=0)
+res = fixed_window_engine(pol_on, 8).run(
+    reqs, ArrivalSpec(kind="poisson", rate_rps=2500.0, seed=3))
+ref = pol_off.replay(reqs)
+assert np.array_equal(res["gain"], np.asarray(ref["gain"])), "gain drift"
+assert np.array_equal(np.asarray(pol_on.cache.state.y),
+                      np.asarray(pol_off.cache.state.y)), "y drift"
+assert np.array_equal(np.asarray(pol_on.cache.state.x),
+                      np.asarray(pol_off.cache.state.x)), "x drift"
+print("online-serving smoke OK (fixed-window pin holds)")
 EOF
 
 echo "== examples (tiny mode) =="

@@ -32,6 +32,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import gain as gain_lib
 from repro.core import oma as oma_lib
@@ -60,6 +61,26 @@ class StepMetrics(NamedTuple):
     remote_failures: jax.Array | int = 0  # request's remote tier failed
     retries: jax.Array | int = 0          # extra attempts beyond the first
     deadline_misses: jax.Array | int = 0  # deadline budget exceeded
+
+
+def shed_only_metrics(batch: int) -> StepMetrics:
+    """StepMetrics rows for requests that never reached a policy step:
+    zero gain/cost/occupancy with ``shed = 1`` on every row.
+
+    The online serving engine's admission control (queue-depth cap,
+    deadline shedding — DESIGN.md §12) books its victims through this
+    helper, so engine-level shedding lands in the *same* counters the
+    resilient tier populates (DESIGN.md §11) and downstream aggregation
+    (NAG, goodput, shed share) never branches on who shed the request.
+    """
+    zf = np.zeros(batch, np.float64)
+    zi = np.zeros(batch, np.int32)
+    return StepMetrics(
+        gain_int=zf, gain_frac=zf.copy(), cost=zf.copy(),
+        served_local=zi, fetched=zi.copy(), occupancy=zf.copy(),
+        local_overflow=zi.copy(), degraded=zi.copy(),
+        shed=np.ones(batch, np.int32), remote_failures=zi.copy(),
+        retries=zi.copy(), deadline_misses=zi.copy())
 
 
 class CacheState(NamedTuple):

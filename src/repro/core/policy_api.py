@@ -601,6 +601,34 @@ def replay_trace_steps(pol: CachePolicy, reqs, ts=None, *,
     return res
 
 
+def replay_trace_online(pol: CachePolicy, reqs, arrivals, *,
+                        former=None, admission=None, service=None,
+                        catalog=None, events=(), slo_ms=None) -> dict:
+    """Drive a trace through the *online* serving engine (DESIGN.md §12).
+
+    The arrival-aware counterpart of `replay_trace`: instead of feeding
+    fixed mini-batches, requests arrive on the virtual clock per
+    `arrivals` (an `ArrivalSpec`, a raw times array, or a ready source),
+    queue, get coalesced by the dynamic batch former, and may be shed by
+    admission control — so the result adds queueing/latency/shed fields
+    (`latency_ms`, `p50_ms`/`p99_ms`/`p999_ms`, `shed`, `goodput_slo`,
+    `batch_hist`, ...) to the usual per-request gain/cost arrays.  Works
+    for every registered policy: the engine only calls
+    `serve_update_batch(rs, None)` (and the §10 mutation surface when
+    `events` are given).  Defaults reproduce `fixed_window_engine`
+    semantics via BatchFormerConfig/AdmissionConfig/ServiceModel
+    defaults.  Lazy import keeps core free of a serve dependency."""
+    from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                                   ServiceModel, serve_trace_online)
+
+    return serve_trace_online(
+        pol, reqs, arrivals,
+        former=BatchFormerConfig() if former is None else former,
+        admission=AdmissionConfig() if admission is None else admission,
+        service=ServiceModel() if service is None else service,
+        catalog=catalog, events=events, slo_ms=slo_ms)
+
+
 # Smallest sensible spec params per registered policy (fractions of a
 # second on a tiny trace).  The single source of truth for the
 # conformance test (tests/test_policy_api.py) and the scripts/smoke.sh

@@ -39,6 +39,19 @@ remote is down.  Works for any policy:
   ... --remote-fault-rate 0.2 --deadline-ms 250
   ... --remote-fault-outage 10:30 --policy sim_lru
   ... --remote-fault-latency-ms 40 --hedge-ms 80 --retries 3
+
+`--arrival` switches the semantic-cache tier from fixed-batch querying to
+the online serving engine (DESIGN.md §12): requests arrive on the virtual
+clock per the chosen process, queue, and are coalesced by the dynamic
+batch former (`--batch` max size, `--batch-window-ms` max wait); the
+load is set as a fraction of the deterministic service model's capacity
+(`--offered-load`), admission control sheds on a queue cap
+(`--queue-cap`) and on hopeless deadlines (`--shed-deadline-ms`), and
+`--slo-ms` reports goodput at that latency SLO:
+
+  ... --arrival poisson --offered-load 0.8 --batch-window-ms 5 --slo-ms 25
+  ... --arrival flash_crowd --offered-load 1.2 --queue-cap 64
+  ... --arrival closed_loop --slo-ms 25
 """
 
 from __future__ import annotations
@@ -86,6 +99,7 @@ from repro.index.base import (IndexSpec, parse_index_opts,
                               registered_backends)
 from repro.models import init_params
 from repro.serve import SemanticCachedLM, ServeEngine, generate
+from repro.serve.arrivals import ARRIVAL_KINDS
 
 
 def main():
@@ -123,6 +137,34 @@ def main():
     ap.add_argument("--churn-warm", type=float, default=0.5,
                     help="fraction of --catalog live at start under churn "
                          "(the rest inserts over the run)")
+    srv = ap.add_argument_group(
+        "online serving (DESIGN.md §12; --arrival switches the semantic-"
+        "cache tier onto the queued engine with dynamic batch formation)")
+    srv.add_argument("--arrival", default="off",
+                     choices=("off",) + ARRIVAL_KINDS,
+                     help="arrival process driving the request queue "
+                          "('off' = fixed-batch querying)")
+    srv.add_argument("--offered-load", type=float, default=0.8,
+                     help="open-loop arrival rate as a fraction of the "
+                          "service model's max-batch capacity (1.0 = "
+                          "critically loaded)")
+    srv.add_argument("--batch-window-ms", type=float, default=5.0,
+                     help="batch former max wait (virtual ms) before a "
+                          "partial batch dispatches; 0 = pure size "
+                          "trigger (the fixed-window/offline-equivalent "
+                          "configuration)")
+    srv.add_argument("--slo-ms", type=float, default=None,
+                     help="latency SLO (virtual ms): report goodput = "
+                          "served fraction meeting it")
+    srv.add_argument("--queue-cap", type=int, default=None,
+                     help="admission control: shed arrivals beyond this "
+                          "queue depth")
+    srv.add_argument("--shed-deadline-ms", type=float, default=None,
+                     help="admission control: shed queued requests whose "
+                          "estimated completion would exceed this budget")
+    srv.add_argument("--arrival-seed", type=int, default=0,
+                     help="arrival-schedule seed (same seed = same "
+                          "schedule, bit for bit)")
     res = ap.add_argument_group(
         "resilient serving (DESIGN.md §11; any flag here switches the "
         "semantic-cache tier onto the resilient remote path)")
@@ -311,6 +353,47 @@ def main():
               f"{c.fast_fails} breaker fast-fails, "
               f"{ses.breaker.transitions} breaker transitions, "
               f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
+
+    # --- online serving engine (DESIGN.md §12) ---------------------------
+    if args.arrival != "off":
+        from repro.serve import embed_prompt
+        from repro.serve.arrivals import ArrivalSpec
+        from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                                       ServiceModel, serve_trace_online)
+
+        service = ServiceModel()
+        rate = args.offered_load * service.capacity_rps(args.batch)
+        try:
+            arrival = ArrivalSpec(kind=args.arrival, rate_rps=max(rate, 1.0),
+                                  seed=args.arrival_seed)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        # arrival-side requests reuse the LM's own embedding map, so the
+        # engine serves exactly what the semantic-cache tier would see
+        prompt_batch = jnp.stack([
+            jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
+                        jnp.int32) for _ in range(args.requests)])
+        reqs = jax.jit(jax.vmap(embed_prompt, in_axes=(None, 0)))(
+            params, prompt_batch)
+        out = serve_trace_online(
+            lm.policy, np.asarray(reqs), arrival,
+            former=BatchFormerConfig(
+                max_batch=args.batch,
+                max_wait_ms=(args.batch_window_ms
+                             if args.batch_window_ms > 0 else None)),
+            admission=AdmissionConfig(queue_cap=args.queue_cap,
+                                      deadline_ms=args.shed_deadline_ms),
+            service=service, slo_ms=args.slo_ms)
+        line = (f"online serving (arrival={args.arrival} "
+                f"load={args.offered_load:g} window={args.batch_window_ms:g}ms"
+                f"): {out['served']}/{out['requests']} served, "
+                f"{out['shed_total']} shed, mean batch "
+                f"{out['mean_batch']:.2f}, p50={out['p50_ms']:.1f}ms "
+                f"p99={out['p99_ms']:.1f}ms p999={out['p999_ms']:.1f}ms "
+                f"(queue p50={out['queue_p50_ms']:.1f}ms)")
+        if args.slo_ms is not None:
+            line += f", goodput@{args.slo_ms:g}ms={out['goodput_slo']:.3f}"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,18 @@
 """Serving substrate: prefill/decode engine with KV/SSM caches, continuous
-batching, the AÇAI semantic cache tier, and the resilient remote tier
-(fault-injected backend + retry/hedge/deadline/degrade, DESIGN.md §11)."""
+batching, the AÇAI semantic cache tier, the resilient remote tier
+(fault-injected backend + retry/hedge/deadline/degrade, DESIGN.md §11),
+and the online serving engine (arrival processes + request queue +
+dynamic batch former + admission control on the virtual clock,
+DESIGN.md §12)."""
 
+from repro.serve.arrivals import (ARRIVAL_KINDS, ArrivalSpec,
+                                  ClosedLoopSource, OpenLoopSource,
+                                  arrival_times, make_source)
 from repro.serve.engine import ServeEngine, generate, make_decode_step, make_prefill
+from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                               OnlineServingEngine, RequestRecord,
+                               ServiceModel, fixed_window_engine,
+                               serve_trace_online)
 from repro.serve.remote import (FaultSpec, FaultyRemote, OracleRemote,
                                 RemoteBackend, parse_outage_windows,
                                 payload_ok)
@@ -12,9 +22,14 @@ from repro.serve.resilience import (CircuitBreaker, RemoteSession,
                                     simulate_request)
 from repro.serve.semantic_cache import SemanticCachedLM, embed_prompt
 
-__all__ = ["CircuitBreaker", "FaultSpec", "FaultyRemote", "OracleRemote",
-           "RemoteBackend", "RemoteSession", "ResilienceConfig",
+__all__ = ["ARRIVAL_KINDS", "AdmissionConfig", "ArrivalSpec",
+           "BatchFormerConfig", "CircuitBreaker", "ClosedLoopSource",
+           "FaultSpec", "FaultyRemote", "OnlineServingEngine",
+           "OpenLoopSource", "OracleRemote", "RemoteBackend",
+           "RemoteSession", "RequestRecord", "ResilienceConfig",
            "ResilientPolicy", "RetryConfig", "SemanticCachedLM",
-           "ServeEngine", "embed_prompt", "generate", "make_decode_step",
-           "make_prefill", "parse_outage_windows", "payload_ok",
-           "replay_resilient", "simulate_request"]
+           "ServeEngine", "ServiceModel", "arrival_times", "embed_prompt",
+           "fixed_window_engine", "generate", "make_decode_step",
+           "make_prefill", "make_source", "parse_outage_windows",
+           "payload_ok", "replay_resilient", "serve_trace_online",
+           "simulate_request"]

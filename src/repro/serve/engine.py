@@ -101,7 +101,13 @@ class ServeEngine:
     def submit(self, request_id: int, prompt: jax.Array, max_tokens: int):
         self.queue.append((request_id, prompt, max_tokens))
 
-    def _admit(self):
+    def _admit(self) -> int:
+        """Refill free slots FIFO from the submit queue (continuous
+        batching's admission step — the token-level twin of the request
+        batch former in repro.serve.queue).  A slot freed by a finished
+        request is reused for the next queued one on the following
+        `step`; returns how many requests were admitted this call."""
+        admitted = 0
         for i, slot in enumerate(self.slots):
             if slot.active or not self.queue:
                 continue
@@ -121,6 +127,8 @@ class ServeEngine:
             self.slots[i] = Slot(active=True, request_id=rid,
                                  cache_len=prompt.shape[0], budget=budget,
                                  tokens=[nxt])
+            admitted += 1
+        return admitted
 
     def step(self):
         """One decode step for every active slot."""

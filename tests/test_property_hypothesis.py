@@ -92,3 +92,65 @@ def test_euclidean_projection_feasibility(z, h):
     y = np.array(P.capped_simplex_euclidean(jnp.array(z), h))
     assert (y >= -1e-6).all() and (y <= 1 + 1e-5).all()
     assert abs(y.sum() - h) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# online serving engine invariants (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+_gaps = st.lists(st.floats(0.0, 20.0, allow_nan=False,
+                           allow_infinity=False),
+                 min_size=1, max_size=64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(gaps=_gaps,
+       max_batch=st.integers(1, 9),
+       max_wait=st.one_of(st.none(), st.floats(0.0, 30.0)),
+       queue_cap=st.one_of(st.none(), st.integers(1, 6)),
+       deadline=st.one_of(st.none(), st.floats(1.0, 40.0)))
+def test_engine_queue_conservation_and_monotone_timestamps(
+        gaps, max_batch, max_wait, queue_cap, deadline):
+    """Under arbitrary arrival bursts and window/admission configs: every
+    submitted request is exactly one of {served, shed}, and per-request
+    virtual timestamps are monotone (arrival <= batch-form <=
+    completion)."""
+    from repro.core.policy import shed_only_metrics
+    from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                                   OnlineServingEngine, ServiceModel)
+
+    t = len(gaps)
+    times = np.cumsum(np.asarray(gaps))  # bursts = runs of zero gaps
+    served_rids = []
+
+    class Stub:
+        def serve_update_batch(self, rs, ts=None):
+            rs = np.atleast_2d(rs)
+            served_rids.extend(int(r[0]) for r in rs)
+            b = rs.shape[0]
+            return shed_only_metrics(b)._replace(shed=np.zeros(b, np.int32))
+
+    reqs = np.zeros((t, 4), np.float32)
+    reqs[:, 0] = np.arange(t)
+    eng = OnlineServingEngine(
+        Stub(),
+        former=BatchFormerConfig(max_batch=max_batch, max_wait_ms=max_wait),
+        admission=AdmissionConfig(queue_cap=queue_cap, deadline_ms=deadline),
+        service=ServiceModel(base_ms=1.0, per_request_ms=0.5))
+    res = eng.run(reqs, times)
+
+    # conservation: {served} and {shed} partition the submitted set
+    assert res["requests"] == t
+    assert res["served"] + res["shed_total"] == t
+    shed = res["shed"]
+    assert sorted(served_rids) == np.flatnonzero(~shed).tolist()
+    assert res["served"] == len(served_rids)
+    # the policy saw each served request exactly once
+    assert len(set(served_rids)) == len(served_rids)
+    # timestamps monotone per request, on the nondecreasing virtual clock
+    assert (res["arrival_ms"] == times).all()
+    assert (res["form_ms"] >= res["arrival_ms"] - 1e-9).all()
+    assert (res["done_ms"] >= res["form_ms"] - 1e-9).all()
+    # formed batches respect the window's size bound
+    if res["batch_hist"]:
+        assert max(res["batch_hist"]) <= max_batch

@@ -1,0 +1,402 @@
+"""Online serving engine (DESIGN.md §12): arrival determinism, batch-
+former window semantics, admission-control accounting, interleaved
+catalog mutation, and the bitwise fixed-window pin against
+make_replay_batched."""
+
+import numpy as np
+import pytest
+
+from repro.core import trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel
+from repro.core.churn import warm_size
+from repro.core.policy import StepMetrics, shed_only_metrics
+from repro.core.trace import rolling_catalog_events
+from repro.serve.arrivals import (ArrivalSpec, ClosedLoopSource,
+                                  OpenLoopSource, arrival_times, make_source)
+from repro.serve.queue import (AdmissionConfig, BatchFormerConfig,
+                               OnlineServingEngine, ServiceModel,
+                               fixed_window_engine, serve_trace_online)
+
+TINY = PA.TINY_POLICY_KWARGS
+
+
+class StubPolicy:
+    """Minimal CachePolicy: unit gain per request, records every batch it
+    served (rids recovered from the request payloads) — isolates engine
+    semantics from real policy math."""
+
+    k, c_f, h = 1, 1.0, 4
+
+    def __init__(self):
+        self.batches = []
+
+    def serve_update_batch(self, rs, ts=None) -> StepMetrics:
+        rs = np.atleast_2d(rs)
+        self.batches.append([int(r[0]) for r in rs])
+        b = rs.shape[0]
+        base = shed_only_metrics(b)
+        return base._replace(gain_int=np.ones(b), shed=np.zeros(b, np.int32))
+
+
+def id_requests(t: int, d: int = 4) -> np.ndarray:
+    """Trace whose request vectors carry their own rid in component 0."""
+    reqs = np.zeros((t, d), np.float32)
+    reqs[:, 0] = np.arange(t)
+    return reqs
+
+
+def tiny_setup(n=256, d=16, t=128, seed=0):
+    catalog, reqs, _ = trace.sift_like(n, d, t, seed=seed)
+    return catalog, reqs, CostModel(c_f=1.0)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_open_loop_arrivals_deterministic_and_sane():
+    for kind in ("poisson", "flash_crowd"):
+        spec = ArrivalSpec(kind=kind, rate_rps=1000.0, seed=5)
+        a, b = arrival_times(spec, 2000), arrival_times(spec, 2000)
+        assert np.array_equal(a, b), kind  # same seed = same schedule
+        assert (np.diff(a) >= 0).all()
+        other = arrival_times(ArrivalSpec(kind=kind, rate_rps=1000.0,
+                                          seed=6), 2000)
+        assert not np.array_equal(a, other)
+        # mean rate within 10% of the nominal 1 req/ms
+        assert a[-1] / len(a) == pytest.approx(1.0, rel=0.1), kind
+
+
+def test_flash_crowd_concentrates_in_bursts():
+    spec = ArrivalSpec(kind="flash_crowd", rate_rps=1000.0,
+                       burst_factor=8.0, burst_every_ms=250.0,
+                       burst_width_ms=50.0, seed=5)
+    t = arrival_times(spec, 5000)
+    duty = spec.burst_width_ms / spec.burst_every_ms
+    in_burst = ((t % spec.burst_every_ms) < spec.burst_width_ms).mean()
+    # 8x modulation at 20% duty -> ~2/3 of arrivals inside bursts
+    assert in_burst > 2 * duty
+
+
+def test_arrival_prefix_stability():
+    """The first T arrivals do not depend on how long the schedule is —
+    a longer trace extends, never reshuffles, the prefix."""
+    spec = ArrivalSpec(kind="poisson", rate_rps=500.0, seed=9)
+    assert np.array_equal(arrival_times(spec, 100),
+                          arrival_times(spec, 400)[:100])
+
+
+def test_closed_loop_schedule_independent_of_drain_order():
+    """Per-user think draws are keyed (seed, user, cycle): completing the
+    first wave in different orders yields the same next-arrival times."""
+    spec = ArrivalSpec(kind="closed_loop", users=3, think_ms=4.0, seed=2)
+
+    def next_wave(order):
+        src = ClosedLoopSource(spec, 9)
+        first = [src.pop() for _ in range(3)]  # (time, rid) per user
+        for idx in order:
+            src.on_complete(first[idx][1], 10.0)
+        out = {}
+        while src.peek() is not None:
+            tm, rid = src.pop()
+            out[rid] = tm
+        return out
+
+    assert next_wave([0, 1, 2]) == next_wave([2, 0, 1])
+
+
+def test_closed_loop_concurrency_bounded_by_users():
+    """At most `users` requests are ever outstanding: the source never
+    offers a new arrival for a user whose request is in flight."""
+    spec = ArrivalSpec(kind="closed_loop", users=2, think_ms=1.0, seed=0)
+    src = ClosedLoopSource(spec, 10)
+    t1 = src.pop()
+    t2 = src.pop()
+    assert src.peek() is None  # both users busy -> nothing arrives
+    src.on_complete(t1[1], 5.0)
+    assert src.peek() is not None
+    src.on_complete(t2[1], 5.0)
+    served = 2
+    while src.peek() is not None:
+        tm, rid = src.pop()
+        src.on_complete(rid, tm + 1.0)
+        served += 1
+    assert served == 10  # budget exhausted exactly
+
+
+def test_closed_loop_double_complete_is_ignored():
+    spec = ArrivalSpec(kind="closed_loop", users=1, think_ms=0.0, seed=0)
+    src = ClosedLoopSource(spec, 5)
+    _, rid = src.pop()
+    src.on_complete(rid, 1.0)
+    src.on_complete(rid, 2.0)  # stale duplicate: no second reschedule
+    nxt = src.pop()
+    assert nxt[0] == 1.0
+    assert src._heap == []
+
+
+def test_arrival_spec_validation():
+    with pytest.raises(ValueError):
+        ArrivalSpec(kind="uniform")
+    with pytest.raises(ValueError):
+        ArrivalSpec(kind="poisson", rate_rps=0.0)
+    with pytest.raises(ValueError):
+        ArrivalSpec(kind="flash_crowd", burst_width_ms=300.0,
+                    burst_every_ms=250.0)
+    with pytest.raises(ValueError):
+        arrival_times(ArrivalSpec(kind="closed_loop"), 10)
+    with pytest.raises(ValueError):
+        OpenLoopSource(np.array([2.0, 1.0]))
+    spec = ArrivalSpec(kind="poisson", rate_rps=10.0, seed=1)
+    assert ArrivalSpec.from_dict(spec.to_dict()) == spec
+
+
+# ---------------------------------------------------------------------------
+# batch former window semantics
+# ---------------------------------------------------------------------------
+
+def run_stub(times, former, admission=AdmissionConfig(), t=None, **kw):
+    pol = StubPolicy()
+    t = len(times) if t is None else t
+    eng = OnlineServingEngine(pol, former=former, admission=admission,
+                              service=ServiceModel(base_ms=2.0,
+                                                   per_request_ms=0.5))
+    res = eng.run(id_requests(t), np.asarray(times, float), **kw)
+    return pol, res
+
+
+def test_size_trigger_dispatches_full_batches():
+    # 8 simultaneous arrivals, window long enough to never fire
+    pol, res = run_stub([0.0] * 8, BatchFormerConfig(max_batch=4,
+                                                     max_wait_ms=100.0))
+    assert pol.batches == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    assert res["batch_hist"] == {4: 2}
+    # first batch forms at t=0; second waits for the server (4 ms)
+    assert res["form_ms"][0] == 0.0
+    assert res["form_ms"][4] == pytest.approx(4.0)
+
+
+def test_timeout_trigger_fires_at_max_wait():
+    # arrivals that never fill the batch: the window timer dispatches them
+    pol, res = run_stub([0.0, 1.0, 50.0, 120.0],
+                        BatchFormerConfig(max_batch=8, max_wait_ms=5.0))
+    assert pol.batches[0] == [0, 1]
+    assert res["form_ms"][0] == pytest.approx(5.0)  # oldest waited max_wait
+    assert res["queue_ms"][1] == pytest.approx(4.0)
+    # the mid-trace straggler waits out its own window (more arrivals
+    # could still come); the final arrival leaves instantly via drain
+    assert res["form_ms"][2] == pytest.approx(55.0)
+    assert res["form_ms"][3] == pytest.approx(120.0)
+
+
+def test_no_starvation_past_window_when_idle():
+    """With arrivals too sparse to fill batches, every request forms
+    within max_wait of its arrival (the server is never the bottleneck
+    at this load): nothing starves waiting for co-batchers."""
+    times = np.arange(20) * 40.0  # far apart vs service ~2.5ms
+    pol, res = run_stub(times, BatchFormerConfig(max_batch=8,
+                                                 max_wait_ms=6.0))
+    assert (res["queue_ms"] <= 6.0 + 1e-9).all()
+    assert res["batch_hist"] == {1: 20}
+
+
+def test_drain_trigger_flushes_partial_tail():
+    # pure size trigger (fixed window), 10 requests, batch 4: the last 2
+    # can only leave via the drain trigger
+    pol, res = run_stub([0.0] * 10, BatchFormerConfig(max_batch=4,
+                                                      max_wait_ms=None))
+    assert pol.batches == [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    assert res["served"] == 10 and res["shed_total"] == 0
+
+
+def test_fifo_order_preserved():
+    pol, _ = run_stub(np.sort(np.random.default_rng(0).uniform(0, 50, 16)),
+                      BatchFormerConfig(max_batch=3, max_wait_ms=2.0))
+    flat = [r for b in pol.batches for r in b]
+    assert flat == sorted(flat)  # dispatch never reorders arrivals
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_cap_sheds_overflow_and_books_metrics():
+    # 10 simultaneous arrivals into a cap-4 queue, batch 2
+    pol, res = run_stub([0.0] * 10,
+                        BatchFormerConfig(max_batch=2, max_wait_ms=None),
+                        AdmissionConfig(queue_cap=4))
+    assert res["shed_total"] == 6
+    assert set(r for r in res["shed_reasons"] if r) == {"queue_full"}
+    shed = res["shed"]
+    assert res["served"] + res["shed_total"] == res["requests"] == 10
+    # shed rows: zero gain, shed counter 1; served rows: the stub's gain
+    assert (res["gain"][shed] == 0).all()
+    assert (res["gain"][~shed] == 1).all()
+    m = res["metrics"]
+    assert (np.asarray(m.shed)[shed] == 1).all()
+    assert (np.asarray(m.shed)[~shed] == 0).all()
+    # latency fields for shed rows collapse to the arrival instant
+    assert (res["latency_ms"][shed] == 0).all()
+
+
+def test_deadline_shedding_at_formation():
+    """A deep backlog against a tight deadline: requests whose predicted
+    completion overruns arrival+deadline are shed at formation, with the
+    shed instant recorded."""
+    pol, res = run_stub(
+        [0.0] * 30,
+        BatchFormerConfig(max_batch=2, max_wait_ms=None),
+        AdmissionConfig(deadline_ms=10.0))
+    assert res["shed_total"] > 0
+    assert set(r for r in res["shed_reasons"] if r) == {"deadline"}
+    shed = res["shed"]
+    # served requests actually met the deadline the shed ones couldn't
+    assert (res["latency_ms"][~shed] <= 10.0 + 1e-9).all()
+    # every shed happened at its formation attempt, not at arrival
+    assert (res["form_ms"][shed] >= 0).all()
+    assert res["served"] + res["shed_total"] == 30
+
+
+def test_goodput_counts_only_in_slo_served():
+    _, res = run_stub([0.0] * 8,
+                      BatchFormerConfig(max_batch=2, max_wait_ms=None),
+                      slo_ms=7.0)
+    # batches of 2 take 3ms each: completions at 3,6,9,12 -> 4 of 8 good
+    assert res["goodput_slo"] == pytest.approx(0.5)
+    assert res["served"] == 8
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        BatchFormerConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchFormerConfig(max_wait_ms=-1.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(queue_cap=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        ServiceModel(base_ms=0.0, per_request_ms=0.0)
+
+
+# ---------------------------------------------------------------------------
+# bitwise offline equivalence (the drift pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arrival_kind", ["poisson", "flash_crowd"])
+def test_fixed_window_bitwise_equals_offline_replay(arrival_kind):
+    """The acceptance pin: fixed-window engine == make_replay_batched,
+    bitwise, on per-request gain AND final policy state (y, x) — for any
+    arrival process (FIFO size-B chunks are the offline partition)."""
+    catalog, reqs, cm = tiny_setup()
+    spec = PA.PolicySpec("acai", TINY["acai"])
+    B = TINY["acai"]["batch"]
+    pol_on = PA.build_policy(spec, catalog, cm, seed=0)
+    pol_off = PA.build_policy(spec, catalog, cm, seed=0)
+    arr = ArrivalSpec(kind=arrival_kind, rate_rps=3000.0, seed=4)
+    res = fixed_window_engine(pol_on, B).run(reqs, arr)
+    ref = pol_off.replay(reqs)
+    assert np.array_equal(res["gain"], np.asarray(ref["gain"]))
+    assert np.array_equal(np.asarray(pol_on.cache.state.y),
+                          np.asarray(pol_off.cache.state.y))
+    assert np.array_equal(np.asarray(pol_on.cache.state.x),
+                          np.asarray(pol_off.cache.state.x))
+
+
+def test_fixed_window_engine_run_is_reproducible():
+    """Same seed, fresh policies: the whole result (timestamps included)
+    replays identically — the virtual clock never reads wall time."""
+    catalog, reqs, cm = tiny_setup(t=64)
+    arr = ArrivalSpec(kind="poisson", rate_rps=2000.0, seed=3)
+    outs = []
+    for _ in range(2):
+        pol = PA.build_policy(PA.PolicySpec("sim_lru", TINY["sim_lru"]),
+                              catalog, cm, seed=0)
+        outs.append(serve_trace_online(
+            pol, reqs, arr,
+            former=BatchFormerConfig(max_batch=4, max_wait_ms=3.0)))
+    for key in ("gain", "arrival_ms", "form_ms", "done_ms", "latency_ms"):
+        assert np.array_equal(outs[0][key], outs[1][key]), key
+
+
+# ---------------------------------------------------------------------------
+# every registered policy serves through the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", PA.registered_policies())
+def test_engine_conformance_all_policies(name):
+    catalog, reqs, cm = tiny_setup(t=48)
+    pol = PA.build_policy(PA.PolicySpec(name, TINY[name]), catalog, cm,
+                          seed=0)
+    res = serve_trace_online(
+        pol, reqs, ArrivalSpec(kind="poisson", rate_rps=2500.0, seed=1),
+        former=BatchFormerConfig(max_batch=8, max_wait_ms=4.0),
+        admission=AdmissionConfig(queue_cap=32), slo_ms=25.0)
+    assert res["requests"] == 48
+    assert res["served"] + res["shed_total"] == 48
+    served = ~res["shed"]
+    # gains finite everywhere, and exactly zero on shed rows (cls_lru's
+    # exploration serves can legitimately book negative gain)
+    assert np.isfinite(res["gain"]).all()
+    assert (res["gain"][~served] == 0).all()
+    # timestamps monotone per request
+    assert (res["form_ms"] >= res["arrival_ms"] - 1e-9).all()
+    assert (res["done_ms"] >= res["form_ms"] - 1e-9).all()
+    assert 0.0 <= res["goodput_slo"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# interleaved catalog mutation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["acai", "sim_lru"])
+def test_interleaved_churn_never_serves_removed_ids(name):
+    """rolling_catalog events applied between formed batches: the run
+    completes, every event fires, and no removed object survives in the
+    policy's cache state (composes test_mutable_index's invariant with
+    the live queue)."""
+    catalog, reqs, cm = tiny_setup(n=256, t=96)
+    events = rolling_catalog_events(256, 96, churn_rate=0.15, warm=0.5)
+    assert events, "churn schedule unexpectedly empty"
+    w = warm_size(256, 0.5)
+    pol = PA.build_policy(PA.PolicySpec(name, TINY[name]), catalog[:w], cm,
+                          seed=0)
+    res = serve_trace_online(
+        pol, reqs, ArrivalSpec(kind="poisson", rate_rps=1500.0, seed=6),
+        former=BatchFormerConfig(max_batch=8, max_wait_ms=4.0),
+        catalog=catalog, events=events)
+    assert res["events_applied"] == len(events)
+    assert res["served"] == 96 and res["shed_total"] == 0
+    removed = np.concatenate([np.asarray(ev[2]) for ev in events])
+    if name == "acai":
+        y = np.asarray(pol.cache.state.y)
+        x = np.asarray(pol.cache.state.x)
+        assert float(np.abs(y[removed]).sum()) == 0.0
+        assert float(np.abs(x[removed]).sum()) == 0.0
+    else:
+        cached = set(pol.policy.cached_object_ids().tolist())
+        assert not set(removed.tolist()) & cached
+
+
+def test_insert_events_require_catalog():
+    catalog, reqs, cm = tiny_setup(t=32)
+    pol = StubPolicy()
+    eng = OnlineServingEngine(pol)
+    with pytest.raises(ValueError, match="catalog"):
+        eng.run(id_requests(32), np.zeros(32),
+                events=[(4, np.array([1]), np.array([], np.int64))])
+
+
+def test_tail_events_drain_after_last_batch():
+    """Events scheduled past the final dispatched request still fire
+    (the replay_with_churn tail-drain rule)."""
+    catalog, reqs, cm = tiny_setup(n=64, t=16)
+    pol = PA.build_policy(PA.PolicySpec("sim_lru", TINY["sim_lru"]),
+                          catalog[:32], cm, seed=0)
+    events = [(15, np.array([32]), np.array([0])),
+              (500, np.array([33]), np.array([1]))]  # beyond the trace
+    res = serve_trace_online(pol, reqs, np.zeros(16), catalog=catalog,
+                             events=events)
+    assert res["events_applied"] == 2
+    assert not {0, 1} & set(pol.policy.cached_object_ids().tolist())
