@@ -1,0 +1,313 @@
+"""Answer-cache tier sweep (DESIGN.md §13) — BENCH_answer_cache.json.
+
+Hit-rate / latency / NAG across three trace scenarios — Zipf repeats
+(`sift_like`, jitter 0 so repeated requests are exact catalog rows),
+`flash_crowd` shocks, and `rolling_catalog` churn with live
+insert/expire events — with the answer cache on
+(`AnswerCacheSpec(capacity=CAP)`) vs off (`capacity=0`, the documented
+pass-through arm: identical serving code, memoization bypassed).
+
+Built-in checks, every run (the tier's contract, not a tuning claim):
+
+* **NAG-neutrality / bitwise parity** — per scenario × index backend,
+  the cache-on arm must match the cache-off arm bitwise: per-request
+  gain, final policy state (y, x), and the served ids coming out of the
+  index tier (recorded at `CachedIndex.query`).  The answer cache is a
+  latency tier, never a quality knob.
+* **Hot-fraction speedup** — on the Zipf trace the repeated-query hot
+  path must be ≥5× faster at p50 than the fused scan, asserted both on
+  measured wall time (memoized lookup vs full scan, same batch) and on
+  the engine's deterministic virtual clock (p50_miss_ms / p50_hit_ms).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import churn, trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel, calibrate_fetch_cost
+from repro.index.base import IndexSpec
+from repro.serve.answer_cache import AnswerCacheSpec
+from repro.serve.arrivals import ArrivalSpec
+from repro.serve.queue import BatchFormerConfig, OnlineServingEngine, \
+    ServiceModel
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_answer_cache.json"
+
+BATCH = 8
+ANSWER_CAP = 4096      # on-arm entry budget (≥ unique queries at bench size)
+ZIPF_A = 1.1           # head-heavy repeats: the regime the tier targets
+CHURN_RATE = 0.05
+CHURN_WARM = 0.5
+ARRIVAL_SEED = 11
+WALL_REPS = 30         # hot-path wall microbench repetitions
+MIN_SPEEDUP = 5.0      # acceptance floor, asserted every run
+
+
+def _indexes(full: bool):
+    """Index backends per scenario: flat (exact scan, precise
+    invalidation) everywhere, IVF (probed scan, precise radius/inverted
+    invalidation) on the scenarios where quantizer structure matters."""
+    ivf = IndexSpec("ivf", {"nlist": 128 if full else 48,
+                            "nprobe": 16 if full else 10})
+    return {
+        "zipf": (IndexSpec("flat"), ivf),
+        "flash_crowd": (IndexSpec("flat"),),
+        "rolling_catalog": (IndexSpec("flat"), ivf),
+    }
+
+
+def _build(catalog, cm, h, k, index_spec, cap, seed=0):
+    spec = PA.PolicySpec("acai", {"h": h, "k": k, "batch": BATCH})
+    return PA.build_policy(spec, catalog, cm, index_spec=index_spec,
+                           seed=seed,
+                           answer_cache=AnswerCacheSpec(capacity=cap))
+
+
+def _record_served_ids(pol, sink: list):
+    """Tap `CachedIndex.query` so every batch's served ids land in
+    `sink` — the parity assert compares these across the on/off arms
+    (the mutable candidate fn resolves `index.query` per call, so an
+    instance attribute shadowing the method is enough)."""
+    idx = pol.cache.index
+    orig = idx.query
+
+    def wrapped(rs, kk):
+        d, ids = orig(rs, kk)
+        sink.append(np.asarray(ids))
+        return d, ids
+
+    idx.query = wrapped
+
+
+def _scenario_traces(full: bool, n, d, t):
+    cat_z, req_z, _ = trace.sift_like(n=n, d=d, t=t, zipf_a=ZIPF_A,
+                                      jitter=0.0, seed=17)
+    cat_f, req_f, _ = trace.flash_crowd(n=n, d=d, t=t, seed=7)
+    cat_r, req_r, _ = trace.rolling_catalog(n=n, d=d, t=t,
+                                            churn_rate=CHURN_RATE,
+                                            warm=CHURN_WARM, seed=17)
+    events = trace.rolling_catalog_events(n=n, t=t, churn_rate=CHURN_RATE,
+                                          warm=CHURN_WARM)
+    return {
+        "zipf": (cat_z, req_z, ()),
+        "flash_crowd": (cat_f, req_f, ()),
+        "rolling_catalog": (cat_r, req_r, events),
+    }
+
+
+def _run_cell(scenario, index_spec, cap, catalog, reqs, events, cm, h, k):
+    """One (scenario × index × cache-arm) replay.  Returns (row, gain
+    array, final state, served-ids array) — the latter three feed the
+    parity asserts."""
+    n_warm = churn.warm_size(catalog.shape[0], CHURN_WARM)
+    live_cat = catalog[:n_warm] if events else catalog
+    pol = _build(live_cat, cm, h, k, index_spec, cap)
+    served: list = []
+    _record_served_ids(pol, served)
+    t0 = time.time()
+    if events:
+        res = churn.replay_with_churn(pol, catalog, reqs, events,
+                                      batch=BATCH)
+    else:
+        res = pol.replay(reqs)
+    wall = time.time() - t0
+    gain = np.asarray(res["gain"], np.float64)
+    t_served = int(res["requests"])
+    st = pol.answer_cache.stats()
+    row = {
+        "scenario": scenario,
+        "index": index_spec.to_dict(),
+        "cache": "on" if cap else "off",
+        "capacity": cap,
+        "nag": round(pol.normalized_gain(float(gain.sum()), t_served), 4),
+        "hit_ratio": round(float(np.asarray(res["hit"]).mean()), 4),
+        "answer_hit_rate": round(st["hit_rate"], 4),
+        "entries": st["entries"],
+        "invalidations": st["invalidations"],
+        "inv_remove": st["inv_remove"],
+        "inv_add": st["inv_add"],
+        "inv_refresh": st["inv_refresh"],
+        "scans": st["scans"],
+        "scans_skipped": st["scans_skipped"],
+        "events": len(events),
+        "p50_step_us": round(res["p50_step_s"] * 1e6, 1),
+        "us_per_request": round(wall / max(t_served, 1) * 1e6, 2),
+        "requests": t_served,
+    }
+    ids = (np.concatenate([s.reshape(-1) for s in served])
+           if served else np.zeros(0, np.int32))
+    return row, gain, pol.cache.state, ids
+
+
+def _assert_parity(scenario, index_spec, on, off):
+    """NAG-neutrality, bitwise: gain, state (y, x), served ids."""
+    (row_on, g_on, st_on, ids_on) = on
+    (row_off, g_off, st_off, ids_off) = off
+    where = f"{scenario}/{index_spec.backend}"
+    assert np.array_equal(g_on, g_off), (
+        f"answer cache changed per-request gain on {where}")
+    assert row_on["nag"] == row_off["nag"], (
+        f"answer cache changed NAG on {where}: "
+        f"{row_on['nag']} != {row_off['nag']}")
+    for f in ("y", "x"):
+        assert np.array_equal(np.asarray(getattr(st_on, f)),
+                              np.asarray(getattr(st_off, f))), (
+            f"answer cache changed policy state .{f} on {where}")
+    assert np.array_equal(ids_on, ids_off), (
+        f"answer cache changed served ids on {where}")
+
+
+def _hot_wall_microbench(catalog, reqs, cm, h, k):
+    """Measured-wall hot-path claim: p50 of a memoized all-hit batch vs
+    the same batch through the pass-through (full fused scan) arm."""
+    import jax
+
+    pol_on = _build(catalog, cm, h, k, IndexSpec("flat"), ANSWER_CAP)
+    pol_off = _build(catalog, cm, h, k, IndexSpec("flat"), 0)
+    c_remote = pol_on.cache.cfg.c_remote
+    # the hot fraction: the trace's most repeated request rows
+    uniq, counts = np.unique(reqs, axis=0, return_counts=True)
+    hot = uniq[np.argsort(-counts)[:BATCH]]
+    if hot.shape[0] < BATCH:  # pad by repeating the hottest row
+        hot = np.concatenate(
+            [hot, np.repeat(hot[:1], BATCH - hot.shape[0], axis=0)])
+    walls = {"on": [], "off": []}
+    for arm, pol in (("on", pol_on), ("off", pol_off)):
+        pol.cache.index.query(hot, c_remote)  # warm: store + compile
+        for _ in range(WALL_REPS):
+            t0 = time.time()
+            jax.block_until_ready(pol.cache.index.query(hot, c_remote))
+            walls[arm].append(time.time() - t0)
+    p50_on = float(np.percentile(walls["on"], 50))
+    p50_off = float(np.percentile(walls["off"], 50))
+    assert pol_on.answer_cache.stats()["scans_skipped"] >= WALL_REPS, (
+        "hot microbench batches were not served from the store")
+    speedup = p50_off / max(p50_on, 1e-9)
+    assert speedup >= MIN_SPEEDUP, (
+        f"hot-path wall speedup {speedup:.1f}x below the {MIN_SPEEDUP}x "
+        f"acceptance floor (hit p50 {p50_on * 1e6:.1f}us vs scan p50 "
+        f"{p50_off * 1e6:.1f}us)")
+    return {"hot_p50_us_on": round(p50_on * 1e6, 2),
+            "hot_p50_us_off": round(p50_off * 1e6, 2),
+            "speedup_wall": round(speedup, 2),
+            "reps": WALL_REPS}
+
+
+def _engine_cell(catalog, reqs, cm, h, k, cap):
+    """Online-engine arm (DESIGN.md §12 + §13 fast path): virtual-clock
+    latency decomposition with answer-cache hits completing at arrival."""
+    service = ServiceModel()
+    pol = _build(catalog, cm, h, k, IndexSpec("flat"), cap)
+    eng = OnlineServingEngine(
+        pol, former=BatchFormerConfig(max_batch=BATCH, max_wait_ms=5.0),
+        service=service)
+    arrival = ArrivalSpec(kind="poisson",
+                          rate_rps=0.8 * service.capacity_rps(BATCH),
+                          seed=ARRIVAL_SEED)
+    res = eng.run(reqs, arrival)
+    return {
+        "cache": "on" if cap else "off",
+        "answer_hit_rate": round(res["answer_hit_rate"], 4),
+        "p50_user_ms": round(res["p50_user_ms"], 3),
+        "p99_user_ms": round(res["p99_user_ms"], 3),
+        "p50_hit_ms": round(res["p50_hit_ms"], 3),
+        "p50_miss_ms": round(res["p50_miss_ms"], 3),
+        "p50_ms": round(res["p50_ms"], 3),
+    }, np.asarray(res["gain"], np.float64)
+
+
+def main(full: bool = False, kind: str = None) -> None:
+    if kind not in (None, "sift"):
+        raise ValueError(
+            "the answer_cache suite sweeps its own three scenarios "
+            "(zipf / flash_crowd / rolling_catalog); --trace does not "
+            "apply here")
+    n, t, d = (20000, 8192, 32) if full else (2000, 2048, 16)
+    h, k = (400, 10) if full else (64, 8)
+
+    import jax
+    import jax.numpy as jnp
+
+    scen = _scenario_traces(full, n, d, t)
+    cat_z = scen["zipf"][0]
+    c_f = float(calibrate_fetch_cost(jnp.asarray(cat_z),
+                                     kth=min(50, n - 1), sample=256))
+    cm = CostModel(c_f=c_f)
+
+    rows = []
+    for scenario, (catalog, reqs, events) in scen.items():
+        for index_spec in _indexes(full)[scenario]:
+            arms = {}
+            for cap in (ANSWER_CAP, 0):
+                cell = _run_cell(scenario, index_spec, cap, catalog, reqs,
+                                 events, cm, h, k)
+                arms[cap] = cell
+                rows.append(cell[0])
+                common.emit(
+                    f"answer_cache/{scenario}/{index_spec.backend}/"
+                    f"{'on' if cap else 'off'}",
+                    cell[0]["p50_step_us"],
+                    f"nag={cell[0]['nag']:.3f};"
+                    f"hit={cell[0]['answer_hit_rate']:.3f};"
+                    f"inval={cell[0]['invalidations']}")
+            _assert_parity(scenario, index_spec, arms[ANSWER_CAP], arms[0])
+    common.emit("answer_cache/parity-pin", 0.0,
+                "cache-on == cache-off (gain, NAG, y, x, served ids), "
+                "every scenario x index")
+
+    hot = _hot_wall_microbench(cat_z, scen["zipf"][1], cm, h, k)
+    common.emit("answer_cache/hot-path", hot["hot_p50_us_on"],
+                f"scan={hot['hot_p50_us_off']}us;"
+                f"speedup={hot['speedup_wall']}x")
+
+    engine = {}
+    gains = {}
+    for cap in (ANSWER_CAP, 0):
+        cell, g = _engine_cell(cat_z, scen["zipf"][1], cm, h, k, cap)
+        engine[cell["cache"]] = cell
+        gains[cell["cache"]] = g
+    assert np.array_equal(gains["on"], gains["off"]), (
+        "engine fast path changed per-request gain (the learn-path batch "
+        "partition must be identical across arms)")
+    virt = engine["on"]
+    speedup_virtual = virt["p50_miss_ms"] / max(virt["p50_hit_ms"], 1e-9)
+    assert speedup_virtual >= MIN_SPEEDUP, (
+        f"virtual hot-path speedup {speedup_virtual:.1f}x below "
+        f"{MIN_SPEEDUP}x (hit p50 {virt['p50_hit_ms']}ms vs miss p50 "
+        f"{virt['p50_miss_ms']}ms)")
+    engine["speedup_virtual"] = round(speedup_virtual, 2)
+    common.emit("answer_cache/engine", virt["p50_user_ms"],
+                f"hit={virt['answer_hit_rate']:.3f};"
+                f"p50_hit={virt['p50_hit_ms']}ms;"
+                f"p50_miss={virt['p50_miss_ms']}ms;"
+                f"speedup={engine['speedup_virtual']}x")
+
+    BENCH_JSON.write_text(json.dumps(
+        {"full": full, "n": n, "d": d, "t": t, "h": h, "k": k,
+         "batch": BATCH, "c_f": round(c_f, 6),
+         "answer_capacity": ANSWER_CAP, "zipf_a": ZIPF_A,
+         "churn_rate": CHURN_RATE, "churn_warm": CHURN_WARM,
+         "arrival_seed": ARRIVAL_SEED,
+         "backend": jax.default_backend(),
+         "parity_pin": True, "min_speedup": MIN_SPEEDUP,
+         "hot_latency": hot, "engine": engine,
+         "rows": rows}, indent=2) + "\n")
+    common.emit("answer_cache/json", 0.0, str(BENCH_JSON.name))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.full)

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Validate committed BENCH_*.json files against the README field schema.
+
+The README's "`BENCH_*.json` schema reference" section documents every
+tracked benchmark JSON with a `| field | meaning |` table.  This script
+keeps code and docs honest in both directions, for every BENCH_*.json
+committed at the repo root:
+
+* every field occurring in the file's `rows` must be documented in the
+  README table (no silently-added columns), and
+* every documented field must occur in at least one row (no stale docs
+  for removed columns).
+
+A BENCH file with no README section at all, or a file whose top level
+has no `rows` list, is an error too.  Exits non-zero with a per-file
+report on any violation.
+
+  PYTHONPATH=src python scripts/check_bench_schema.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+
+# a schema section opens with the bold filename marker ...
+_SECTION = re.compile(r"\*\*`(BENCH_[a-z_]+\.json)`\*\*")
+# ... and documents row fields as "| `a` / `b` | meaning |" table lines
+_TABLE_ROW = re.compile(r"^\|([^|]+)\|")
+
+
+def readme_schemas(text: str) -> dict[str, set[str]]:
+    """filename -> documented row-field names, parsed from the README."""
+    schemas: dict[str, set[str]] = {}
+    current: set[str] | None = None
+    for line in text.splitlines():
+        m = _SECTION.search(line)
+        if m:
+            current = schemas.setdefault(m.group(1), set())
+            continue
+        if current is None:
+            continue
+        t = _TABLE_ROW.match(line.strip())
+        if not t:
+            continue
+        cell = t.group(1).strip()
+        if cell in ("field", "---", ":---"):
+            continue
+        for name in cell.split("/"):
+            name = name.strip().strip("`").strip()
+            if name and re.fullmatch(r"[A-Za-z0-9_]+", name):
+                current.add(name)
+    return {f: s for f, s in schemas.items() if s}
+
+
+def row_fields(path: pathlib.Path) -> set[str] | None:
+    """Union of keys across the file's `rows`; None if there is no
+    well-formed rows list (itself a contract violation)."""
+    data = json.loads(path.read_text())
+    rows = data.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return None
+    fields: set[str] = set()
+    for r in rows:
+        if not isinstance(r, dict):
+            return None
+        fields |= set(r)
+    return fields
+
+
+def main() -> int:
+    schemas = readme_schemas(README.read_text())
+    bench_files = sorted(ROOT.glob("BENCH_*.json"))
+    if not bench_files:
+        print("no BENCH_*.json at the repo root — nothing to check")
+        return 0
+    failures = 0
+    for path in bench_files:
+        name = path.name
+        documented = schemas.get(name)
+        if documented is None:
+            print(f"FAIL {name}: no `| field | meaning |` schema table in "
+                  f"README.md (add one under the schema reference section)")
+            failures += 1
+            continue
+        present = row_fields(path)
+        if present is None:
+            print(f"FAIL {name}: no non-empty `rows` list of objects")
+            failures += 1
+            continue
+        undocumented = sorted(present - documented)
+        stale = sorted(documented - present)
+        if undocumented:
+            print(f"FAIL {name}: fields in rows but not in the README "
+                  f"table: {undocumented}")
+        if stale:
+            print(f"FAIL {name}: fields documented in README but absent "
+                  f"from every row: {stale}")
+        if undocumented or stale:
+            failures += 1
+        else:
+            print(f"ok   {name}: {len(present)} fields match the README "
+                  f"table")
+    # sections documenting a file that is not committed are only a
+    # warning: suites may be run selectively
+    for name in sorted(set(schemas) - {p.name for p in bench_files}):
+        print(f"warn {name}: documented in README but not committed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

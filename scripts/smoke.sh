@@ -2,9 +2,11 @@
 # Tier-1 tests + a fast all-backends index-API conformance pass + a
 # mutable-catalog churn smoke + a resilient-serving smoke + an online-
 # serving smoke (two arrival kinds + the fixed-window equivalence pin) +
-# every example in tiny mode + a 2-device sharded-serving smoke step, so
-# neither the unified index registry, the churn subsystem, the serving
-# tiers, the runnable entry points, nor the distributed path can
+# an answer-cache smoke (hit path + churn invalidation + on/off parity) +
+# a BENCH_*.json-vs-README schema check + every example in tiny mode +
+# a 2-device sharded-serving smoke step, so neither the unified index
+# registry, the churn subsystem, the serving tiers, the bench schema
+# docs, the runnable entry points, nor the distributed path can
 # silently rot on machines without accelerators.
 #
 #   bash scripts/smoke.sh
@@ -210,6 +212,61 @@ assert np.array_equal(np.asarray(pol_on.cache.state.x),
                       np.asarray(pol_off.cache.state.x)), "x drift"
 print("online-serving smoke OK (fixed-window pin holds)")
 EOF
+
+echo "== answer-cache smoke: hits + invalidation + parity (DESIGN.md §13) =="
+python - <<'EOF'
+import numpy as np
+from repro.core import policy_api as PA
+from repro.core import trace
+from repro.core.costs import CostModel
+from repro.index import IndexSpec
+from repro.serve import AnswerCacheSpec
+
+catalog, reqs, _ = trace.sift_like(n=256, d=16, t=96, zipf_a=1.1,
+                                   jitter=0.0, seed=3)
+spec = PA.PolicySpec("acai", dict(PA.TINY_POLICY_KWARGS["acai"], batch=8))
+cm = CostModel(c_f=1.0)
+
+# cache on vs capacity=0 pass-through: bitwise parity, scans skipped
+arms = {}
+for cap in (64, 0):
+    pol = PA.build_policy(spec, catalog, cm, seed=0,
+                          index_spec=IndexSpec("flat"),
+                          answer_cache=AnswerCacheSpec(capacity=cap))
+    arms[cap] = (pol, pol.replay(reqs))
+(pol_on, r_on), (pol_off, r_off) = arms[64], arms[0]
+assert np.array_equal(r_on["gain"], r_off["gain"]), "gain drift"
+assert np.array_equal(np.asarray(pol_on.cache.state.y),
+                      np.asarray(pol_off.cache.state.y)), "y drift"
+st = pol_on.answer_cache.stats()
+assert st["hits"] > 0, st
+
+# the hit path: replaying a batch the store has fully memoized must
+# skip the scan (a skip needs ALL rows to hit — the batch contract)
+served = [np.asarray(pol.serve_update_batch(reqs[:8])[1])
+          for pol, _ in arms.values()]
+assert np.array_equal(*served), "hit-path answer drift"
+st = pol_on.answer_cache.stats()
+assert st["scans_skipped"] >= 1, st
+
+# churn invalidation: removing a memoized id drops exactly its entries,
+# and the doomed id is never served afterwards — parity still bitwise
+doomed = next(iter(pol_on.answer_cache.cache._inv))
+for pol, _ in arms.values():
+    pol.remove_objects([doomed])
+served = [np.asarray(pol.serve_update_batch(reqs[:8])[1])
+          for pol, _ in arms.values()]
+assert np.array_equal(*served), "post-churn answer drift"
+assert doomed not in served[0], "served a removed id"
+st = pol_on.answer_cache.stats()
+assert st["inv_remove"] > 0, st
+print(f"answer-cache smoke OK (hit_rate={st['hit_rate']:.3f}, "
+      f"{st['scans_skipped']} scans skipped, "
+      f"{st['inv_remove']} precise invalidations, parity bitwise)")
+EOF
+
+echo "== BENCH_*.json schema vs README =="
+python scripts/check_bench_schema.py
 
 echo "== examples (tiny mode) =="
 for ex in examples/*.py; do

@@ -61,6 +61,14 @@ class StepMetrics(NamedTuple):
     remote_failures: jax.Array | int = 0  # request's remote tier failed
     retries: jax.Array | int = 0          # extra attempts beyond the first
     deadline_misses: jax.Array | int = 0  # deadline budget exceeded
+    # answer-cache tier counters (DESIGN.md §13): all zero without an
+    # AnswerCacheSpec, booked host-side by AcaiCache._serve_batch_direct.
+    answer_hits: jax.Array | int = 0      # request's answer was memoized
+    answer_misses: jax.Array | int = 0    # request needed the fused scan
+    answer_invalidations: jax.Array | int = 0  # entries dropped by churn
+                                               # since the previous step
+                                               # (booked on the batch's
+                                               # first request)
 
 
 def shed_only_metrics(batch: int) -> StepMetrics:
@@ -80,7 +88,9 @@ def shed_only_metrics(batch: int) -> StepMetrics:
         served_local=zi, fetched=zi.copy(), occupancy=zf.copy(),
         local_overflow=zi.copy(), degraded=zi.copy(),
         shed=np.ones(batch, np.int32), remote_failures=zi.copy(),
-        retries=zi.copy(), deadline_misses=zi.copy())
+        retries=zi.copy(), deadline_misses=zi.copy(),
+        answer_hits=zi.copy(), answer_misses=zi.copy(),
+        answer_invalidations=zi.copy())
 
 
 class CacheState(NamedTuple):
@@ -345,7 +355,8 @@ def finish_step_batched(cfg_up: AcaiConfig, state: CacheState, key, k_round,
         occupancy=jnp.full((batch,), jnp.sum(x_new)),
         local_overflow=jnp.full((batch,), local_overflow),
         degraded=zeros, shed=zeros, remote_failures=zeros, retries=zeros,
-        deadline_misses=zeros,
+        deadline_misses=zeros, answer_hits=zeros, answer_misses=zeros,
+        answer_invalidations=zeros,
     )
     return CacheState(y_new, x_new, state.t + batch, key), metrics
 
@@ -532,8 +543,9 @@ class AcaiCache:
     def __init__(self, catalog: jax.Array, cfg: "AcaiConfig", candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
                  sharded_kwargs: dict | None = None, c_f: float | None = None,
-                 remote=None, resilience=None):
+                 remote=None, resilience=None, answer_cache=None):
         from repro.index.base import resolve_spec
+        from repro.serve.answer_cache import resolve_answer_cache_spec
 
         if not isinstance(cfg, AcaiConfig):
             # PolicySpec / flat-dict / name form (DESIGN.md §9): the one
@@ -639,6 +651,33 @@ class AcaiCache:
             if candidate_fn is None:
                 candidate_fn = per_request_view(candidate_fn_batched)
             self._step = jax.jit(make_step(cfg, candidate_fn))
+        # answer-cache tier (DESIGN.md §13): wrap the spec-built index in
+        # a CachedIndex and serve through the two-stage mutable path from
+        # step 0 — the static jitted step queries the index inside its
+        # trace, where nothing host-side can memoize, while the mutable
+        # path's eager `index.query` is exactly the memoization point.
+        self.answer_cache = None  # the CachedIndex wrapper when tier is on
+        ac_spec = resolve_answer_cache_spec(answer_cache)
+        if ac_spec is not None:
+            from repro.serve.answer_cache import CachedIndex
+
+            if mesh is not None:
+                raise NotImplementedError(
+                    "answer_cache= on a sharded mesh is not implemented "
+                    "(the sharded step owns candidate generation) — use a "
+                    "single-device cache")
+            if self._custom_fn:
+                raise ValueError(
+                    "answer_cache= cannot front an explicit candidate_fn*: "
+                    "the tier memoizes `Index.query` answers — drop the "
+                    "escape hatch or the spec")
+            if self.index is None:
+                raise ValueError(
+                    "answer_cache= fronts an index backend; set cfg.index "
+                    "(IndexSpec('flat') gives the exact fused scan)")
+            self.index = CachedIndex(self.index, ac_spec)
+            self.answer_cache = self.index
+            self._enter_mutable()
         self.state = init_state(catalog.shape[0], cfg, seed=seed)
         # resilient serving mode (DESIGN.md §11): None until a
         # RemoteBackend is attached; then serve_update(_batch) dispatch
@@ -720,6 +759,17 @@ class AcaiCache:
                 step = make_mutable_step(self.cfg, b)
                 self._mut_steps[b] = step
             self.state, metrics = step(self.state, ids, d, valid, self.valid)
+            if self.answer_cache is not None:
+                # book the answer-tier counters host-side: the hit mask of
+                # the eager `CachedIndex.query` this batch just ran, plus
+                # churn invalidations since the previous step (a per-batch
+                # scalar like `fetched`, booked on the first request)
+                mask, inval = self.answer_cache.cache.take_step_stats(b)
+                hits = jnp.asarray(mask, jnp.int32)
+                metrics = metrics._replace(
+                    answer_hits=hits, answer_misses=1 - hits,
+                    answer_invalidations=jnp.zeros(
+                        (b,), jnp.int32).at[0].set(int(inval)))
             return metrics
         step = self._bsteps.get(b)
         if step is None:

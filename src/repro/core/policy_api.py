@@ -222,7 +222,7 @@ _REGISTRY: Dict[str, Callable] = {}
 
 def register_policy(name: str):
     """Decorator registering `fn(spec, catalog, cost_model, *, oracle,
-    index_spec, mesh, seed) -> CachePolicy` under `name`."""
+    index_spec, mesh, seed, answer_cache) -> CachePolicy` under `name`."""
 
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY:
@@ -243,7 +243,8 @@ def _unknown_policy_msg(name: str) -> str:
 
 
 def build_policy(spec, catalog, cost_model: CostModel, *, oracle=None,
-                 index_spec=None, mesh=None, seed: int = 0) -> CachePolicy:
+                 index_spec=None, mesh=None, seed: int = 0,
+                 answer_cache=None) -> CachePolicy:
     """Construct the policy a spec describes over `catalog`.
 
     Args:
@@ -262,6 +263,10 @@ def build_policy(spec, catalog, cost_model: CostModel, *, oracle=None,
         their serving is oracle-exact by construction.
       mesh: serve AÇAI through the sharded multi-device step
         (DESIGN.md §7); baselines reject it.
+      answer_cache: front AÇAI's index with the exact answer-memo tier
+        (DESIGN.md §13) — an `AnswerCacheSpec`, its dict/int/bool forms,
+        or None; requires `index_spec`; baselines reject it (their
+        serving is oracle-exact/memoized by construction).
       seed: rounding / randomized-policy seed (spec param ``seed`` wins).
 
     Returns:
@@ -280,7 +285,8 @@ def build_policy(spec, catalog, cost_model: CostModel, *, oracle=None,
     except KeyError:
         raise ValueError(_unknown_policy_msg(spec.name))
     return builder(spec, catalog, cost_model, oracle=oracle,
-                   index_spec=index_spec, mesh=mesh, seed=seed)
+                   index_spec=index_spec, mesh=mesh, seed=seed,
+                   answer_cache=answer_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -340,7 +346,8 @@ class AcaiPolicy:
     pure, so timing it does not advance the replay state)."""
 
     def __init__(self, spec: PolicySpec, catalog, cost_model: CostModel, *,
-                 oracle=None, index_spec=None, mesh=None, seed: int = 0):
+                 oracle=None, index_spec=None, mesh=None, seed: int = 0,
+                 answer_cache=None):
         import jax.numpy as jnp
 
         del oracle  # AÇAI never consults the server oracle
@@ -348,8 +355,15 @@ class AcaiPolicy:
         self.batch = int(spec.params.get("batch", 1))
         cfg = acai_config_from_spec(spec, cost_model, index_spec=index_spec)
         self.cache = acai.AcaiCache(jnp.asarray(catalog), cfg, seed=seed,
-                                    mesh=mesh)
+                                    mesh=mesh, answer_cache=answer_cache)
         self.cfg = self.cache.cfg
+
+    @property
+    def answer_cache(self):
+        """The `CachedIndex` wrapper when the answer tier is on (None
+        otherwise) — the serving engine's fast path and the launch
+        surface read hit stats through this."""
+        return self.cache.answer_cache
 
     k = property(lambda self: self.cfg.k)
     c_f = property(lambda self: self.cfg.c_f)
@@ -438,7 +452,8 @@ class BaselinePolicy:
     scan) when the caller does not pass one."""
 
     def __init__(self, spec: PolicySpec, catalog, cost_model: CostModel, *,
-                 oracle=None, index_spec=None, mesh=None, seed: int = 0):
+                 oracle=None, index_spec=None, mesh=None, seed: int = 0,
+                 answer_cache=None):
         if index_spec is not None:
             raise ValueError(
                 f"policy {spec.name!r} serves from the exact server oracle; "
@@ -447,6 +462,11 @@ class BaselinePolicy:
             raise ValueError(
                 f"policy {spec.name!r} is a sequential baseline; mesh= only "
                 f"applies to 'acai'")
+        if answer_cache is not None:
+            raise ValueError(
+                f"policy {spec.name!r} serves oracle-exact (memoized) "
+                f"answers by construction; answer_cache only applies to "
+                f"'acai'")
         self.spec = spec
         p = dict(spec.params)
         p.pop("batch", None)
@@ -506,6 +526,8 @@ class BaselinePolicy:
             local_overflow=np.zeros(len(results), np.int32),
             degraded=zeros, shed=zeros, remote_failures=zeros,
             retries=zeros, deadline_misses=zeros,
+            answer_hits=zeros, answer_misses=zeros,
+            answer_invalidations=zeros,
         )
 
     def serve_update(self, r, t=None) -> StepMetrics:
@@ -580,7 +602,8 @@ def replay_trace_steps(pol: CachePolicy, reqs, ts=None, *,
             f"trace of {t} requests is shorter than one mini-batch "
             f"(batch={batch}); shrink batch or extend the trace")
     out = {k: [] for k in ("gain", "cost", "served_local", "fetched",
-                           "occupancy")}
+                           "occupancy", "answer_hits",
+                           "answer_invalidations")}
     times = []
     for s in range(0, tt, batch):
         t0 = time.time()
@@ -594,6 +617,12 @@ def replay_trace_steps(pol: CachePolicy, reqs, ts=None, *,
         out["served_local"].append(np.asarray(m.served_local))
         out["fetched"].append(np.asarray(m.fetched))
         out["occupancy"].append(np.asarray(m.occupancy, np.float64))
+        # answer-tier counters (DESIGN.md §13): 0 everywhere when off
+        # (the int-default leaves broadcast to per-request zeros)
+        out["answer_hits"].append(
+            np.broadcast_to(np.asarray(m.answer_hits), (batch,)))
+        out["answer_invalidations"].append(
+            np.broadcast_to(np.asarray(m.answer_invalidations), (batch,)))
     res = {k: np.concatenate(v) for k, v in out.items()}
     res["hit"] = res["served_local"] > 0
     res["p50_step_s"] = float(np.percentile(times, 50)) if times else 0.0

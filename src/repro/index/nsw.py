@@ -132,6 +132,12 @@ def _nsw_query(q, emb, graph, entry_points, valid, k: int, beam: int,
 
 class NSWIndex(MutableRows):
     exact_distances = True  # candidates scored with exact L2
+    # answer-cache capability flags (repro.serve.answer_cache): insertion
+    # rewires existing nodes' adjacency (reverse links) and the first
+    # tombstone flips beam masking, so mutations can change answers far
+    # from the mutated rows — the cache must flush, not radius-check.
+    answer_unstable_add = True
+    answer_unstable_remove = True
 
     # how many of a new node's neighbours donate one edge slot back to it
     # (the incremental insertion's bidirectional-link half)

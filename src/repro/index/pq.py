@@ -141,6 +141,13 @@ def _ivfpq_query(q, emb, centroids, invlists, codes, codebooks, valid,
 class IVFPQIndex(MutableRows):
     """Coarse IVF + PQ-coded residual-free storage + optional exact refine."""
 
+    # answer-cache capability flags (repro.serve.answer_cache): the ADC
+    # shortlist is rank-R by *approximate* distance, so an add/remove can
+    # move the shortlist boundary and change refined answers that never
+    # contained the mutated rows — the cache must flush, not radius-check.
+    answer_unstable_add = True
+    answer_unstable_remove = True
+
     def __init__(self, embeddings, nlist: int = 64, nprobe: int = 8,
                  m: int = 8, refine: int = 4, seed: int = 0):
         self._init_rows(embeddings)

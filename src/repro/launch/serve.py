@@ -15,6 +15,16 @@ and `--index-opt key=value` passes builder kwargs, e.g.:
   ... --remote-index ivf --index-opt nlist=256 --index-opt nprobe=16
   ... --mesh-shards 4 --remote-index ivf_sharded --index-opt nlist=64
 
+`--answer-cache CAP` fronts AÇAI's index with the exact answer-memo tier
+(DESIGN.md §13) — repeated queries serve their memoized top-k without
+touching the fused scans, bitwise identical to the uncached path — and
+`--answer-cache-opt key=value` passes `AnswerCacheSpec` fields:
+
+  ... --remote-index flat --answer-cache 4096
+  ... --remote-index ivf --answer-cache 1024 --answer-cache-opt hit_ms=0.1
+  ... --remote-index nsw --answer-cache 512 \
+      --answer-cache-opt idle_unload_ms=50
+
 `--churn-rate R` exercises the mutable catalog (DESIGN.md §10): the cache
 starts on the warm `--churn-warm` fraction of the catalog and R insert+
 expire events fire per request (a rolling window — new results admitted
@@ -122,6 +132,15 @@ def main():
     ap.add_argument("--index-opt", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="index builder kwarg (repeatable), e.g. nlist=256")
+    ap.add_argument("--answer-cache", type=int, default=None, metavar="CAP",
+                    help="answer-cache tier entry budget (DESIGN.md §13): "
+                         "memoize exact top-k index answers in front of "
+                         "the fused scans (0 = pass-through machinery; "
+                         "needs --remote-index, acai only)")
+    ap.add_argument("--answer-cache-opt", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="AnswerCacheSpec field (repeatable), e.g. "
+                         "hit_ms=0.1 idle_unload_ms=50")
     ap.add_argument("--policy", default="acai",
                     choices=registered_policies(),
                     help="semantic-cache policy (unified policy registry, "
@@ -225,6 +244,33 @@ def main():
     elif args.index_opt:
         raise SystemExit("--index-opt needs --remote-index")
 
+    # answer-cache tier (DESIGN.md §13): memoize exact index answers
+    from repro.serve import AnswerCacheSpec, parse_answer_cache_opts
+
+    answer_cache = None
+    if args.answer_cache is not None:
+        if args.policy != "acai":
+            raise SystemExit(
+                f"--policy {args.policy} serves oracle-exact (memoized) "
+                f"answers by construction; --answer-cache only applies "
+                f"to acai")
+        if args.mesh_shards > 1:
+            raise SystemExit(
+                "--answer-cache needs the single-device cache (the "
+                "sharded step owns candidate generation)")
+        if index_spec is None:
+            raise SystemExit(
+                "--answer-cache fronts an index backend: pass "
+                "--remote-index (flat = the exact fused scan)")
+        try:
+            answer_cache = AnswerCacheSpec(
+                capacity=args.answer_cache,
+                **parse_answer_cache_opts(args.answer_cache_opt))
+        except (TypeError, ValueError) as e:
+            raise SystemExit(str(e))
+    elif args.answer_cache_opt:
+        raise SystemExit("--answer-cache-opt needs --answer-cache")
+
     if args.churn_rate < 0 or not 0.0 < args.churn_warm <= 1.0:
         raise SystemExit("--churn-rate must be >= 0 and --churn-warm in (0, 1]")
     if args.churn_rate > 0 and args.mesh_shards > 1:
@@ -316,7 +362,8 @@ def main():
     lm = SemanticCachedLM(params, cfg, catalog[:n_warm], payloads[:n_warm],
                           gen_fn, h=args.cache_size, k=4, mesh=mesh,
                           index_spec=index_spec, policy_spec=policy_spec,
-                          remote=remote, resilience=resilience)
+                          remote=remote, resilience=resilience,
+                          answer_cache=answer_cache)
     insert_ptr, expire_ptr, acc = n_warm, 0, 0.0
     events = 0
     for i in range(args.requests):
@@ -342,6 +389,17 @@ def main():
     print(f"semantic cache ({tier}): {s.requests} requests, "
           f"{s.served_local}/{s.requests * lm.k} objects local, "
           f"{s.generated} generations, NAG={lm.nag:.3f}")
+    if lm.answer_cache is not None:
+        st = lm.answer_cache.stats()
+        print(f"answer cache (capacity={st['capacity']}): "
+              f"hit rate {st['hit_rate']:.3f} "
+              f"({st['hits']}/{st['hits'] + st['misses']}), "
+              f"{st['entries']} entries, {st['invalidations']} "
+              f"invalidations (remove={st['inv_remove']} "
+              f"add={st['inv_add']} refresh={st['inv_refresh']}), "
+              f"{st['scans_skipped']} scans skipped of "
+              f"{st['scans'] + st['scans_skipped']}, "
+              f"unloads={st['unloads']} reloads={st['reloads']}")
     if resilient:
         ses = lm.policy.session
         c = ses.counters

@@ -1,10 +1,15 @@
 """Serving substrate: prefill/decode engine with KV/SSM caches, continuous
 batching, the AÇAI semantic cache tier, the resilient remote tier
 (fault-injected backend + retry/hedge/deadline/degrade, DESIGN.md §11),
-and the online serving engine (arrival processes + request queue +
+the online serving engine (arrival processes + request queue +
 dynamic batch former + admission control on the virtual clock,
-DESIGN.md §12)."""
+DESIGN.md §12), and the answer-cache tier (exact top-k memoization in
+front of the index with precise churn invalidation and idle unload,
+DESIGN.md §13)."""
 
+from repro.serve.answer_cache import (AnswerCache, AnswerCacheSpec,
+                                      CachedIndex, parse_answer_cache_opts,
+                                      resolve_answer_cache_spec)
 from repro.serve.arrivals import (ARRIVAL_KINDS, ArrivalSpec,
                                   ClosedLoopSource, OpenLoopSource,
                                   arrival_times, make_source)
@@ -22,14 +27,17 @@ from repro.serve.resilience import (CircuitBreaker, RemoteSession,
                                     simulate_request)
 from repro.serve.semantic_cache import SemanticCachedLM, embed_prompt
 
-__all__ = ["ARRIVAL_KINDS", "AdmissionConfig", "ArrivalSpec",
-           "BatchFormerConfig", "CircuitBreaker", "ClosedLoopSource",
+__all__ = ["ARRIVAL_KINDS", "AdmissionConfig", "AnswerCache",
+           "AnswerCacheSpec", "ArrivalSpec",
+           "BatchFormerConfig", "CachedIndex", "CircuitBreaker",
+           "ClosedLoopSource",
            "FaultSpec", "FaultyRemote", "OnlineServingEngine",
            "OpenLoopSource", "OracleRemote", "RemoteBackend",
            "RemoteSession", "RequestRecord", "ResilienceConfig",
            "ResilientPolicy", "RetryConfig", "SemanticCachedLM",
            "ServeEngine", "ServiceModel", "arrival_times", "embed_prompt",
            "fixed_window_engine", "generate", "make_decode_step",
-           "make_prefill", "make_source", "parse_outage_windows",
-           "payload_ok", "replay_resilient", "serve_trace_online",
-           "simulate_request"]
+           "make_prefill", "make_source", "parse_answer_cache_opts",
+           "parse_outage_windows",
+           "payload_ok", "replay_resilient", "resolve_answer_cache_spec",
+           "serve_trace_online", "simulate_request"]

@@ -1,0 +1,543 @@
+"""Answer-cache tier: exact top-k memoization in front of the index
+(DESIGN.md §13).
+
+AÇAI's remote index pays a full fused scan per query even when a
+Zipf-skewed trace repeats the same hot queries thousands of times — the
+head-heavy regime where classical similarity-caching analyses put all
+the value.  This tier memoizes the index's **exact answers** `(dists,
+ids)` keyed by query identity and serves repeats without touching the
+scan, with three hard guarantees:
+
+* **Bitwise parity** — a hit returns byte-identical arrays to what the
+  uncached path would compute.  The contract that makes this cheap to
+  guarantee: a batch is served from the store only when *every* row
+  hits; any miss recomputes the full batch through the inner index
+  (same shapes, same code as cache-off) and re-stores all rows.  Since
+  the fused scans are per-row at a fixed batch shape, the recomputed
+  values equal the stored ones bitwise (pinned by
+  tests/test_answer_cache.py across every registered backend).
+* **Precise churn invalidation** — `remove(ids)` drops exactly the
+  entries whose answer contains a removed id (inverted id→entry map);
+  `add(vectors)` invalidates only entries whose k-th distance reaches a
+  new row (conservative radius check); `refresh()` bumps an epoch and
+  flushes.  Backends whose mutations rewire existing structures (NSW's
+  reverse links) or whose reported distances are approximate (IVFPQ's
+  ADC) declare it via `answer_unstable_add/_remove` class flags and get
+  a conservative full flush instead — parity beats hit-rate.
+* **Idle unload** (the FAISS-unload analogue from the ChibiBooru
+  exemplar): after `idle_unload_ms` virtual-clock ms without a scan,
+  the wrapper offloads the inner index's heavy device structures
+  (IVF invlists, NSW adjacency, LSH buckets …) to host memory and
+  reloads them — bitwise intact, never rebuilt — on the first miss.
+  Hits served while unloaded stay unloaded.
+
+Key scheme: the default key is a 128-bit blake2b digest of the query
+vector's float32 bytes ("hashed-vector identity" — trace-registry
+requests with jitter 0 are catalog rows, so repeats collide exactly).
+Direct API callers replaying a registered trace can pass `rids=`
+(catalog-row request ids) to key by identity without hashing; the two
+namespaces coexist.
+
+`AnswerCacheSpec` is the serializable config knob, registry-style like
+`IndexSpec`/`PolicySpec`: `AcaiCache(..., answer_cache=spec)`,
+`build_policy(..., answer_cache=...)`, `SemanticCachedLM(...,
+answer_cache=...)` and `launch/serve.py --answer-cache/--answer-cache-
+opt` all take it (or its dict/int forms).  `capacity=0` is the
+documented pass-through mode: identical serving code with hashing and
+memoization bypassed — the cache-off arm of every parity pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "AnswerCacheSpec", "AnswerCache", "CachedIndex",
+    "resolve_answer_cache_spec", "parse_answer_cache_opts",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnswerCacheSpec:
+    """Serializable answer-cache config (the `IndexSpec` of this tier).
+
+    capacity        LRU entry budget; 0 = pass-through (cache machinery
+                    installed, memoization bypassed — the cache-off arm
+                    of the parity pins).
+    hit_ms          virtual service time of an engine fast-path hit
+                    (DESIGN.md §13): a hit's answer completes at
+                    arrival + hit_ms without entering the batch former.
+    idle_unload_ms  virtual-clock idle threshold after which the inner
+                    index's heavy structures are offloaded to host
+                    memory (None = never unload).
+    """
+
+    capacity: int = 4096
+    hit_ms: float = 0.2
+    idle_unload_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.capacity < 0:
+            raise ValueError(f"capacity must be >= 0: {self.capacity}")
+        if self.hit_ms < 0:
+            raise ValueError(f"hit_ms must be >= 0: {self.hit_ms}")
+        if self.idle_unload_ms is not None and self.idle_unload_ms <= 0:
+            raise ValueError(
+                f"idle_unload_ms must be > 0 or None: {self.idle_unload_ms}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AnswerCacheSpec":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"AnswerCacheSpec: unknown fields {sorted(unknown)} "
+                f"(known: {sorted(f.name for f in dataclasses.fields(cls))})")
+        return cls(**d)
+
+    def with_params(self, **kw) -> "AnswerCacheSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_answer_cache_spec(value) -> Optional[AnswerCacheSpec]:
+    """Normalize every accepted `answer_cache=` form to a spec or None:
+    None/False → None (no tier), True → default spec, int → capacity,
+    dict → `from_dict`, spec → itself."""
+    if value is None or value is False:
+        return None
+    if value is True:
+        return AnswerCacheSpec()
+    if isinstance(value, AnswerCacheSpec):
+        return value
+    if isinstance(value, int):
+        return AnswerCacheSpec(capacity=value)
+    if isinstance(value, dict):
+        return AnswerCacheSpec.from_dict(value)
+    raise TypeError(
+        f"answer_cache must be None/bool/int/dict/AnswerCacheSpec, "
+        f"got {type(value).__name__}")
+
+
+def parse_answer_cache_opts(pairs) -> dict:
+    """KEY=VALUE CLI opts → typed spec fields (the `parse_index_opts`
+    idiom): int → float → str coercion, 'none' → None."""
+    out: dict = {}
+    for item in pairs or ():
+        if "=" not in item:
+            raise ValueError(
+                f"--answer-cache-opt needs KEY=VALUE, got {item!r}")
+        key, val = item.split("=", 1)
+        if val.lower() in ("none", "null"):
+            out[key] = None
+            continue
+        for cast in (int, float):
+            try:
+                out[key] = cast(val)
+                break
+            except ValueError:
+                continue
+        else:
+            out[key] = val
+    return out
+
+
+class _Entry(NamedTuple):
+    ids: np.ndarray    # (k,) int32 answer ids (-1 underflow slots)
+    d: np.ndarray      # (k,) float32 answer distances (+inf on underflow)
+    q: np.ndarray      # (dim,) float32 query copy (radius checks)
+    kth: float         # largest finite distance; +inf when underfull
+                       # (an underfull answer can always gain a new row)
+
+
+def _vector_key(row: np.ndarray) -> bytes:
+    """128-bit digest of the query's float32 bytes — hashed-vector
+    identity.  Equal vectors (e.g. repeated catalog-row requests from
+    the trace registry at jitter 0) collide exactly; distinct float32
+    vectors collide with negligible probability."""
+    buf = np.ascontiguousarray(row, dtype=np.float32)
+    return hashlib.blake2b(buf.tobytes(), digest_size=16).digest()
+
+
+class AnswerCache:
+    """LRU memo of exact index answers with precise churn invalidation.
+
+    Entries are keyed `(namespace key, k)` — the same query at two
+    fan-outs is two entries.  The store is the source of truth for the
+    batch-level contract enforced by `CachedIndex`: serve from memory
+    only on an all-hit batch, otherwise recompute everything.
+    """
+
+    def __init__(self, spec: AnswerCacheSpec):
+        self.spec = spec
+        self._store: "OrderedDict[tuple, _Entry]" = OrderedDict()
+        self._inv: dict[int, set] = {}     # object id -> entry keys
+        self._qkeys: dict = {}             # namespace key -> refcount
+        self.epoch = 0
+        self.hits = self.misses = 0
+        self.stores = self.evictions = 0
+        self.invalidations = 0
+        self.inv_remove = self.inv_add = self.inv_refresh = 0
+        self.scans = self.scans_skipped = 0
+        # per-serving-step deltas, drained by AcaiCache's metric booking
+        self._step_hit_mask: Optional[np.ndarray] = None
+        self._inval_since_take = 0
+
+    # -- keys ---------------------------------------------------------------
+
+    @staticmethod
+    def _keys_of(rs: np.ndarray, k: int, rids=None) -> list:
+        if rids is not None:
+            rids = np.atleast_1d(np.asarray(rids))
+            if len(rids) != len(rs):
+                raise ValueError(
+                    f"rids length {len(rids)} != batch {len(rs)}")
+            return [(("rid", int(r)), k) for r in rids]
+        return [(("vec", _vector_key(row)), k) for row in rs]
+
+    # -- lookup / store -----------------------------------------------------
+
+    def lookup_batch(self, rs: np.ndarray, k: int, rids=None):
+        """Per-row entries (or None) + hit mask; counts hits/misses and
+        refreshes LRU recency of present entries."""
+        keys = self._keys_of(rs, k, rids)
+        entries, mask = [], np.zeros(len(keys), bool)
+        for i, key in enumerate(keys):
+            e = self._store.get(key)
+            if e is not None:
+                self._store.move_to_end(key)
+                mask[i] = True
+            entries.append(e)
+        self.hits += int(mask.sum())
+        self.misses += int((~mask).sum())
+        self._note_step(mask)
+        return entries, mask
+
+    def peek(self, row, k: Optional[int] = None) -> bool:
+        """Non-counting presence probe (the engine's arrival-time fast
+        path checks this without perturbing hit statistics or LRU
+        order).  With `k=None` any fan-out of the query counts."""
+        if self.spec.capacity == 0:
+            return False
+        nk = ("vec", _vector_key(np.asarray(row)))
+        if k is None:
+            return nk in self._qkeys
+        return (nk, k) in self._store
+
+    def store_batch(self, rs: np.ndarray, k: int, d: np.ndarray,
+                    ids: np.ndarray, rids=None) -> None:
+        if self.spec.capacity == 0:
+            return
+        keys = self._keys_of(rs, k, rids)
+        for key, row, drow, irow in zip(keys, rs, d, ids):
+            self._put(key, np.asarray(row, np.float32),
+                      np.asarray(drow), np.asarray(irow))
+
+    def _put(self, key, q, d, ids) -> None:
+        if key in self._store:
+            self._drop(key)  # overwrite: rebuild inverted-map links
+        finite = np.isfinite(d) & (ids >= 0)
+        kth = float(d[finite].max()) if finite.all() else float("inf")
+        self._store[key] = _Entry(ids=ids.astype(np.int32, copy=True),
+                                  d=np.asarray(d, copy=True), q=q.copy(),
+                                  kth=kth)
+        self._qkeys[key[0]] = self._qkeys.get(key[0], 0) + 1
+        for oid in ids[ids >= 0].tolist():
+            self._inv.setdefault(int(oid), set()).add(key)
+        self.stores += 1
+        while len(self._store) > self.spec.capacity:
+            old = next(iter(self._store))
+            self._drop(old)
+            self.evictions += 1
+
+    def _drop(self, key) -> None:
+        e = self._store.pop(key)
+        for oid in e.ids[e.ids >= 0].tolist():
+            s = self._inv.get(int(oid))
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._inv[int(oid)]
+        cnt = self._qkeys.get(key[0], 0) - 1
+        if cnt <= 0:
+            self._qkeys.pop(key[0], None)
+        else:
+            self._qkeys[key[0]] = cnt
+
+    # -- invalidation (DESIGN.md §13) ---------------------------------------
+
+    def invalidate_removed(self, ids) -> int:
+        """Drop exactly the entries whose answer contains a removed id
+        (inverted map walk — precise, not a flush)."""
+        doomed = set()
+        for oid in np.atleast_1d(np.asarray(ids)).tolist():
+            doomed |= self._inv.get(int(oid), set())
+        for key in doomed:
+            self._drop(key)
+        return self._book_invalidations(len(doomed), "remove")
+
+    def invalidate_added(self, vectors) -> int:
+        """Conservative radius check: a new row can only change an
+        answer whose k-th distance reaches it, so invalidate entries
+        with `min_j d2(q, v_j) <= kth` (float64, small safety margin —
+        over-invalidating is safe, under-invalidating is not).
+        Underfull answers (`kth = +inf`) always invalidate."""
+        if not self._store:
+            return 0
+        v = np.atleast_2d(np.asarray(vectors, np.float64))
+        keys = list(self._store.keys())
+        q = np.stack([self._store[k].q for k in keys]).astype(np.float64)
+        kth = np.array([self._store[k].kth for k in keys])
+        d2 = ((q[:, None, :] - v[None, :, :]) ** 2).sum(-1).min(axis=1)
+        hit = d2 <= kth * (1 + 1e-6) + 1e-6
+        for key in (k for k, h in zip(keys, hit) if h):
+            self._drop(key)
+        return self._book_invalidations(int(hit.sum()), "add")
+
+    def flush(self, reason: str = "refresh") -> int:
+        """Drop everything (epoch bump): `refresh()` rebuilds quantizer
+        structures, and unstable-mutation backends route add/remove
+        here too (parity over hit-rate)."""
+        n = len(self._store)
+        self._store.clear()
+        self._inv.clear()
+        self._qkeys.clear()
+        self.epoch += 1
+        return self._book_invalidations(n, reason)
+
+    def _book_invalidations(self, n: int, reason: str) -> int:
+        self.invalidations += n
+        self._inval_since_take += n
+        if reason == "remove":
+            self.inv_remove += n
+        elif reason == "add":
+            self.inv_add += n
+        else:
+            self.inv_refresh += n
+        return n
+
+    # -- per-step metric deltas ---------------------------------------------
+
+    def _note_step(self, mask: np.ndarray) -> None:
+        self._step_hit_mask = mask
+
+    def take_step_stats(self, batch: int):
+        """Drain the last serving step's deltas: (hit mask (B,),
+        invalidations since the previous drain).  Called by
+        `AcaiCache._serve_batch_direct` to populate the `answer_*`
+        StepMetrics counters."""
+        mask = self._step_hit_mask
+        if mask is None or len(mask) != batch:
+            mask = np.zeros(batch, bool)
+        self._step_hit_mask = None
+        inval, self._inval_since_take = self._inval_since_take, 0
+        return mask, inval
+
+    # -- reporting ----------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "capacity": self.spec.capacity,
+            "entries": len(self._store),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "stores": self.stores,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "inv_remove": self.inv_remove,
+            "inv_add": self.inv_add,
+            "inv_refresh": self.inv_refresh,
+            "scans": self.scans,
+            "scans_skipped": self.scans_skipped,
+            "epoch": self.epoch,
+        }
+
+
+class CachedIndex:
+    """Answer-cache front for any registered index backend: the full
+    `Index` protocol (so `mutable_index_candidate_fn` and `AcaiCache`'s
+    mutation hooks drive it unchanged), with `query` memoized through an
+    `AnswerCache`, mutations routed through the invalidation rules, and
+    the idle-unload hook on a virtual clock.
+
+    Batch contract (the parity guarantee): a batch is answered from the
+    store only when every row hits; any miss recomputes the whole batch
+    through the inner index and re-stores it.  See module docstring.
+    """
+
+    #: attributes never offloaded: the mutable-slab assembly reads them
+    #: every step, hits included.
+    _KEEP_LOADED = ("embeddings", "valid")
+
+    def __init__(self, inner, spec: AnswerCacheSpec):
+        self.inner = inner
+        self.spec = spec
+        self.cache = AnswerCache(spec)
+        self._now_ms = 0.0
+        self._last_scan_ms = 0.0
+        self._offloaded: list[str] = []   # attr names held on host
+        self.unloads = self.reloads = 0
+
+    # -- Index protocol proxies ---------------------------------------------
+
+    @property
+    def embeddings(self):
+        return self.inner.embeddings
+
+    @property
+    def valid(self):
+        return self.inner.valid
+
+    @property
+    def capacity(self):
+        return self.inner.capacity
+
+    @property
+    def n_slots(self):
+        return self.inner.n_slots
+
+    @property
+    def n(self):
+        return self.inner.n
+
+    @property
+    def exact_distances(self):
+        return getattr(self.inner, "exact_distances", False)
+
+    def live_rows(self):
+        return self.inner.live_rows()
+
+    def memory_bytes(self) -> int:
+        return self.inner.memory_bytes()
+
+    # -- queries ------------------------------------------------------------
+
+    def query(self, rs, k: int):
+        # host-side normalisation: the lookup hashes host bytes, and a
+        # hit must never pay a device round-trip — the scan paths hand
+        # the batch to the inner index's jit boundary, which device-puts
+        # the same bytes either way (bitwise-identical candidates)
+        rs_np = np.atleast_2d(np.asarray(rs))
+        if self.spec.capacity == 0:  # pass-through arm of the parity pins
+            self._ensure_loaded()
+            self._last_scan_ms = self._now_ms
+            self.cache.scans += 1
+            self.cache._note_step(np.zeros(rs_np.shape[0], bool))
+            return self.inner.query(rs_np, k)
+        entries, mask = self.cache.lookup_batch(rs_np, k)
+        if mask.all():
+            # all-hit: serve the memoized answers host-side — no scan,
+            # no device transfer (and never reload an unloaded index);
+            # the jitted slab assembly converts at its own boundary
+            self.cache.scans_skipped += 1
+            d = np.stack([e.d for e in entries])
+            ids = np.stack([e.ids for e in entries])
+            return d, ids
+        self._ensure_loaded()
+        self._last_scan_ms = self._now_ms
+        self.cache.scans += 1
+        d, ids = self.inner.query(rs_np, k)
+        self.cache.store_batch(rs_np, k, np.asarray(d), np.asarray(ids))
+        return d, ids
+
+    # -- mutation hooks (invalidation rules, DESIGN.md §13) -----------------
+
+    def add(self, vectors):
+        self._ensure_loaded()
+        ids = self.inner.add(vectors)
+        if (getattr(self.inner, "answer_unstable_add", False)
+                or not self.exact_distances):
+            # graph-rewiring insertion (NSW reverse links) or
+            # approximate reported distances (IVFPQ ADC): the radius
+            # check cannot bound the answer drift — flush instead
+            self.cache.flush("add")
+        else:
+            self.cache.invalidate_added(np.asarray(vectors))
+        return ids
+
+    def remove(self, ids) -> None:
+        self._ensure_loaded()
+        self.inner.remove(ids)
+        if getattr(self.inner, "answer_unstable_remove", False):
+            # e.g. NSW: the first tombstone flips beam-search masking,
+            # which can reroute answers that never contained the id
+            self.cache.flush("remove")
+        else:
+            self.cache.invalidate_removed(ids)
+
+    def refresh(self) -> None:
+        self._ensure_loaded()
+        self.inner.refresh()
+        self.cache.flush("refresh")
+
+    # -- idle unload (virtual clock) ----------------------------------------
+
+    def tick(self, now_ms: float) -> None:
+        """Advance the virtual clock (the serving engine calls this at
+        every dispatch instant); unload once the index has sat idle —
+        no fused scan — for `idle_unload_ms`."""
+        self._now_ms = max(self._now_ms, float(now_ms))
+        if (self.spec.idle_unload_ms is not None and self.loaded
+                and self._now_ms - self._last_scan_ms
+                >= self.spec.idle_unload_ms):
+            self.unload()
+
+    @property
+    def loaded(self) -> bool:
+        return not self._offloaded
+
+    def unload(self) -> int:
+        """Offload the inner index's heavy device arrays (everything
+        except the embeddings slab + liveness mask) to host memory.
+        Returns bytes freed from the device.  The structures are moved,
+        not rebuilt, so a later reload serves bitwise-identical answers
+        (unlike `refresh()`, which re-trains quantizers)."""
+        if not self.loaded:
+            return 0
+        freed = 0
+        for name, val in list(vars(self.inner).items()):
+            if name in self._KEEP_LOADED or not isinstance(val, jax.Array):
+                continue
+            setattr(self.inner, name, np.asarray(val))
+            self._offloaded.append(name)
+            freed += val.nbytes
+        if self._offloaded:
+            self.unloads += 1
+        return freed
+
+    def _ensure_loaded(self) -> None:
+        if self.loaded:
+            return
+        for name in self._offloaded:
+            val = getattr(self.inner, name)
+            if isinstance(val, np.ndarray):
+                setattr(self.inner, name, jnp.asarray(val))
+        self._offloaded = []
+        self.reloads += 1
+        self._last_scan_ms = self._now_ms
+
+    # -- reporting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        s = self.cache.stats()
+        s.update(unloads=self.unloads, reloads=self.reloads,
+                 loaded=self.loaded)
+        return s
+
+    def __repr__(self) -> str:
+        return (f"CachedIndex({type(self.inner).__name__}, "
+                f"capacity={self.spec.capacity}, "
+                f"entries={len(self.cache)})")

@@ -149,6 +149,16 @@ class RequestRecord(NamedTuple):
     done_ms: float      # completion (= form_ms if shed)
     batch: int          # formed batch size (0 if shed)
     shed_reason: str    # '' | 'queue_full' | 'deadline'
+    # answer-cache fast path (DESIGN.md §13): a hit's *answer* completes
+    # at arrival + hit_ms without entering the batch former; what still
+    # queues is only the deferred policy-learning update (so the batch
+    # partition — and with it the fixed-window bitwise pin — is
+    # unchanged).  `user_done_ms` is the user-visible completion: the
+    # fast-path instant for hits, `done_ms` otherwise (0.0 = not set,
+    # resolved at assembly).  A shed fast-path hit still answered at
+    # arrival — the shed books the lost learning, not the lost answer.
+    answer_hit: int = 0
+    user_done_ms: float = 0.0
 
     @property
     def shed(self) -> bool:
@@ -210,6 +220,13 @@ class OnlineServingEngine:
         max_depth, ev_i, mutation_s = 0, 0, 0.0
         mb, mw = self.former.max_batch, self.former.max_wait_ms
         cap, deadline = self.admission.queue_cap, self.admission.deadline_ms
+        # answer-cache fast path (DESIGN.md §13): peek — non-counting, so
+        # policy-step hit statistics stay replay-consistent — at arrival;
+        # a hit's answer completes at arrival + hit_ms and only the
+        # deferred learning update queues on (batch partition unchanged)
+        ac = getattr(self.policy, "answer_cache", None)
+        hit_ms = ac.spec.hit_ms if ac is not None else 0.0
+        fast: dict[int, float] = {}  # rid -> user-visible completion
 
         def admit(up_to: float) -> None:
             nonlocal max_depth
@@ -218,9 +235,13 @@ class OnlineServingEngine:
                 if nxt is None or nxt > up_to:
                     return
                 at, rid = source.pop()
+                if ac is not None and ac.cache.peek(reqs[rid]):
+                    fast[rid] = at + hit_ms
                 if cap is not None and len(queue) >= cap:
                     records[rid] = RequestRecord(rid, at, at, at, 0,
-                                                 SHED_QUEUE_FULL)
+                                                 SHED_QUEUE_FULL,
+                                                 int(rid in fast),
+                                                 fast.get(rid, 0.0))
                     source.on_complete(rid, at)
                     continue
                 queue.append(_Pending(rid, at))
@@ -241,6 +262,8 @@ class OnlineServingEngine:
 
         while source.peek() is not None or queue:
             admit(now)
+            if ac is not None:
+                ac.tick(now)  # idle-unload clock (DESIGN.md §13)
             if busy_until <= now and queue:
                 full = len(queue) >= mb
                 # NB: compare against the *same float expression* the
@@ -262,7 +285,8 @@ class OnlineServingEngine:
                             if est_done > q.arrival_ms + deadline:
                                 records[q.rid] = RequestRecord(
                                     q.rid, q.arrival_ms, now, now, 0,
-                                    SHED_DEADLINE)
+                                    SHED_DEADLINE, int(q.rid in fast),
+                                    fast.get(q.rid, 0.0))
                                 source.on_complete(q.rid, now)
                             else:
                                 kept.append(q)
@@ -281,7 +305,8 @@ class OnlineServingEngine:
                         batch_metrics.append(([q.rid for q in kept], m))
                         for q in kept:
                             records[q.rid] = RequestRecord(
-                                q.rid, q.arrival_ms, now, done, b, "")
+                                q.rid, q.arrival_ms, now, done, b, "",
+                                int(q.rid in fast), fast.get(q.rid, 0.0))
                             source.on_complete(q.rid, done)
                     continue  # re-evaluate triggers at the same instant
             # advance the clock to the next actionable event: the next
@@ -368,6 +393,25 @@ class OnlineServingEngine:
             "p50_step_s": (float(np.percentile(step_walls, 50))
                            if step_walls else 0.0),
         }
+        # answer-cache fast-path decomposition (DESIGN.md §13): hits'
+        # user-visible completion is the arrival-time fast path, not the
+        # learn-batch completion; the legacy latency fields above keep
+        # their (learn-path) meaning so cache-off results are unchanged.
+        ahit = np.array([bool(r.answer_hit) for r in recs], bool)
+        user_done = np.where(
+            ahit, np.array([r.user_done_ms for r in recs]), done)
+        user_latency = user_done - arrival
+        answered = served | ahit  # a shed hit was still answered
+        res.update({
+            "answer_hit": ahit,
+            "answer_hits": int(ahit.sum()),
+            "answer_hit_rate": float(ahit.mean()) if n else 0.0,
+            "user_latency_ms": user_latency,
+            "p50_user_ms": pct(user_latency[answered], 50),
+            "p99_user_ms": pct(user_latency[answered], 99),
+            "p50_hit_ms": pct(user_latency[ahit], 50),
+            "p50_miss_ms": pct(latency[served & ~ahit], 50),
+        })
         if slo_ms is not None:
             good = served & (latency <= slo_ms)
             res["slo_ms"] = float(slo_ms)
@@ -392,7 +436,11 @@ def tree_rows_to_metrics(n: int, batch_metrics, recs) -> StepMetrics:
         arrs = jtu.tree_map(np.asarray, m)
         for j, rid in enumerate(rids):
             for f in StepMetrics._fields:
-                cols[f][rid] = np.asarray(getattr(arrs, f))[j]
+                v = np.asarray(getattr(arrs, f))
+                # 0-d guard: StepMetrics fields with int defaults (e.g.
+                # the resilient tier omits the answer-cache counters)
+                # come through as scalars — broadcast, don't index
+                cols[f][rid] = v[j] if v.ndim else v
     return StepMetrics(**cols)
 
 

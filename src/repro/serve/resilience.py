@@ -409,6 +409,9 @@ def make_degraded_step(cfg: acai.AcaiConfig, batch: int, ceiling: float,
             degraded=(~ok_b & ~deg_shed).astype(jnp.int32),
             shed=(~ok_b & deg_shed).astype(jnp.int32),
             remote_failures=(~ok_b).astype(jnp.int32),
+            answer_hits=jnp.zeros((batch,), jnp.int32),
+            answer_misses=jnp.zeros((batch,), jnp.int32),
+            answer_invalidations=jnp.zeros((batch,), jnp.int32),
         )
         return acai.CacheState(y_new, x_new, state.t + batch, key), metrics
 
@@ -460,6 +463,15 @@ class AcaiResilience:
                               cache.valid)
         self.session.counters.degraded += int(jnp.sum(m.degraded))
         self.session.counters.shed += int(jnp.sum(m.shed))
+        if cache.answer_cache is not None:
+            # book the answer-tier counters from the eager slab above,
+            # same as AcaiCache._serve_batch_direct (DESIGN.md §13)
+            mask, inval = cache.answer_cache.cache.take_step_stats(b)
+            hits = jnp.asarray(mask, jnp.int32)
+            m = m._replace(
+                answer_hits=hits, answer_misses=1 - hits,
+                answer_invalidations=jnp.zeros(
+                    (b,), jnp.int32).at[0].set(int(inval)))
         return m._replace(retries=jnp.asarray(retries),
                           deadline_misses=jnp.asarray(misses))
 
@@ -567,6 +579,9 @@ class ResilientPolicy:
             retries=np.array([r.retries for r in reps], np.int32),
             deadline_misses=np.array([r.deadline_miss for r in reps],
                                      np.int32),
+            answer_hits=np.zeros(b, np.int32),
+            answer_misses=np.zeros(b, np.int32),
+            answer_invalidations=np.zeros(b, np.int32),
         )
 
 

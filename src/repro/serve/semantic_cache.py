@@ -61,7 +61,7 @@ class SemanticCachedLM:
                  h: int = 64, k: int = 4, c_f: Optional[float] = None,
                  eta: Optional[float] = None, seed: int = 0, mesh=None,
                  index_spec=None, policy_spec=None, remote=None,
-                 resilience=None):
+                 resilience=None, answer_cache=None):
         from repro.core.costs import calibrate_fetch_cost
 
         self.params, self.cfg = params, cfg
@@ -94,16 +94,19 @@ class SemanticCachedLM:
             raise ValueError(f"eta only applies to the 'acai' policy, not "
                              f"{spec.name!r}")
         spec = policy_api.PolicySpec(spec.name, {**base, **spec.params})
-        if spec.name != "acai" and (index_spec is not None or mesh is not None):
+        if spec.name != "acai" and (index_spec is not None or mesh is not None
+                                    or answer_cache is not None):
             raise ValueError(
                 f"policy {spec.name!r} serves from the exact server oracle; "
-                f"index_spec/mesh only apply to 'acai'")
+                f"index_spec/mesh/answer_cache only apply to 'acai'")
         # mesh: shard the catalog scan + OMA over the mesh's `model` axis
         # (repro.core.distributed.make_step_sharded) — the multi-device
         # serving path; None = the single-device batched pipeline.
+        # answer_cache: the exact answer-memo tier in front of the index
+        # (DESIGN.md §13) — AnswerCacheSpec / dict / capacity int / None.
         self.policy = policy_api.build_policy(
             spec, catalog_embs, CostModel(c_f=c_f), index_spec=index_spec,
-            mesh=mesh, seed=seed)
+            mesh=mesh, seed=seed, answer_cache=answer_cache)
         # resilient serving (DESIGN.md §11): with a remote backend and/or
         # resilience config, every request first runs its remote
         # interaction (retry / hedge / deadline / breaker) and failures
@@ -125,6 +128,13 @@ class SemanticCachedLM:
     @property
     def policy_spec(self):
         return self.policy.spec
+
+    @property
+    def answer_cache(self):
+        """The answer tier's `CachedIndex` wrapper (None when off) —
+        `.stats()` carries hit/invalidation/unload counts."""
+        return getattr(getattr(self.policy, "inner", self.policy),
+                       "answer_cache", None)
 
     def query(self, prompt_tokens: jax.Array):
         """Returns metrics: the k most similar cached results, each tagged

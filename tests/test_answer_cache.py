@@ -1,0 +1,453 @@
+"""Answer-cache tier (DESIGN.md §13): spec round-trips, the LRU store's
+unit semantics, the bitwise parity pin (cache-on == cache-off) across
+every registered backend with and without churn, the
+removed-id-is-never-served invariant under arbitrary interleavings
+(hypothesis property when available, seeded fallback otherwise), the
+online engine's arrival-time fast path, and idle unload/reload."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import trace
+from repro.core import policy_api as PA
+from repro.core.costs import CostModel
+from repro.index import IndexSpec, build_index
+from repro.index.base import TINY_BUILD_KWARGS as TINY
+from repro.serve.answer_cache import (AnswerCache, AnswerCacheSpec,
+                                      CachedIndex, parse_answer_cache_opts,
+                                      resolve_answer_cache_spec)
+
+K = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog, reqs, _ = trace.sift_like(n=240, d=12, t=64, zipf_a=1.1,
+                                       jitter=0.0, seed=3)
+    rng = np.random.default_rng(5)
+    newv = (rng.random((24, 12)) * 0.9 + 0.05).astype(np.float32)
+    return catalog, reqs, newv
+
+
+def _policy(catalog, index_spec, cap, *, batch=8, seed=0, **spec_kw):
+    cm = CostModel(c_f=0.3)
+    return PA.build_policy(
+        PA.PolicySpec("acai", {"h": 32, "k": K, "batch": batch}),
+        catalog, cm, index_spec=index_spec, seed=seed,
+        answer_cache=AnswerCacheSpec(capacity=cap, **spec_kw))
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip_and_validation():
+    spec = AnswerCacheSpec(capacity=128, hit_ms=0.5, idle_unload_ms=40.0)
+    assert AnswerCacheSpec.from_dict(spec.to_dict()) == spec
+    assert spec.with_params(capacity=0).capacity == 0
+    with pytest.raises(ValueError, match="capacity"):
+        AnswerCacheSpec(capacity=-1)
+    with pytest.raises(ValueError, match="hit_ms"):
+        AnswerCacheSpec(hit_ms=-0.1)
+    with pytest.raises(ValueError, match="idle_unload_ms"):
+        AnswerCacheSpec(idle_unload_ms=0)
+    with pytest.raises(ValueError, match="unknown fields"):
+        AnswerCacheSpec.from_dict({"capcity": 7})
+
+
+def test_resolve_forms():
+    assert resolve_answer_cache_spec(None) is None
+    assert resolve_answer_cache_spec(False) is None
+    assert resolve_answer_cache_spec(True) == AnswerCacheSpec()
+    assert resolve_answer_cache_spec(512).capacity == 512
+    assert resolve_answer_cache_spec({"capacity": 9}).capacity == 9
+    spec = AnswerCacheSpec(capacity=3)
+    assert resolve_answer_cache_spec(spec) is spec
+    with pytest.raises(TypeError, match="answer_cache"):
+        resolve_answer_cache_spec("big")
+
+
+def test_parse_opts():
+    got = parse_answer_cache_opts(
+        ["hit_ms=0.1", "idle_unload_ms=none", "capacity=7"])
+    assert got == {"hit_ms": 0.1, "idle_unload_ms": None, "capacity": 7}
+    with pytest.raises(ValueError, match="KEY=VALUE"):
+        parse_answer_cache_opts(["hit_ms"])
+
+
+# ---------------------------------------------------------------------------
+# AnswerCache unit semantics
+# ---------------------------------------------------------------------------
+
+def _fill(cache, rs, base=0):
+    b = rs.shape[0]
+    d = np.tile(np.arange(1.0, K + 1, dtype=np.float32), (b, 1))
+    ids = (base + np.arange(b * K, dtype=np.int32)).reshape(b, K)
+    cache.store_batch(rs, K, d, ids)
+    return ids
+
+
+def test_store_lookup_lru_eviction(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=4))
+    ids = _fill(cache, catalog[:4])
+    entries, mask = cache.lookup_batch(catalog[:4], K)
+    assert mask.all() and cache.hits == 4
+    assert all(np.array_equal(e.ids, row) for e, row in zip(entries, ids))
+    # same query at another fan-out is a distinct entry → miss
+    _, mask2 = cache.lookup_batch(catalog[:1], K + 1)
+    assert not mask2.any()
+    # rows 0..3 were just touched; storing 2 more evicts the two oldest
+    # (which are 0 and 1 — the lookup refreshed recency in batch order)
+    _fill(cache, catalog[4:6], base=100)
+    assert cache.evictions >= 2 and len(cache._store) == 4
+    _, mask3 = cache.lookup_batch(catalog[:2], K)
+    assert not mask3.any()
+    st = cache.stats()
+    assert st["entries"] == 4 and st["stores"] == 6
+
+
+def test_peek_is_noncounting(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=8))
+    _fill(cache, catalog[:2])
+    h0, m0 = cache.hits, cache.misses
+    assert cache.peek(catalog[0]) and cache.peek(catalog[0], K)
+    assert not cache.peek(catalog[3]) and not cache.peek(catalog[0], K + 2)
+    assert (cache.hits, cache.misses) == (h0, m0)
+    assert not AnswerCache(AnswerCacheSpec(capacity=0)).peek(catalog[0])
+
+
+def test_invalidate_removed_is_precise(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=16))
+    ids = _fill(cache, catalog[:4])  # disjoint answers per row
+    n = cache.invalidate_removed([int(ids[1, 2])])
+    assert n == 1 and cache.inv_remove == 1
+    _, mask = cache.lookup_batch(catalog[:4], K)
+    assert mask.tolist() == [True, False, True, True]
+    # an id nobody serves invalidates nothing
+    assert cache.invalidate_removed([10_000]) == 0
+
+
+def test_invalidate_added_radius(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=16))
+    q = catalog[:2]
+    d = np.array([[0.1, 0.2, 0.3, 0.4], [0.1, 0.2, 0.3, 0.4]], np.float32)
+    ids = np.arange(8, dtype=np.int32).reshape(2, 4)
+    cache.store_batch(q, K, d, ids)
+    # a vector far outside both radii touches nothing
+    far = q[0] + 100.0
+    assert cache.invalidate_added(far[None]) == 0
+    # the query itself is at distance 0 < kth → entry 0 must die
+    assert cache.invalidate_added(q[0][None]) >= 1
+    _, mask = cache.lookup_batch(q, K)
+    assert not mask[0]
+    # an underfull answer (kth = +inf) always invalidates
+    cache.store_batch(q[:1], K, np.array([[0.1, np.inf, np.inf, np.inf]],
+                                         np.float32),
+                      np.array([[3, -1, -1, -1]], np.int32))
+    assert cache.invalidate_added(far[None]) == 1
+
+
+def test_flush_and_step_stats(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=16))
+    _fill(cache, catalog[:3])
+    assert cache.flush("refresh") == 3 and cache.epoch == 1
+    assert cache.inv_refresh == 3 and len(cache._store) == 0
+    cache.lookup_batch(catalog[:3], K)
+    mask, inval = cache.take_step_stats(3)
+    assert not mask.any() and inval == 3
+    # drained: a second take returns zeros
+    mask2, inval2 = cache.take_step_stats(3)
+    assert not mask2.any() and inval2 == 0
+
+
+def test_rid_namespace(setup):
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=8))
+    d = np.zeros((2, K), np.float32)
+    ids = np.arange(8, dtype=np.int32).reshape(2, 4)
+    cache.store_batch(catalog[:2], K, d, ids, rids=[17, 23])
+    _, mask = cache.lookup_batch(catalog[:2], K, rids=[17, 23])
+    assert mask.all()
+    # rid identity, not vector identity: other vectors, same rids → hit
+    _, mask2 = cache.lookup_batch(catalog[10:12], K, rids=[17, 23])
+    assert mask2.all()
+    _, mask3 = cache.lookup_batch(catalog[:2], K)  # vec namespace: miss
+    assert not mask3.any()
+    with pytest.raises(ValueError, match="rids length"):
+        cache.lookup_batch(catalog[:2], K, rids=[17])
+
+
+# ---------------------------------------------------------------------------
+# the parity pin: cache-on == cache-off, bitwise, every backend, with churn
+# ---------------------------------------------------------------------------
+
+def _served_recorder(pol, sink):
+    idx = pol.cache.index
+    orig = idx.query
+
+    def wrapped(rs, k):
+        d, ids = orig(rs, k)
+        sink.append(np.asarray(ids))
+        return d, ids
+
+    idx.query = wrapped
+
+
+@pytest.mark.parametrize("backend", sorted(TINY))
+def test_bitwise_parity_under_churn(setup, backend):
+    """The acceptance pin: identical NAG, per-request gain, policy state
+    and served ids with the cache on vs off, through an interleaving of
+    serving and every mutation kind, on every registered backend."""
+    catalog, reqs, newv = setup
+    ispec = IndexSpec(backend, TINY[backend])
+    arms = {}
+    for cap in (64, 0):
+        pol = _policy(catalog, ispec, cap)
+        served, gains = [], []
+        _served_recorder(pol, served)
+        # serve → add → serve (repeat a batch: hits) → remove → serve →
+        # refresh → serve; both arms execute the identical schedule
+        for rs in (reqs[:8], reqs[:8]):
+            gains.append(np.asarray(pol.serve_update_batch(rs).gain_int))
+        pol.add_objects(newv)
+        gains.append(np.asarray(pol.serve_update_batch(reqs[:8]).gain_int))
+        doomed = np.unique(np.concatenate(served)[-8:])
+        doomed = doomed[doomed >= 0][:3]
+        pol.remove_objects(doomed)
+        gains.append(np.asarray(pol.serve_update_batch(reqs[8:16]).gain_int))
+        pol.refresh()
+        gains.append(np.asarray(pol.serve_update_batch(reqs[:8]).gain_int))
+        arms[cap] = (np.concatenate(gains),
+                     np.asarray(pol.cache.state.y),
+                     np.asarray(pol.cache.state.x),
+                     np.concatenate([s.ravel() for s in served]),
+                     pol, doomed)
+    g_on, y_on, x_on, ids_on, pol_on, doomed = arms[64]
+    g_off, y_off, x_off, ids_off, _, _ = arms[0]
+    assert np.array_equal(g_on, g_off), f"{backend}: gain diverged"
+    assert np.array_equal(y_on, y_off), f"{backend}: state.y diverged"
+    assert np.array_equal(x_on, x_off), f"{backend}: state.x diverged"
+    assert np.array_equal(ids_on, ids_off), f"{backend}: served ids diverged"
+    # the invariant the invalidation rules exist for: after the remove,
+    # no removed id was ever served again (either arm)
+    after = np.concatenate([s.ravel() for s in
+                            (ids_on[-16 * pol_on.cache.cfg.c_remote:],)])
+    assert not set(doomed.tolist()) & set(after.tolist())
+    st = pol_on.answer_cache.stats()
+    assert st["hits"] > 0, f"{backend}: repeat batch never hit"
+    assert st["invalidations"] > 0, f"{backend}: churn invalidated nothing"
+
+
+def test_replay_parity_and_metrics(setup):
+    """Replay-level pin on the default (flat) backend + the StepMetrics
+    counters: answer_hits flow into the per-request replay arrays."""
+    catalog, reqs, _ = setup
+    res = {}
+    for cap in (64, 0):
+        pol = _policy(catalog, IndexSpec("flat"), cap)
+        res[cap] = (pol.replay(reqs), pol)
+    r_on, pol_on = res[64]
+    r_off, _ = res[0]
+    assert np.array_equal(r_on["gain"], r_off["gain"])
+    t = r_on["requests"]
+    assert pol_on.normalized_gain(float(r_on["gain"].sum()), t) == \
+        pytest.approx(pol_on.normalized_gain(float(r_off["gain"].sum()), t))
+    assert r_on["answer_hits"].shape == (t,)
+    assert r_on["answer_hits"].sum() > 0
+    assert r_off["answer_hits"].sum() == 0
+    st = pol_on.answer_cache.stats()
+    assert st["hit_rate"] > 0 and st["scans_skipped"] > 0
+
+
+def test_metrics_leaf_shapes(setup):
+    catalog, reqs, _ = setup
+    pol = _policy(catalog, IndexSpec("flat"), 64)
+    m = pol.serve_update_batch(reqs[:8])
+    for f in ("answer_hits", "answer_misses", "answer_invalidations"):
+        assert np.asarray(getattr(m, f)).shape == (8,), f
+    hits = np.asarray(m.answer_hits) + np.asarray(m.answer_misses)
+    assert (hits == 1).all()
+    served_id = next(iter(pol.answer_cache.cache._inv))
+    pol.remove_objects([served_id])
+    m2 = pol.serve_update_batch(reqs[:8])
+    assert int(np.asarray(m2.answer_invalidations).sum()) > 0
+
+
+def test_build_policy_validation(setup):
+    catalog, _, _ = setup
+    cm = CostModel(c_f=0.3)
+    with pytest.raises(ValueError, match="oracle-exact"):
+        PA.build_policy(PA.PolicySpec("lru", {"h": 16, "k": K}), catalog,
+                        cm, answer_cache=AnswerCacheSpec())
+    with pytest.raises(ValueError, match="cfg.index"):
+        PA.build_policy(PA.PolicySpec("acai", {"h": 16, "k": K}), catalog,
+                        cm, answer_cache=AnswerCacheSpec())
+    pol = _policy(catalog, IndexSpec("flat"), 8)
+    assert isinstance(pol.answer_cache, CachedIndex)
+
+
+# ---------------------------------------------------------------------------
+# interleaving property: never serve a removed id, always match a fresh
+# exact scan (the uncached twin executing the identical schedule)
+# ---------------------------------------------------------------------------
+
+def _check_interleaving(ops, catalog):
+    """Run an op schedule against a cached flat index and its uncached
+    twin; every query must match the twin bitwise (flat = the exact
+    fused scan) and never contain a removed id."""
+    cached = CachedIndex(
+        build_index(IndexSpec("flat"), jnp.asarray(catalog)),
+        AnswerCacheSpec(capacity=32))
+    exact = build_index(IndexSpec("flat"), jnp.asarray(catalog))
+    live = set(range(catalog.shape[0]))
+    dead: set = set()
+    for op, seed in ops:
+        rng = np.random.default_rng(seed)
+        if op == "query":
+            rows = catalog[rng.integers(0, catalog.shape[0], 3)]
+            d_c, i_c = cached.query(rows, K)
+            d_e, i_e = exact.query(rows, K)
+            i_c, i_e = np.asarray(i_c), np.asarray(i_e)
+            assert np.array_equal(i_c, i_e), "cached ids != exact scan"
+            assert np.array_equal(np.asarray(d_c), np.asarray(d_e))
+            assert not (set(i_c.ravel().tolist()) - {-1}) & dead, \
+                "served a removed id"
+        elif op == "add":
+            v = rng.random((1 + seed % 3, catalog.shape[1]),
+                           dtype=np.float32)
+            got = np.asarray(cached.add(v))
+            assert np.array_equal(got, np.asarray(exact.add(v)))
+            live |= set(got.tolist())
+        elif op == "remove" and len(live) > 4:
+            victims = rng.choice(sorted(live), size=min(2, len(live) - 4),
+                                 replace=False)
+            cached.remove(victims)
+            exact.remove(victims)
+            live -= set(victims.tolist())
+            dead |= set(victims.tolist())
+        elif op == "refresh":
+            cached.refresh()
+            exact.refresh()
+
+
+_PLAIN_SCHEDULES = [
+    [("query", 0), ("add", 1), ("query", 2), ("remove", 3), ("query", 4),
+     ("refresh", 0), ("query", 5)],
+    [("query", 7), ("query", 7), ("remove", 8), ("remove", 9),
+     ("query", 10), ("add", 11), ("add", 12), ("query", 13)],
+    [("remove", 1), ("refresh", 0), ("query", 2), ("query", 2),
+     ("add", 3), ("remove", 4), ("query", 5)],
+]
+
+
+@pytest.mark.parametrize("schedule", range(len(_PLAIN_SCHEDULES)))
+def test_interleaving_seeded(setup, schedule):
+    """Deterministic fallback of the hypothesis property (runs whether
+    or not hypothesis is installed)."""
+    catalog, _, _ = setup
+    _check_interleaving(_PLAIN_SCHEDULES[schedule], catalog[:60])
+
+
+def test_interleaving_property(setup):
+    """Arbitrary add/remove/refresh/query interleavings never serve a
+    removed id and always match a fresh exact scan."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    catalog, _, _ = setup
+    ops = st.lists(
+        st.tuples(st.sampled_from(["query", "add", "remove", "refresh"]),
+                  st.integers(0, 2 ** 16)),
+        min_size=1, max_size=16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=ops)
+    def run(ops):
+        _check_interleaving(ops, catalog[:60])
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# engine fast path + idle unload
+# ---------------------------------------------------------------------------
+
+def test_engine_fast_path(setup):
+    from repro.serve.arrivals import ArrivalSpec
+    from repro.serve.queue import (BatchFormerConfig, OnlineServingEngine,
+                                   ServiceModel)
+
+    catalog, reqs, _ = setup
+    service = ServiceModel()
+    arrival = ArrivalSpec(kind="poisson",
+                          rate_rps=0.7 * service.capacity_rps(8), seed=2)
+    runs = {}
+    for cap in (64, 0):
+        pol = _policy(catalog, IndexSpec("flat"), cap, hit_ms=0.25)
+        eng = OnlineServingEngine(
+            pol, former=BatchFormerConfig(max_batch=8, max_wait_ms=4.0),
+            service=service)
+        runs[cap] = eng.run(reqs, arrival)
+    on, off = runs[64], runs[0]
+    # the learn path is untouched: same batches, same gains, bitwise
+    assert np.array_equal(on["gain"], off["gain"])
+    assert on["answer_hit_rate"] > 0 and off["answer_hit_rate"] == 0
+    # a hit's user-visible answer completes at arrival + hit_ms
+    hit_lat = on["user_latency_ms"][on["answer_hit"]]
+    assert np.allclose(hit_lat, 0.25)
+    assert on["p50_hit_ms"] < on["p50_miss_ms"]
+    # misses' user latency is the ordinary served latency
+    miss = ~on["answer_hit"] & ~on["shed"]
+    assert np.array_equal(on["user_latency_ms"][miss],
+                          on["latency_ms"][miss])
+
+
+def test_idle_unload_reload_bitwise(setup):
+    """tick() past the idle threshold offloads the heavy structures;
+    hits keep serving (still unloaded); the first miss reloads — and
+    every answer stays bitwise identical to a never-unloaded twin."""
+    catalog, reqs, _ = setup
+    spec = AnswerCacheSpec(capacity=32, idle_unload_ms=10.0)
+    ivf = IndexSpec("ivf", TINY["ivf"])
+    ci = CachedIndex(build_index(ivf, jnp.asarray(catalog)), spec)
+    twin = CachedIndex(build_index(ivf, jnp.asarray(catalog)),
+                       AnswerCacheSpec(capacity=32))
+    hot, cold = catalog[:8], catalog[8:16]
+    ref_hot = [np.asarray(a) for a in twin.query(hot, K)]
+    ref_cold = [np.asarray(a) for a in twin.query(cold, K)]
+    ci.query(hot, K)                     # scan + store at t=0
+    ci.tick(5.0)
+    assert ci.loaded                     # under threshold
+    ci.tick(20.0)
+    assert not ci.loaded and ci.unloads == 1
+    got = ci.query(hot, K)               # all-hit: serves while unloaded
+    assert not ci.loaded
+    assert np.array_equal(np.asarray(got[1]), ref_hot[1])
+    got2 = ci.query(cold, K)             # miss: reload, scan, store
+    assert ci.loaded and ci.reloads == 1
+    assert np.array_equal(np.asarray(got2[1]), ref_cold[1])
+    assert np.array_equal(np.asarray(got2[0]), ref_cold[0])
+    # reload restored device arrays, not rebuilt ones: a repeat of the
+    # first batch still matches the twin bitwise
+    got3 = ci.query(hot, K)
+    assert np.array_equal(np.asarray(got3[0]), ref_hot[0])
+    st = ci.stats()
+    assert st["unloads"] == 1 and st["reloads"] == 1
+
+
+def test_capacity_zero_never_stores(setup):
+    catalog, _, _ = setup
+    ci = CachedIndex(build_index(IndexSpec("flat"), jnp.asarray(catalog)),
+                     AnswerCacheSpec(capacity=0))
+    for _ in range(3):
+        ci.query(catalog[:4], K)
+    st = ci.stats()
+    assert st["entries"] == 0 and st["hits"] == 0
+    assert st["scans"] == 3 and st["scans_skipped"] == 0
