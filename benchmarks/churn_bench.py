@@ -1,4 +1,5 @@
-"""Mutable-catalog churn sweep (DESIGN.md §10) — BENCH_churn.json.
+"""Mutable-catalog churn sweep (DESIGN.md §10/§14) — BENCH_churn.json
+(default scale) and BENCH_churn_full.json (--full, 1M x 128).
 
 Two questions, one suite:
 
@@ -37,25 +38,40 @@ from repro.core.costs import CostModel, calibrate_fetch_cost
 from repro.core.trace import TraceSpec
 from repro.index import IndexSpec
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_churn.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_churn.json"
+BENCH_FULL_JSON = _ROOT / "BENCH_churn_full.json"
 
 CHURN_RATES = (0.0, 0.02, 0.1, 0.5)
+FULL_CHURN_RATES = (0.0, 0.1)    # full scale: the static anchor + one churn point
 REFRESH_SWEEP = (0, 1024, 256)   # requests between refreshes (0 = never)
 REFRESH_CHURN = 0.1
+COMPACT_EVERY = 512              # epoch-compaction cadence (requests)
 WARM = 0.5
 BATCH = 8
 
 
-def _policies(c_f: float, h: int, k: int):
-    """(label, PolicySpec, index_spec) cells of the sweep."""
-    ivf = IndexSpec("ivf", {"nlist": 48, "nprobe": 10})
-    return (
+def _policies(c_f: float, h: int, k: int, full: bool = False):
+    """(label, PolicySpec, index_spec) cells of the sweep.
+
+    At full scale (1M rows) SIM-LRU is dropped: its online ServerOracle
+    runs an exact host-side scan per mini-batch, which is intractable at
+    1M x 128, and the baseline comparison already lives in BENCH_churn.json
+    at bench scale.  The IVF cell scales its list count with the catalog
+    (sqrt-ish rule) and trims k-means iterations so a refresh is minutes,
+    not hours, on CPU."""
+    ivf = (IndexSpec("ivf", {"nlist": 256, "nprobe": 16, "train_iters": 4})
+           if full else IndexSpec("ivf", {"nlist": 48, "nprobe": 10}))
+    cells = [
         ("acai-exact", PA.PolicySpec("acai", {"h": h, "k": k}), None),
         ("acai-ivf", PA.PolicySpec("acai", {"h": h, "k": k}), ivf),
-        ("sim_lru", PA.PolicySpec("sim_lru",
-                                  {"h": h, "k": k, "k_prime": 2 * k,
-                                   "c_theta": 1.5 * c_f}), None),
-    )
+    ]
+    if not full:
+        cells.append(
+            ("sim_lru", PA.PolicySpec("sim_lru",
+                                      {"h": h, "k": k, "k_prime": 2 * k,
+                                       "c_theta": 1.5 * c_f}), None))
+    return tuple(cells)
 
 
 RECALL_SAMPLE = 64
@@ -73,36 +89,66 @@ def _recall10_vs_live_exact(pol, queries) -> float:
         return 1.0
     got = np.asarray(idx.query(np.asarray(queries, np.float32),
                                RECALL_R)[1])
-    queries = np.asarray(queries, np.float64)
-    emb = np.asarray(idx.embeddings, np.float64)
+    q = np.asarray(queries, np.float64)
+    emb = np.asarray(idx.embeddings)
     live = np.asarray(idx.valid, bool)
-    # exact squared distances over the live slab via one GEMM (the
-    # (sample, capacity) matrix stays small at paper scale)
-    d2 = ((queries ** 2).sum(1)[:, None] - 2.0 * queries @ emb.T
-          + (emb ** 2).sum(1)[None, :])
-    d2[:, ~live] = np.inf
-    exact = np.argsort(d2, axis=1)[:, :RECALL_R]
-    overlap = [np.intersect1d(g, e).size for g, e in zip(got, exact)]
+    qn = (q ** 2).sum(1)[:, None]
+    # exact top-R over the live slab, merged chunk by chunk so the
+    # (sample, capacity) distance matrix never materialises at full
+    # scale (1M rows x 64 queries in float64 would be half a gigabyte)
+    best_d = np.full((q.shape[0], RECALL_R), np.inf)
+    best_i = np.full((q.shape[0], RECALL_R), -1, np.int64)
+    chunk = 262144
+    for s in range(0, emb.shape[0], chunk):
+        e = emb[s:s + chunk].astype(np.float64)
+        d2 = qn - 2.0 * q @ e.T + (e ** 2).sum(1)[None, :]
+        d2[:, ~live[s:s + chunk]] = np.inf
+        r = min(RECALL_R, d2.shape[1])
+        part = np.argpartition(d2, r - 1, axis=1)[:, :r]
+        cand_d = np.concatenate(
+            [best_d, np.take_along_axis(d2, part, 1)], axis=1)
+        cand_i = np.concatenate([best_i, part + s], axis=1)
+        sel = np.argsort(cand_d, axis=1, kind="stable")[:, :RECALL_R]
+        best_d = np.take_along_axis(cand_d, sel, 1)
+        best_i = np.take_along_axis(cand_i, sel, 1)
+    overlap = [np.intersect1d(g, e[e >= 0]).size
+               for g, e in zip(got, best_i)]
     return float(np.mean(overlap)) / RECALL_R
 
 
 def _run_cell(label, spec, index_spec, catalog, reqs, events, cm, *,
-              refresh_every=0, seed=0):
+              refresh_every=0, compact_every=0, seed=0, warm_jits=True):
     # every cell starts on the warm prefix (the live window at t = 0), so
     # rows are comparable across churn rates — at rate 0 the window just
     # never moves
     n0 = churn.warm_size(catalog.shape[0], WARM)
+    if warm_jits and len(events):
+        # mutation jits are bucketed by (capacity level, pow2 write
+        # width) and cached process-wide, so an identical throwaway
+        # replay compiles every entry the timed one will hit and the
+        # timed mutation_ms columns measure steady-state cost, not
+        # first-call compilation (the no-retrace test pins that the
+        # second pass adds zero compiles).  Skipped at --full, where a
+        # doubled 1M replay would dwarf the one-time compile cost it
+        # amortizes away.
+        throwaway = PA.build_policy(spec, catalog[:n0], cm,
+                                    index_spec=index_spec, seed=seed)
+        churn.replay_with_churn(throwaway, catalog, reqs, events,
+                                batch=BATCH, refresh_every=refresh_every,
+                                compact_every=compact_every)
     pol = PA.build_policy(spec, catalog[:n0], cm, index_spec=index_spec,
                           seed=seed)
     t0 = time.time()
     res = churn.replay_with_churn(pol, catalog, reqs, events, batch=BATCH,
-                                  refresh_every=refresh_every)
+                                  refresh_every=refresh_every,
+                                  compact_every=compact_every)
     wall = time.time() - t0
     tt = res["requests"]
     return {
         "policy": spec.to_dict(), "label": label,
         "index": index_spec.to_dict() if index_spec else "exact",
         "refresh_every": refresh_every,
+        "compact_every": compact_every,
         "events": res["events_applied"],
         "nag": round(float(res["gain"].sum()) / (pol.k * pol.c_f * tt), 4),
         "hit_ratio": round(float(res["hit"].mean()), 4),
@@ -110,7 +156,12 @@ def _run_cell(label, spec, index_spec, catalog, reqs, events, cm, *,
             _recall10_vs_live_exact(pol, reqs[tt - RECALL_SAMPLE:tt]), 4),
         "p50_step_us": round(res["p50_step_s"] * 1e6, 1),
         "mutation_ms": round(res["mutation_s"] * 1e3, 1),
+        "mutation_host_ms": round(res["mutation_host_s"] * 1e3, 1),
+        "mutation_device_ms": round(res["mutation_device_s"] * 1e3, 1),
         "refresh_ms": round(res["refresh_s"] * 1e3, 1),
+        "refresh_stall_ms": round(res["refresh_stall_s"] * 1e3, 2),
+        "compact_ms": round(res["compact_s"] * 1e3, 1),
+        "compactions": res["compactions"],
         "us_per_request": round(wall / tt * 1e6, 2),
         "requests": tt,
     }
@@ -125,15 +176,23 @@ def main(full: bool = False, kind: str = None) -> None:
         raise ValueError(
             "the churn suite runs rolling_catalog only (its churn_rate is "
             "the swept knob); --trace does not apply here")
-    n, t, d = (20000, 8192, 32) if full else (2000, 2048, 16)
+    # --full is the 1M x 128 device-mutation scale check (DESIGN.md §14):
+    # does the donated-update path hold its per-event cost when the slab
+    # is three orders of magnitude bigger, and does refresh amortization
+    # flip once the rebuild stall leaves the serving path?  It writes a
+    # separate artifact (BENCH_churn_full.json) so the default-scale
+    # sweep's history stays comparable across PRs.
+    n, t, d = (1_000_000, 2048, 128) if full else (2000, 2048, 16)
     h, k = (400, 10) if full else (64, 8)
+    rates = FULL_CHURN_RATES if full else CHURN_RATES
+    json_path = BENCH_FULL_JSON if full else BENCH_JSON
     n0 = churn.warm_size(n, WARM)
     rows = []
 
     import jax
     import jax.numpy as jnp
 
-    for rate in CHURN_RATES:
+    for rate in rates:
         tspec = TraceSpec("rolling_catalog",
                           {"n": n, "d": d, "t": t, "churn_rate": rate,
                            "warm": WARM, "seed": 17})
@@ -142,8 +201,9 @@ def main(full: bool = False, kind: str = None) -> None:
         c_f = float(calibrate_fetch_cost(jnp.asarray(catalog[:n0]),
                                          kth=min(50, n0 - 1), sample=256))
         cm = CostModel(c_f=c_f)
-        for label, spec, ispec in _policies(c_f, h, k):
-            row = _run_cell(label, spec, ispec, catalog, reqs, events, cm)
+        for label, spec, ispec in _policies(c_f, h, k, full=full):
+            row = _run_cell(label, spec, ispec, catalog, reqs, events, cm,
+                            warm_jits=not full)
             row.update(churn_rate=rate, trace=tspec.to_dict())
             rows.append(row)
             common.emit(
@@ -151,11 +211,13 @@ def main(full: bool = False, kind: str = None) -> None:
                 f"NAG={row['nag']:.4f};hit={row['hit_ratio']:.3f};"
                 f"mut_ms={row['mutation_ms']:.0f};"
                 f"r10={row['recall10_vs_live_exact']:.3f}")
-        if rate == 0.0:
+        if rate == 0.0 and not full:
             # cheap half of the static-consistency anchor (the full
             # bitwise pin lives in tests/test_mutable_index.py): with no
             # events the exact AÇAI replay must match the batched static
-            # replay's NAG to float tolerance
+            # replay's NAG to float tolerance.  Skipped at --full: it
+            # would double the 1M exact replay for a property the test
+            # suite already pins at bench scale.
             from repro.core import oma
 
             cfg = policy.AcaiConfig(h=h, k=k, c_f=c_f,
@@ -185,21 +247,40 @@ def main(full: bool = False, kind: str = None) -> None:
     c_f = float(calibrate_fetch_cost(jnp.asarray(catalog[:n0]),
                                      kth=min(50, n0 - 1), sample=256))
     cm = CostModel(c_f=c_f)
-    _, spec, ispec = _policies(c_f, h, k)[1]          # acai-ivf
+    pcells = _policies(c_f, h, k, full=full)
+    _, spec, ispec = pcells[1]                        # acai-ivf
     for every in REFRESH_SWEEP:
         row = _run_cell("acai-ivf", spec, ispec, catalog, reqs, events, cm,
-                        refresh_every=every)
+                        refresh_every=every, warm_jits=not full)
         row.update(churn_rate=REFRESH_CHURN, trace=tspec.to_dict())
         rows.append(row)
         common.emit(
             f"churn/refresh{every}/acai-ivf", row["p50_step_us"],
-            f"NAG={row['nag']:.4f};refresh_ms={row['refresh_ms']:.0f}")
+            f"NAG={row['nag']:.4f};refresh_ms={row['refresh_ms']:.0f};"
+            f"stall_ms={row['refresh_stall_ms']:.1f}")
 
-    BENCH_JSON.write_text(json.dumps(
+    # epoch-compaction cells (same fixed-churn trace): tombstoned slab
+    # rows are reclaimed on a cadence.  For exact candidates compaction
+    # is behavior-neutral (tests pin gain/NAG parity with the
+    # compaction-free row above); the columns of interest are compact_ms
+    # and the smaller slab's serving latency.
+    for label, spec, ispec in pcells:
+        if label == "sim_lru":
+            continue
+        row = _run_cell(label, spec, ispec, catalog, reqs, events, cm,
+                        compact_every=COMPACT_EVERY, warm_jits=not full)
+        row.update(churn_rate=REFRESH_CHURN, trace=tspec.to_dict())
+        rows.append(row)
+        common.emit(
+            f"churn/compact{COMPACT_EVERY}/{label}", row["p50_step_us"],
+            f"NAG={row['nag']:.4f};compact_ms={row['compact_ms']:.0f};"
+            f"compactions={row['compactions']}")
+
+    json_path.write_text(json.dumps(
         {"full": full, "n": n, "d": d, "t": t, "warm": WARM, "h": h, "k": k,
          "batch": BATCH, "backend": jax.default_backend(), "rows": rows},
         indent=2) + "\n")
-    common.emit("churn/json", 0.0, str(BENCH_JSON.name))
+    common.emit("churn/json", 0.0, str(json_path.name))
 
 
 if __name__ == "__main__":
@@ -207,5 +288,6 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
-                    help="paper-scale sizes (slow on CPU)")
+                    help="1M x 128 scale check -> BENCH_churn_full.json "
+                         "(tens of minutes on CPU)")
     main(ap.parse_args().full)

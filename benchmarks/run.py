@@ -116,11 +116,13 @@ def main() -> None:
                 # suite and must fail the run, not silently end it
                 if e.code not in (0, None):
                     failures += 1
-                    print(f"# {name}/{kind} FAILED (exit {e.code})",
+                    print(f"# {name}/{kind} FAILED (exit {e.code}) "
+                          f"after {time.time() - t0:.0f}s",
                           file=sys.stderr)
             except Exception:  # noqa: BLE001 — keep the suite running
                 failures += 1
-                print(f"# {name}/{kind} FAILED", file=sys.stderr)
+                print(f"# {name}/{kind} FAILED after {time.time() - t0:.0f}s",
+                      file=sys.stderr)
                 traceback.print_exc()
     if failures:
         sys.exit(1)

@@ -10,6 +10,10 @@
 # silently rot on machines without accelerators.
 #
 #   bash scripts/smoke.sh
+#
+# Opt-in (tens of minutes on CPU): SMOKE_FULL_CHURN=1 appends the
+# 1M x 128 device-mutation scale check (`--suite churn --full`,
+# DESIGN.md §14) and rewrites BENCH_churn_full.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -321,4 +325,9 @@ for kw in ({}, {"ivf": ivf}):
     assert float(jnp.sum(np.asarray(m.gain_int))) >= 0
 print("2-device sharded smoke OK")
 EOF
+
+if [ -n "${SMOKE_FULL_CHURN:-}" ]; then
+    echo "== full-scale churn bench (1M x 128, opt-in) =="
+    python -m benchmarks.run --suite churn --full
+fi
 echo "smoke OK"

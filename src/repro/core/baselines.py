@@ -174,6 +174,22 @@ class ServerOracle:
         self.valid[ids] = False
         self._invalidate_answers()
 
+    def compact(self) -> np.ndarray:
+        """Epoch compaction (DESIGN.md §14): drop tombstoned rows and
+        renumber the survivors in ascending-id order, so the catalog stops
+        growing with total-ever-seen.  Returns the (old_n,) int32 remap
+        (new row id, or -1 for dead rows); the caller owns pushing it to
+        every id holder (cache entries, payload stores).  Precomputed
+        answers hold old ids and are invalidated wholesale."""
+        live = np.nonzero(self.valid)[0]
+        remap = np.full(self.catalog.shape[0], -1, np.int32)
+        remap[live] = np.arange(live.size, dtype=np.int32)
+        self.catalog = np.ascontiguousarray(self.catalog[live])
+        self.valid = np.ones(live.size, bool)
+        self.kmax = min(max(self.kmax, 1), max(self.catalog.shape[0], 1))
+        self._invalidate_answers()
+        return remap
+
     def extend(self, requests: np.ndarray) -> np.ndarray:
         """Answer kNN for `requests` (B, d), append to the table, and
         return their trace positions (B,)."""
@@ -369,6 +385,19 @@ class KeyValueCache:
         for eid in doomed:
             del self.entries[eid]
         return len(doomed)
+
+    def remap_objects(self, remap: np.ndarray) -> None:
+        """Rewrite every entry's value ids through a compaction remap
+        (DESIGN.md §14).  Entries only hold live objects (drop_objects
+        evicts on removal), so all ids must land on a new row; a -1 here
+        means the caller compacted without draining removals first."""
+        for e in self.entries.values():
+            new_ids = remap[e.value_ids]
+            if (new_ids < 0).any():
+                raise ValueError(
+                    "remap_objects: cached entry references a dead row — "
+                    "drop_objects must run before compaction")
+            e.value_ids = new_ids.astype(e.value_ids.dtype)
 
     # -- batched distance tables -------------------------------------------
 

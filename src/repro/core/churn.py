@@ -1,19 +1,35 @@
 """Churn replay driver: a trace + an insert/expire schedule, one policy.
 
-The mutable-catalog harness (DESIGN.md §10): `replay_with_churn` drives
-any `CachePolicy` (or a bare `AcaiCache`) through a request trace while a
-`rolling_catalog_events`-style schedule mutates the catalog between
-mini-batch steps — insertions through the policy's `add_objects`,
-expiries through `remove_objects`, plus an optional periodic `refresh()`
-cadence.  Mutation, refresh, and step wall times are booked separately so
-the churn bench can show the refresh-amortization trade-off rather than
-one blended number.
+The mutable-catalog harness (DESIGN.md §10/§14): `replay_with_churn`
+drives any `CachePolicy` (or a bare `AcaiCache`) through a request trace
+while a `rolling_catalog_events`-style schedule mutates the catalog
+between mini-batch steps — insertions through the policy's
+`add_objects`, expiries through `remove_objects`, plus an optional
+periodic refresh cadence and an optional epoch-compaction cadence.
 
-Row-id alignment: the policy is built on the trace catalog's warm prefix
-`catalog[:n0]` and the schedule inserts rows in ascending order, so the
-policy's monotonic id assignment reproduces the trace's row ids exactly —
-`replay_with_churn` asserts it (a mismatch means the caller built the
-policy on the wrong catalog slice).
+Refresh is double-buffered when the policy supports it (DESIGN.md §14):
+at a due boundary the driver calls `refresh_start()` (shadow rebuild —
+the stale structures keep serving the next mini-batch) and installs the
+shadow with `refresh_swap()` at the *next* boundary, before that
+boundary's events.  Only the swap is serving-visible, booked separately
+as `refresh_stall_s` next to the total `refresh_s`.  Policies without
+the two-phase hooks fall back to the blocking `refresh()` (stall =
+full rebuild).
+
+Compaction renumbers slab rows, so the driver keeps a global-id → slab-id
+translation (`remap` pushed by `pol.compact()`) and routes every
+schedule id through it; before the first compaction the mapping is the
+identity and the driver asserts the policy's monotonic id assignment
+reproduces the trace's row ids exactly (a mismatch means the caller
+built the policy on the wrong catalog slice).
+
+Wall time is booked in three channels so the churn bench can show the
+refresh-amortization trade-off rather than one blended number:
+serving steps (`p50_step_s`), mutation (`mutation_s`, decomposed into
+`mutation_device_s` — blocked donated-update dispatch, via
+`repro.index.base.device_mutation_seconds` — and `mutation_host_s`,
+the bookkeeping remainder), and refresh (`refresh_s` total,
+`refresh_stall_s` serving-visible).
 
 At churn_rate = 0 the schedule is empty: the policy never leaves its
 static jitted path, and an AÇAI replay is bit-consistent with
@@ -35,15 +51,32 @@ def warm_size(n: int, warm: float) -> int:
     return max(int(round(warm * n)), 1)
 
 
+def _initial_rows(pol) -> int:
+    """Slab rows the policy was built with (the warm-prefix size) — the
+    identity span of the global-id → slab-id translation."""
+    for obj in (pol, getattr(pol, "cache", None)):
+        n = getattr(obj, "_n_slots", None)
+        if n is not None:
+            return int(n)
+    oracle = getattr(pol, "oracle", None)
+    if oracle is not None:
+        return int(oracle.catalog.shape[0])
+    raise TypeError(
+        f"cannot infer the policy's initial row count for compaction id "
+        f"translation: {type(pol).__name__}")
+
+
 def replay_with_churn(pol, catalog: np.ndarray, reqs: np.ndarray,
                       events: Sequence, *, batch: int = 8,
-                      refresh_every: int = 0) -> dict:
+                      refresh_every: int = 0,
+                      compact_every: int = 0) -> dict:
     """Replay `reqs` through `pol` while `events` mutate the catalog.
 
     Args:
       pol: a CachePolicy (or AcaiCache) exposing `serve_update_batch`,
-        `add_objects`, `remove_objects` and `refresh`, built over the
-        trace catalog's warm prefix.
+        `add_objects`, `remove_objects` and `refresh` (plus, optionally,
+        the two-phase `refresh_start`/`refresh_swap` and `compact`),
+        built over the trace catalog's warm prefix.
       catalog: the full (N, d) object universe of the trace — insert
         events read their embeddings here.
       reqs: (T, d) request stream; the tail not filling a mini-batch is
@@ -55,16 +88,22 @@ def replay_with_churn(pol, catalog: np.ndarray, reqs: np.ndarray,
         mini-batch, so the catalog always ends in the schedule's final
         state.
       batch: requests per mini-batch step.
-      refresh_every: call `pol.refresh()` every that-many *requests*
-        (0 = never) — the amortization knob: frequent refresh restores
-        index recall but pays rebuild wall time.
+      refresh_every: refresh cadence in *requests* (0 = never) — the
+        amortization knob.  Two-phase when the policy supports it:
+        shadow rebuild at the due boundary, swap at the next one.
+      compact_every: epoch-compaction cadence in requests (0 = never):
+        `pol.compact()` after the boundary's events, with the returned
+        remap folded into the driver's schedule-id translation.
 
     Returns:
       dict of per-request metric arrays (gain, cost, served_local, hit,
       fetched, occupancy) plus `p50_step_s` (serving steps only),
-      `mutation_s` / `refresh_s` (total wall spent mutating/rebuilding),
-      `events_applied`, `requests`.
+      `mutation_s` / `mutation_host_s` / `mutation_device_s`,
+      `refresh_s` / `refresh_stall_s`, `compact_s`, `events_applied`,
+      `compactions`, `requests`.
     """
+    from repro.index.base import device_mutation_seconds
+
     reqs = np.asarray(reqs)
     t = reqs.shape[0]
     tt = (t // batch) * batch
@@ -75,28 +114,87 @@ def replay_with_churn(pol, catalog: np.ndarray, reqs: np.ndarray,
     pending = sorted(events, key=lambda ev: ev[0])
     out = {k: [] for k in ("gain", "cost", "served_local", "fetched",
                            "occupancy")}
-    times, mutation_s, refresh_s, applied = [], 0.0, 0.0, 0
+    times: list[float] = []
+    mutation_s = refresh_s = refresh_stall_s = compact_s = 0.0
+    mutation_dev_s = 0.0
+    applied = compactions = 0
     next_refresh = refresh_every
+    next_compact = compact_every
+    two_phase = (hasattr(pol, "refresh_start")
+                 and hasattr(pol, "refresh_swap"))
+    swap_pending = False
+    # global trace id -> slab row id; identity until the first compaction
+    g2s = np.full(catalog.shape[0], -1, np.int64)
+    n0 = _initial_rows(pol)
+    g2s[:n0] = np.arange(n0)
+    compacted = False
     ev_i = 0
-    for s in range(0, tt, batch):
-        while ev_i < len(pending) and pending[ev_i][0] < s + batch:
-            _, ins, rem = pending[ev_i]
-            t0 = time.time()
-            if len(ins):
-                got = np.asarray(pol.add_objects(catalog[np.asarray(ins)]))
-                assert (got == np.asarray(ins)).all(), (
+
+    def apply_event(ins, rem) -> None:
+        nonlocal mutation_s, mutation_dev_s, applied
+        t0 = time.time()
+        dev0 = device_mutation_seconds()
+        if len(ins):
+            ins = np.asarray(ins)
+            got = np.asarray(pol.add_objects(catalog[ins]))
+            if not compacted:
+                assert (got == ins).all(), (
                     f"row-id misalignment: schedule inserts {ins}, policy "
                     f"assigned {got} — was the policy built on "
                     f"catalog[:n_warm]?")
-            if len(rem):
-                pol.remove_objects(rem)
-            mutation_s += time.time() - t0
-            applied += 1
+            g2s[ins] = got
+        if len(rem):
+            rem = np.asarray(rem)
+            slab = g2s[rem]
+            assert (slab >= 0).all(), (
+                f"schedule removes never-inserted rows {rem[slab < 0]}")
+            pol.remove_objects(slab.astype(np.int32))
+            g2s[rem] = -1
+        mutation_s += time.time() - t0
+        mutation_dev_s += device_mutation_seconds() - dev0
+        applied += 1
+
+    for s in range(0, tt, batch):
+        # (1) install a pending refresh shadow — before this boundary's
+        # events, which would invalidate it; the swap is the only
+        # serving-visible piece of the two-phase refresh
+        if swap_pending:
+            t0 = time.time()
+            pol.refresh_swap()
+            dt = time.time() - t0
+            refresh_s += dt
+            refresh_stall_s += dt
+            swap_pending = False
+        # (2) this boundary's churn events
+        while ev_i < len(pending) and pending[ev_i][0] < s + batch:
+            _, ins, rem = pending[ev_i]
+            apply_event(ins, rem)
             ev_i += 1
+        # (3) epoch compaction on its own cadence, after the events so
+        # freshly removed rows are reclaimed immediately
+        if compact_every and s >= next_compact:
+            t0 = time.time()
+            remap = np.asarray(pol.compact())
+            compact_s += time.time() - t0
+            live = g2s >= 0
+            g2s[live] = remap[g2s[live]]
+            assert (g2s[live] >= 0).all(), "compaction dropped live rows"
+            compacted = True
+            compactions += 1
+            next_compact += compact_every
+        # (4) start a refresh shadow rebuild; stale structures keep
+        # serving until the swap at the next boundary
         if refresh_every and s >= next_refresh:
             t0 = time.time()
-            pol.refresh()
-            refresh_s += time.time() - t0
+            if two_phase:
+                pol.refresh_start()
+                swap_pending = True
+                refresh_s += time.time() - t0
+            else:
+                pol.refresh()
+                dt = time.time() - t0
+                refresh_s += dt
+                refresh_stall_s += dt  # blocking: the whole rebuild stalls
             next_refresh += refresh_every
         t0 = time.time()
         m = pol.serve_update_batch(reqs[s:s + batch])
@@ -106,24 +204,32 @@ def replay_with_churn(pol, catalog: np.ndarray, reqs: np.ndarray,
         out["served_local"].append(np.asarray(m.served_local))
         out["fetched"].append(np.asarray(m.fetched))
         out["occupancy"].append(np.asarray(m.occupancy, np.float64))
-    # drain events landing in the truncated trace tail (t % batch != 0)
-    # so the final catalog state always matches the schedule's end state
-    # and events_applied == len(events) unconditionally
+    # drain: a still-pending shadow is installed (it reflects the live
+    # rows as of its start boundary; mutations below would discard it),
+    # then events landing in the truncated trace tail (t % batch != 0)
+    # are applied so the final catalog state always matches the
+    # schedule's end state and events_applied == len(events)
+    if swap_pending:
+        t0 = time.time()
+        pol.refresh_swap()
+        dt = time.time() - t0
+        refresh_s += dt
+        refresh_stall_s += dt
+        swap_pending = False
     while ev_i < len(pending):
         _, ins, rem = pending[ev_i]
-        t0 = time.time()
-        if len(ins):
-            pol.add_objects(catalog[np.asarray(ins)])
-        if len(rem):
-            pol.remove_objects(rem)
-        mutation_s += time.time() - t0
-        applied += 1
+        apply_event(ins, rem)
         ev_i += 1
     res = {k: np.concatenate(v) for k, v in out.items()}
     res["hit"] = res["served_local"] > 0
     res["p50_step_s"] = float(np.percentile(times, 50)) if times else 0.0
     res["mutation_s"] = mutation_s
+    res["mutation_device_s"] = mutation_dev_s
+    res["mutation_host_s"] = max(mutation_s - mutation_dev_s, 0.0)
     res["refresh_s"] = refresh_s
+    res["refresh_stall_s"] = refresh_stall_s
+    res["compact_s"] = compact_s
     res["events_applied"] = applied
+    res["compactions"] = compactions
     res["requests"] = int(tt)
     return res

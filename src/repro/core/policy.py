@@ -827,13 +827,19 @@ class AcaiCache:
         admit the new rows at the uniform prior y = h / n_live (Alg. 1's
         y_1 for the object, fresh-start semantics; the next projection
         renormalises the small capacity excess)."""
+        from repro.index.base import _flat_set, pad_ids, run_device
+
         cap = self.catalog.shape[0]
         y, x = self.state.y, self.state.x
         if y.shape[0] != cap:
             y = jnp.pad(y, (0, cap - y.shape[0]))
             x = jnp.pad(x, (0, cap - x.shape[0]))
         prior = min(1.0, self.cfg.h / max(self._live, 1))
-        y = y.at[jnp.asarray(new_ids)].set(prior)
+        # donated width-padded scatter (padded lanes carry an OOB index
+        # and are dropped): fixed shapes, no per-batch-size retrace, and
+        # the state buffer mutates in place on device
+        y = run_device(_flat_set, y, pad_ids(new_ids, cap),
+                       jnp.float32(prior))
         self.state = CacheState(y, x, self.state.t, self.state.key)
 
     def add_objects(self, vectors) -> "np.ndarray":
@@ -867,6 +873,9 @@ class AcaiCache:
         self._check_mutable_supported()
         import numpy as np
 
+        from repro.index.base import (_flat_set, _mask_clear, _mask_gather,
+                                      pad_ids, run_device)
+
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if self.index is not None:
             self.index.remove(ids)
@@ -879,18 +888,27 @@ class AcaiCache:
             if len(np.unique(ids)) != len(ids):
                 raise ValueError("remove_objects: duplicate ids in one "
                                  "batch")
-            alive = np.asarray(self.valid[jnp.asarray(ids)])
+            # width-padded aliveness gather + donated tombstone write
+            # (fixed shapes — no per-batch-size retrace under churn)
+            cap = self.valid.shape[0]
+            alive = np.asarray(run_device(
+                _mask_gather, self.valid, pad_ids(ids, cap)))[:len(ids)]
             if not alive.all():
                 raise ValueError(
                     f"remove_objects: rows {ids[~alive].tolist()} are "
                     f"already dead")
             self.catalog = jnp.asarray(self.catalog, jnp.float32)
-            self.valid = self.valid.at[jnp.asarray(ids)].set(False)
+            self.valid = run_device(_mask_clear, self.valid,
+                                    pad_ids(ids, cap))
         self._live -= len(ids)
         self._enter_mutable()
-        jid = jnp.asarray(ids)
+        # zero the removed rows' fractional + physical mass via donated
+        # padded scatters (the invalidation invariant)
+        scap = self.state.y.shape[0]
+        jid = pad_ids(ids, scap)
         self.state = CacheState(
-            self.state.y.at[jid].set(0.0), self.state.x.at[jid].set(0.0),
+            run_device(_flat_set, self.state.y, jid, jnp.float32(0.0)),
+            run_device(_flat_set, self.state.x, jid, jnp.float32(0.0)),
             self.state.t, self.state.key)
 
     def refresh(self) -> None:
@@ -899,6 +917,61 @@ class AcaiCache:
         A no-op for exact candidates, whose masked scan never drifts."""
         if self.index is not None and self._mutated:
             self.index.refresh()
+
+    def refresh_start(self) -> None:
+        """Phase 1 of the double-buffered refresh (DESIGN.md §14): build
+        the shadow structures while the stale ones keep serving."""
+        if self.index is not None and self._mutated:
+            self.index.refresh_start()
+
+    def refresh_swap(self) -> None:
+        """Phase 2: install the pending shadow — the only serving-visible
+        stall, a few attribute swaps."""
+        if self.index is not None and self._mutated:
+            self.index.refresh_swap()
+
+    def compact(self) -> "np.ndarray":
+        """Epoch compaction (DESIGN.md §14): drop tombstoned rows, shrink
+        the slab back to the live set (plus one write window of headroom),
+        and renumber the survivors in ascending-id order.  The OMA y/x
+        state rows move with their objects — pure permutation, no
+        arithmetic.  Returns the (old_capacity,) int32 remap (new row id,
+        or -1 for dead rows); callers own pushing it to every other id
+        holder (payload stores, oracles, answer caches)."""
+        self._check_mutable_supported()
+        import numpy as np
+
+        from repro.index.base import MIN_WRITE, grow_capacity
+
+        old_cap = self.catalog.shape[0]
+        if self.index is not None:
+            remap = self.index.compact()
+            self.catalog = self.index.embeddings
+            self.valid = self.index.valid
+        else:
+            live = np.nonzero(np.asarray(self.valid))[0]
+            n_live = live.size
+            remap = np.full(old_cap, -1, np.int32)
+            remap[live] = np.arange(n_live, dtype=np.int32)
+            cap = grow_capacity(0, n_live + MIN_WRITE, 1)
+            emb_live = jnp.asarray(self.catalog,
+                                   jnp.float32)[jnp.asarray(live)]
+            self.catalog = jnp.pad(emb_live, ((0, cap - n_live), (0, 0)))
+            self.valid = jnp.pad(jnp.ones((n_live,), bool),
+                                 (0, cap - n_live))
+        self._n_slots = self._live
+        cap = self.catalog.shape[0]
+        old_y = np.asarray(self.state.y)
+        old_x = np.asarray(self.state.x)
+        y = np.zeros(cap, old_y.dtype)
+        x = np.zeros(cap, old_x.dtype)
+        src = np.nonzero(remap >= 0)[0]
+        y[remap[src]] = old_y[src]
+        x[remap[src]] = old_x[src]
+        self.state = CacheState(jnp.asarray(y), jnp.asarray(x),
+                                self.state.t, self.state.key)
+        self._enter_mutable()
+        return remap
 
     @property
     def live_count(self) -> int:

@@ -393,6 +393,19 @@ class AcaiPolicy:
         """Rebuild the remote index's structures over the live rows."""
         self.cache.refresh()
 
+    def refresh_start(self) -> None:
+        """Start a double-buffered refresh (shadow rebuild; stale serves)."""
+        self.cache.refresh_start()
+
+    def refresh_swap(self) -> None:
+        """Install the pending refresh shadow (the only serving stall)."""
+        self.cache.refresh_swap()
+
+    def compact(self) -> np.ndarray:
+        """Epoch compaction: drop tombstoned slab rows and renumber the
+        survivors; returns the old-capacity -> new-id remap (-1 = dead)."""
+        return self.cache.compact()
+
     def normalized_gain(self, total_gain: float, t: int) -> float:
         return self.cache.normalized_gain(total_gain, t)
 
@@ -557,6 +570,22 @@ class BaselinePolicy:
 
     def refresh(self) -> None:
         """No-op: baseline serving is oracle-exact (nothing drifts)."""
+
+    def refresh_start(self) -> None:
+        """No-op: nothing to shadow-rebuild (see refresh)."""
+
+    def refresh_swap(self) -> None:
+        """No-op: nothing to swap (see refresh)."""
+
+    def compact(self) -> np.ndarray:
+        """Epoch compaction: the oracle drops tombstoned rows and
+        renumbers; cached entries' value ids are rewritten through the
+        remap (entries never hold dead objects — remove_objects evicts).
+        Returns the old-capacity -> new-id remap (-1 = dead)."""
+        remap = self.oracle.compact()
+        self.policy.catalog = self.oracle.catalog
+        self.policy.remap_objects(remap)
+        return remap
 
     def normalized_gain(self, total_gain: float, t: int) -> float:
         return float(total_gain) / (self.k * self.c_f * max(t, 1))

@@ -26,6 +26,10 @@ from repro.index.kmeans import kmeans
 from repro.index.lsh import LSHIndex
 from repro.index.nsw import NSWIndex
 from repro.index.pq import IVFPQIndex, PQCodec
+from repro.kernels import ops as _ops
+
+_ops.register_tracked_jits()  # fold kernel scans into the compile tracker
+del _ops
 
 __all__ = [
     "FlatIndex",

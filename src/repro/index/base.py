@@ -50,6 +50,8 @@ array shapes — O(log growth) times over an index's lifetime.
 from __future__ import annotations
 
 import dataclasses
+import time
+from functools import partial
 from typing import Any, Callable, Dict, Mapping, Protocol, Tuple, runtime_checkable
 
 import jax
@@ -135,8 +137,69 @@ def check_finite_queries(rs, where: str) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Mutable-catalog slab machinery (DESIGN.md §10)
+# Mutable-catalog slab machinery (DESIGN.md §10, device path §14)
 # ---------------------------------------------------------------------------
+
+# Tracked-jit registry (the no-retrace guard, DESIGN.md §14): every jitted
+# entry point on a mutation or mutable-query path registers here, and
+# `tracked_compiles()` sums their compile-cache sizes.  A churn run at
+# fixed capacity must not grow the sum after warmup — the guard test
+# (tests/test_mutable_index.py) pins it so the device-resident path can
+# never silently regress into per-event retracing.
+_TRACKED_JITS: Dict[str, Any] = {}
+
+
+def track_jit(name: str, fn=None):
+    """Register a jitted callable under `name` for the no-retrace guard.
+    Usable directly (`track_jit("q", jitted)`) or as a decorator factory
+    (`@track_jit("q")` above the `@jax.jit`-decorated def)."""
+    if fn is None:
+        def deco(f):
+            _TRACKED_JITS[name] = f
+            return f
+        return deco
+    _TRACKED_JITS[name] = fn
+    return fn
+
+
+def tracked_compiles() -> int:
+    """Total compiled-trace count across every tracked jit entry point."""
+    return int(sum(f._cache_size() for f in _TRACKED_JITS.values()))
+
+
+# Device-dispatch wall clock of the mutation fast path, accumulated by
+# `run_device` (blocks until ready, so the number is honest on async
+# backends).  `benchmarks/churn_bench.py` books it as `mutation_device_ms`
+# next to the host-side bookkeeping remainder.
+_device_mutation_s = 0.0
+
+
+def device_mutation_seconds() -> float:
+    """Cumulative wall seconds spent in mutation device dispatches."""
+    return _device_mutation_s
+
+
+def run_device(fn, *args):
+    """Dispatch a (jitted) mutation update and account its device wall."""
+    global _device_mutation_s
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    _device_mutation_s += time.perf_counter() - t0
+    return out
+
+
+# Mutation batches are padded to power-of-two widths (min MIN_WRITE) before
+# they reach the donated device updates, so the jit cache holds O(log
+# max-batch) entries per slab capacity instead of one per distinct event
+# size — the difference between zero retraces under churn and one per event.
+MIN_WRITE = 32
+
+
+def bucket_width(b: int) -> int:
+    """Smallest power-of-two >= max(b, MIN_WRITE)."""
+    return max(MIN_WRITE, 1 << max(int(b) - 1, 0).bit_length())
+
 
 def grow_capacity(n_slots: int, needed: int, cap: int) -> int:
     """Capacity-doubling growth schedule: the smallest power-of-two-style
@@ -149,9 +212,96 @@ def grow_capacity(n_slots: int, needed: int, cap: int) -> int:
     return new_cap
 
 
+# -- donated device-slab primitives -----------------------------------------
+#
+# All three take the mutable buffer as a DONATED argument: XLA reuses its
+# storage for the output, so a fixed-capacity update moves zero slab bytes
+# and allocates nothing.  Donation invalidates the caller's old reference —
+# every holder (MutableRows, AcaiCache.catalog/.valid) re-points to the
+# returned array immediately, and nothing may read the donated buffer in
+# between.  Writes use padded widths with out-of-range indices / clamped
+# row tails landing in unused slab territory (callers guarantee
+# capacity >= n_slots + W before dispatch; `lax.dynamic_update_slice`
+# clamps, so an unguarded call would silently corrupt the tail rows).
+
+@track_jit("slab_write")
+@partial(jax.jit, donate_argnums=(0, 1))
+def _slab_write(emb, valid, rows, start, count):
+    """Write `rows` (W, d) at slab rows [start, start+W); rows past
+    `count` land beyond the high-water mark (unused, overwritten by the
+    next append) and their validity bits keep their old value."""
+    emb = jax.lax.dynamic_update_slice(emb, rows, (start, 0))
+    w = rows.shape[0]
+    upd = jnp.arange(w, dtype=jnp.int32) < count
+    old = jax.lax.dynamic_slice(valid, (start,), (w,))
+    valid = jax.lax.dynamic_update_slice(valid, old | upd, (start,))
+    return emb, valid
+
+
+@track_jit("rows_write")
+@partial(jax.jit, donate_argnums=(0,))
+def _rows_write(buf, rows, start):
+    """Contiguous row write into any (cap, ...) auxiliary slab (PQ codes,
+    NSW out-edge rows): rows beyond the real batch land in unused rows."""
+    return jax.lax.dynamic_update_slice(
+        buf, rows, (start,) + (0,) * (buf.ndim - 1))
+
+
+@track_jit("flat_set")
+@partial(jax.jit, donate_argnums=(0,))
+def _flat_set(buf, idx, vals):
+    """Scattered element writes into any device table via flat indices;
+    pad slots use idx >= buf.size and are dropped (mode='drop')."""
+    shape = buf.shape
+    return buf.reshape(-1).at[idx].set(vals, mode="drop").reshape(shape)
+
+
+@track_jit("mask_clear")
+@partial(jax.jit, donate_argnums=(0,))
+def _mask_clear(valid, ids):
+    """Tombstone scatter: pad slots use ids >= capacity (dropped)."""
+    return valid.at[ids].set(False, mode="drop")
+
+
+@track_jit("mask_gather")
+@jax.jit
+def _mask_gather(valid, ids):
+    """Padded aliveness gather (validation reads W bools, not the mask)."""
+    return valid[jnp.clip(ids, 0, valid.shape[0] - 1)]
+
+
+def pad_ids(ids: np.ndarray, fill: int) -> jax.Array:
+    """Pad an id batch to its power-of-two bucket width with `fill`
+    (callers pass an out-of-range index so drop-mode scatters skip it)."""
+    ids = np.asarray(ids, np.int32)
+    w = bucket_width(len(ids))
+    out = np.full((w,), fill, np.int32)
+    out[:len(ids)] = ids
+    return jnp.asarray(out)
+
+
+def pad_rows(rows: np.ndarray, dtype=np.float32) -> jax.Array:
+    """Pad a (B, ...) row batch to its bucket width with zero rows."""
+    rows = np.atleast_2d(np.asarray(rows, dtype))
+    w = bucket_width(rows.shape[0])
+    if w == rows.shape[0]:
+        return jnp.asarray(rows)
+    out = np.zeros((w,) + rows.shape[1:], dtype)
+    out[:rows.shape[0]] = rows
+    return jnp.asarray(out)
+
+
 def slab_append(emb: jax.Array, valid: jax.Array, n_slots: int,
                 vectors) -> Tuple[jax.Array, jax.Array, np.ndarray]:
     """Append rows to a capacity slab, growing by doubling when full.
+
+    The write is the donated device fast path (DESIGN.md §14): the batch
+    is padded to its power-of-two bucket width and written with one
+    `dynamic_update_slice` into the donated slab, so churn at fixed
+    capacity triggers zero retraces and moves zero slab bytes.  The
+    passed-in `emb`/`valid` buffers are DONATED whenever no growth
+    reallocation happens first — callers must treat them as consumed and
+    use only the returned arrays.
 
     Args:
       emb: (cap, d) float32 embedding slab (rows >= n_slots are unused).
@@ -163,18 +313,19 @@ def slab_append(emb: jax.Array, valid: jax.Array, n_slots: int,
       (emb', valid', ids): the (possibly grown) slab and mask with the new
       rows written and marked live, plus their assigned row ids
       (np.int32 (B,), = arange(n_slots, n_slots + B)).  Ids are never
-      recycled — tombstoned slots stay dead until a full rebuild.
+      recycled — tombstoned slots stay dead until compaction.
     """
-    vectors = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
-    b = vectors.shape[0]
+    vec_np = np.atleast_2d(np.asarray(vectors, np.float32))
+    b = vec_np.shape[0]
+    w = bucket_width(b)
     cap = emb.shape[0]
-    if n_slots + b > cap:
-        new_cap = grow_capacity(n_slots, b, cap)
+    if n_slots + w > cap:  # headroom for the padded write (the clamp guard)
+        new_cap = grow_capacity(n_slots, w, cap)
         emb = jnp.pad(emb, ((0, new_cap - cap), (0, 0)))
         valid = jnp.pad(valid, (0, new_cap - cap), constant_values=False)
+    emb, valid = run_device(_slab_write, emb, valid, pad_rows(vec_np),
+                            np.int32(n_slots), np.int32(b))
     ids = np.arange(n_slots, n_slots + b, dtype=np.int32)
-    emb = emb.at[ids].set(vectors)
-    valid = valid.at[ids].set(True)
     return emb, valid, ids
 
 
@@ -186,6 +337,15 @@ class MutableRows:
     the mutation contract.  Backends call `_append_rows` from `add` (slab
     growth + id assignment) and `_tombstone_rows` from `remove`, and add
     their structure-specific bookkeeping on top.
+
+    Device-resident mutation (DESIGN.md §14): both primitives route
+    through the donated slab writes above — at fixed capacity a mutation
+    is one padded device dispatch with zero retraces and zero slab-sized
+    transfers.  Subclasses with auxiliary structures additionally get the
+    two-phase refresh (`refresh_start` computes a shadow while the stale
+    structures keep serving; `refresh_swap` installs it — the only
+    serving-visible stall) and `compact()` (epoch compaction: rebuild the
+    slab over the live rows only and return the old→new id remap).
     """
 
     embeddings: jax.Array
@@ -197,6 +357,7 @@ class MutableRows:
         self._n_slots = int(self.embeddings.shape[0])
         self._live = self._n_slots
         self.valid = jnp.ones((self._n_slots,), bool)
+        self._shadow = None  # pending two-phase-refresh structures
 
     @property
     def n(self) -> int:
@@ -225,6 +386,11 @@ class MutableRows:
             self.embeddings, self.valid, self._n_slots, vectors)
         self._n_slots += len(ids)
         self._live += len(ids)
+        # a pending shadow predates these rows: installing it would make
+        # them unfindable — discard (the churn driver's boundary ordering
+        # guarantees no mutation between start and swap, so this only
+        # fires on out-of-order direct API use)
+        self._shadow = None
         return ids
 
     def _tombstone_rows(self, ids) -> np.ndarray:
@@ -235,15 +401,18 @@ class MutableRows:
             raise ValueError(
                 f"remove: ids must be assigned rows in [0, {self._n_slots});"
                 f" got range [{ids.min()}, {ids.max()}]")
-        alive = np.asarray(self.valid[ids])
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError("remove: duplicate ids in one batch")
+        padded = pad_ids(ids, self.capacity)  # pad slots dropped by OOB
+        alive = np.asarray(run_device(_mask_gather, self.valid,
+                                      padded))[:len(ids)]
         if not alive.all():
             raise ValueError(
                 f"remove: rows {ids[~alive].tolist()} are already dead "
                 f"(tombstoned or never assigned)")
-        if len(np.unique(ids)) != len(ids):
-            raise ValueError("remove: duplicate ids in one batch")
-        self.valid = self.valid.at[ids].set(False)
+        self.valid = run_device(_mask_clear, self.valid, padded)
         self._live -= len(ids)
+        self._shadow = None  # see _append_rows
         return ids
 
     def add(self, vectors) -> np.ndarray:
@@ -255,8 +424,75 @@ class MutableRows:
         `valid`, so the rows can never surface again)."""
         self._tombstone_rows(ids)
 
+    # -- two-phase refresh (DESIGN.md §14) ----------------------------------
+
+    def _compute_structures(self):
+        """Backend hook: derive fresh auxiliary structures from the live
+        rows WITHOUT touching serving state (returns an opaque bundle for
+        `_install_structures`; None = structure-free backend)."""
+        return None
+
+    def _install_structures(self, structures) -> None:
+        """Backend hook: atomically install a `_compute_structures`
+        bundle (attribute assignments only — this is the whole stall)."""
+
+    def _build_structures(self) -> None:
+        """Blocking rebuild = compute + install (constructor/compact)."""
+        s = self._compute_structures()
+        if s is not None:
+            self._install_structures(s)
+
+    def refresh_start(self) -> None:
+        """Phase 1 of the double-buffered refresh: rebuild the auxiliary
+        structures into a shadow while the stale ones keep serving —
+        queries between start and swap are bitwise the stale index."""
+        self._shadow = self._compute_structures()
+
+    def refresh_swap(self) -> None:
+        """Phase 2: install the shadow (a handful of attribute swaps —
+        the only serving-visible stall).  No-op without a pending shadow
+        (it is discarded by any interleaved mutation)."""
+        s, self._shadow = self._shadow, None
+        if s is not None:
+            self._install_structures(s)
+
+    @property
+    def refresh_pending(self) -> bool:
+        """True between `refresh_start()` and the installing swap."""
+        return self._shadow is not None
+
     def refresh(self) -> None:
-        """Default refresh: nothing to rebuild (mask-exact backends)."""
+        """Blocking refresh: both phases back to back (structure-free
+        backends rebuild nothing and this stays a no-op)."""
+        self.refresh_start()
+        self.refresh_swap()
+
+    # -- epoch compaction (DESIGN.md §14) -----------------------------------
+
+    def compact(self) -> np.ndarray:
+        """Epoch compaction: rebuild the slab over the live rows only, in
+        ascending slab order, and rebuild the auxiliary structures on the
+        compacted ids.  Returns the explicit old→new id remap
+        ((old_capacity,) int32, -1 on dead/unused rows) that every id
+        holder (OMA state, payload tables, answer caches, oracles) must
+        apply.  The remap is order-preserving, so backends whose answers
+        depend only on per-row distances and index-order tie-breaks
+        answer identically modulo the remap."""
+        live = self.live_rows()
+        n_live = int(live.size)
+        remap = np.full(self.capacity, -1, np.int32)
+        remap[live] = np.arange(n_live, dtype=np.int32)
+        # smallest doubling capacity with one write-bucket of headroom, so
+        # the next append does not immediately regrow
+        cap = grow_capacity(0, n_live + MIN_WRITE, 1)
+        emb_live = self.embeddings[jnp.asarray(live)]
+        self.embeddings = jnp.pad(emb_live, ((0, cap - n_live), (0, 0)))
+        self.valid = jnp.pad(jnp.ones((n_live,), bool), (0, cap - n_live))
+        self._n_slots = n_live
+        self._live = n_live
+        self._shadow = None
+        self._build_structures()
+        return remap
 
 
 @dataclasses.dataclass(frozen=True)

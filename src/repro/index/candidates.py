@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.costs import BIG_COST
 from repro.core.policy import dedup_mask_batched, per_request_view
+from repro.index.base import track_jit
 from repro.kernels import ops
 
 
@@ -134,6 +135,7 @@ def index_candidate_fn(
 # Mutable-catalog candidate generation (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 
+@track_jit("assemble_mutable_slab")
 @partial(jax.jit, static_argnames=("c_local", "cap", "c_remote", "rerank"))
 def _assemble_mutable_slab(rs, x, catalog, alive, ids_remote, d_remote,
                            c_local: int, cap: int, c_remote: int,

@@ -15,10 +15,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
+from repro.index.base import (MutableRows, arrays_bytes,
+                              check_finite_queries, track_jit)
 from repro.kernels import ops
 
 
+@track_jit("flat_query")
 @partial(jax.jit, static_argnames=("k", "kernel", "masked"))
 def _flat_query(q: jax.Array, emb: jax.Array, valid: jax.Array, k: int,
                 kernel: str, masked: bool):

@@ -23,7 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
+from repro.index.base import (MutableRows, _flat_set, arrays_bytes,
+                              check_finite_queries, pad_ids, pad_rows,
+                              run_device, track_jit)
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
 
@@ -42,23 +44,50 @@ def build_invlists(assign: np.ndarray, nlist: int, cap: int | None = None):
     return table
 
 
-def invlist_append(table: np.ndarray, cursor: np.ndarray, assign: np.ndarray,
-                   ids: np.ndarray) -> np.ndarray:
-    """Append `ids` to their assigned inverted lists, doubling the table's
-    column capacity when any destination list would overflow.  Returns the
-    (possibly reallocated) table; `cursor` is advanced in place."""
-    counts = np.bincount(assign, minlength=table.shape[0])
-    need = int((cursor + counts).max())
-    if need > table.shape[1]:
-        new_cap = max(2 * table.shape[1], need)
-        table = np.pad(table, ((0, 0), (0, new_cap - table.shape[1])),
-                       constant_values=-1)
-    for i, a in zip(ids, assign):
-        table[a, cursor[a]] = i
+def invlist_positions(cursor: np.ndarray, assign: np.ndarray) -> np.ndarray:
+    """Destination column of each appended id in its inverted list (the
+    cursor plus the id's rank among same-list ids earlier in the batch).
+    Host-side bookkeeping only — the actual write is a donated device
+    scatter.  Advances `cursor` in place."""
+    pos = np.empty(assign.shape[0], np.int32)
+    for j, a in enumerate(assign):
+        pos[j] = cursor[a]
         cursor[a] += 1
-    return table
+    return pos
 
 
+def invlist_device_append(invlists: jax.Array, cursor: np.ndarray,
+                          assign: np.ndarray, ids: np.ndarray) -> jax.Array:
+    """Append `ids` to their assigned lists in the device-resident
+    (nlist, cols) table: host cursor bookkeeping plus one donated flat
+    scatter (padded lanes carry an out-of-range flat index and are
+    dropped).  A full list doubles the table column-wise — a rare
+    reallocation, warmed away like slab growth.  Returns the new table;
+    `cursor` is advanced in place."""
+    counts = np.bincount(assign, minlength=cursor.shape[0])
+    need = int((cursor + counts).max())
+    cols = invlists.shape[1]
+    if need > cols:
+        cols = max(2 * cols, need)
+        invlists = jnp.pad(invlists,
+                           ((0, 0), (0, cols - invlists.shape[1])),
+                           constant_values=-1)
+    pos = invlist_positions(cursor, assign)
+    flat = (assign.astype(np.int64) * cols + pos).astype(np.int32)
+    oob = invlists.size
+    return run_device(_flat_set, invlists, pad_ids(flat, oob),
+                      pad_ids(ids, -1))
+
+
+@track_jit("ivf_assign")
+@jax.jit
+def _assign_lists(vecs: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest existing centroid per (padded) incoming row."""
+    return jnp.argmin(ops.pairwise_l2_xla(vecs, centroids),
+                      axis=1).astype(jnp.int32)
+
+
+@track_jit("ivf_query")
 @partial(jax.jit, static_argnames=("k", "nprobe", "masked"))
 def _ivf_query(q, emb, centroids, invlists, valid, k: int, nprobe: int,
                masked: bool):
@@ -94,46 +123,51 @@ class IVFFlatIndex(MutableRows):
 
     # -- structure (re)build ------------------------------------------------
 
-    def _build_structures(self) -> None:
+    def _compute_structures(self):
         """(Re-)train the coarse quantizer and lists over the live rows.
 
         Row ids are stable: the k-means/table build runs over the live
         rows in slab order and the resulting local ids are remapped back
         to slab ids, so a refreshed index answers exactly like a fresh
-        build on the live rows (modulo that id remap)."""
+        build on the live rows (modulo that id remap).  Pure — the live
+        structures keep serving until `_install_structures` swaps the new
+        bundle in (the double-buffered refresh of DESIGN.md §14)."""
         live = self.live_rows()
         n_live = len(live)
         emb_live = (self.embeddings if n_live == self.capacity
                     else self.embeddings[jnp.asarray(live)])
         nlist = min(self.nlist, max(n_live, 1))
         key = jax.random.PRNGKey(self.seed)
-        self.centroids, assign = kmeans(key, emb_live, nlist,
-                                        self.train_iters)
+        centroids, assign = kmeans(key, emb_live, nlist, self.train_iters)
         table = build_invlists(np.asarray(assign), nlist)
         if n_live != self.capacity:  # remap local ids -> slab row ids
             table = np.where(table >= 0, live[np.clip(table, 0, None)], -1)
-        self._inv_np = table
-        self._cursor = (table >= 0).sum(axis=1).astype(np.int32)
-        self.invlists = jnp.asarray(table, jnp.int32)
+        cursor = (table >= 0).sum(axis=1).astype(np.int32)
+        return (centroids, jnp.asarray(table, jnp.int32), cursor)
+
+    def _install_structures(self, structures) -> None:
+        self.centroids, self.invlists, self._cursor = structures
 
     # -- mutation -----------------------------------------------------------
 
     def add(self, vectors) -> np.ndarray:
         """Append rows and bin them by the *current* (possibly stale)
-        coarse quantizer — FAISS's add-time behaviour.  A full list
-        doubles its capacity column-wise (one table reallocation)."""
-        ids = self._append_rows(vectors)
-        vecs = self.embeddings[jnp.asarray(ids)]
-        assign = np.asarray(
-            jnp.argmin(ops.pairwise_l2_xla(vecs, self.centroids), axis=1))
-        self._inv_np = invlist_append(self._inv_np, self._cursor, assign, ids)
-        self.invlists = jnp.asarray(self._inv_np, jnp.int32)
-        return ids
+        coarse quantizer — FAISS's add-time behaviour.
 
-    def refresh(self) -> None:
-        """Re-train the quantizer + rebuild the lists over the live rows
-        (restores fresh-build recall; quadratic drift gone)."""
-        self._build_structures()
+        Device-resident fast path: assignment runs as a tracked jit on the
+        width-padded incoming batch, destination columns are host cursor
+        bookkeeping, and the ids land in the (nlist, cols) table via one
+        donated flat scatter — no numpy table master, no full re-upload.
+        A full list still doubles the table column-wise (a rare
+        reallocation, warmed away like slab growth)."""
+        vec_np = np.asarray(vectors, np.float32)
+        ids = self._append_rows(vec_np)
+        b = ids.shape[0]
+        assign = np.asarray(run_device(
+            _assign_lists, pad_rows(vec_np), self.centroids))[:b]
+        self.invlists = invlist_device_append(self.invlists, self._cursor,
+                                              assign, ids)
+        return ids
 
     # -- queries ------------------------------------------------------------
 

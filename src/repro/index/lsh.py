@@ -23,10 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
+from repro.index.base import (MutableRows, _flat_set, arrays_bytes,
+                              check_finite_queries, pad_ids, run_device,
+                              track_jit)
 from repro.kernels import ops
 
 
+@track_jit("lsh_query")
 @partial(jax.jit, static_argnames=("k", "masked"))
 def _lsh_query(q, emb, planes, buckets, valid, k: int, masked: bool):
     """(B, d) -> (dists (B, k), ids (B, k)); ids = -1 on underflow."""
@@ -69,7 +72,10 @@ class LSHIndex(MutableRows):
         sig = (np.einsum("tbd,nd->tnb", self.planes, emb_np) > 0)
         return (sig * (1 << np.arange(self.bits))[None, None, :]).sum(-1)
 
-    def _build_structures(self) -> None:
+    def _compute_structures(self):
+        """Rebuild the bucket tables over the live rows (drops tombstone
+        slots; the hash itself never drifts).  Pure — serving keeps the
+        stale tables until `_install_structures`."""
         live = self.live_rows()
         emb_np = np.asarray(self.embeddings)[live]
         nb = 2 ** self.bits
@@ -87,41 +93,55 @@ class LSHIndex(MutableRows):
                 if c < cap:
                     table[t, bb, c] = i
                     cursor[t, bb] = c + 1
-        self._buckets_np, self._cursor = table, cursor
-        self.buckets = jnp.asarray(table)
+        return (jnp.asarray(table), cursor)
+
+    def _install_structures(self, structures) -> None:
+        self.buckets, self._cursor = structures
 
     # -- mutation -----------------------------------------------------------
 
     def add(self, vectors) -> np.ndarray:
         """Hash-and-append: exact LSH insertion (the planes are immutable,
-        so insert-time buckets match a fresh build's)."""
-        ids = self._append_rows(vectors)
-        vecs = np.asarray(self.embeddings)[ids]
-        codes = self._codes_np(vecs)                         # (t, B)
-        cap = self._buckets_np.shape[2]
-        # a fixed user cap keeps FAISS-LSH truncation semantics; otherwise
-        # grow a full bucket by doubling the shared column capacity
+        so insert-time buckets match a fresh build's).
+
+        Device-resident fast path: the incoming batch hashes on the host
+        (a (b, d) einsum), destination slots are host cursor bookkeeping,
+        and all tables' entries land in the (t, nb, cap) bucket tensor via
+        one donated flat scatter — no numpy master, no full re-upload.
+        Overflowing a fixed user cap keeps FAISS-LSH truncation semantics:
+        the overflow lane gets an out-of-range flat index and is dropped."""
+        vec_np = np.asarray(vectors, np.float32)
+        ids = self._append_rows(vec_np)
+        codes = self._codes_np(vec_np)                       # (t, B)
+        nb = 2 ** self.bits
+        cap = self.buckets.shape[2]
+        # a fixed user cap keeps truncation semantics; otherwise grow a
+        # full bucket by doubling the shared column capacity (rare)
         if self._fixed_cap is None:
             need = int(self._cursor.max()) + len(ids)        # loose bound
             if need > cap:
                 new_cap = max(2 * cap, need)
-                self._buckets_np = np.pad(
-                    self._buckets_np, ((0, 0), (0, 0), (0, new_cap - cap)),
+                self.buckets = jnp.pad(
+                    self.buckets, ((0, 0), (0, 0), (0, new_cap - cap)),
                     constant_values=-1)
                 cap = new_cap
+        oob = self.tables * nb * cap
+        assert oob < np.iinfo(np.int32).max, "bucket tensor exceeds int32"
+        flat = np.full(self.tables * len(ids), oob, np.int64)
+        vals = np.empty(flat.shape[0], np.int32)
+        lane = 0
         for t in range(self.tables):
             for i, bb in zip(ids, codes[t]):
                 c = self._cursor[t, bb]
                 if c < cap:
-                    self._buckets_np[t, bb, c] = i
+                    flat[lane] = (t * nb + int(bb)) * cap + c
                     self._cursor[t, bb] = c + 1
-        self.buckets = jnp.asarray(self._buckets_np)
+                vals[lane] = i
+                lane += 1
+        self.buckets = run_device(
+            _flat_set, self.buckets,
+            pad_ids(flat.astype(np.int32), oob), pad_ids(vals, -1))
         return ids
-
-    def refresh(self) -> None:
-        """Rebuild the bucket tables over the live rows (drops tombstone
-        slots; the hash itself never drifts)."""
-        self._build_structures()
 
     # -- queries ------------------------------------------------------------
 

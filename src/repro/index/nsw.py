@@ -35,7 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
+from repro.index.base import (MutableRows, _flat_set, _rows_write,
+                              arrays_bytes, check_finite_queries, pad_ids,
+                              pad_rows, run_device, track_jit)
 from repro.kernels import ops
 
 
@@ -56,6 +58,7 @@ def build_nsw_graph(emb: np.ndarray, degree: int = 16, shortcuts: int = 2,
     return graph
 
 
+@track_jit("nsw_query")
 @partial(jax.jit, static_argnames=("k", "beam", "steps", "expand", "masked"))
 def _nsw_query(q, emb, graph, entry_points, valid, k: int, beam: int,
                steps: int, expand: int, masked: bool):
@@ -152,14 +155,15 @@ class NSWIndex(MutableRows):
         self._rng = np.random.default_rng(seed + 1)  # insertion randomness
         self._build_structures()
 
-    def _build_structures(self) -> None:
+    def _compute_structures(self):
+        """Rebuild graph + entry points over the live rows (restores the
+        build-quality kNN graph after incremental drift / deletions).
+        Pure — serving keeps the stale graph until `_install_structures`."""
         live = self.live_rows()
         emb_np = np.asarray(self.embeddings)[live]
         graph_live = build_nsw_graph(emb_np, self.degree, seed=self.seed)
         graph = np.zeros((self.capacity, self.degree), np.int32)
         graph[live] = live[graph_live]               # remap to slab row ids
-        self._graph_np = graph
-        self.graph = jnp.asarray(graph)
         # entry points = catalog points nearest to k-means centroids: the
         # static-shape stand-in for HNSW's upper navigation layers — ensures
         # every density mode seeds the beam (DESIGN.md §3).
@@ -171,31 +175,47 @@ class NSWIndex(MutableRows):
         cents, _ = _kmeans(jax.random.PRNGKey(self.seed), emb_live, nentry)
         d2 = ops.pairwise_l2_xla(cents, emb_live)
         near = np.asarray(jnp.argmin(d2, axis=1))
-        self.entry_points = jnp.asarray(live[near], jnp.int32)  # (nentry,)
+        return (jnp.asarray(graph), jnp.asarray(live[near], jnp.int32))
+
+    def _install_structures(self, structures) -> None:
+        self.graph, self.entry_points = structures
 
     # -- mutation -----------------------------------------------------------
 
     def add(self, vectors) -> np.ndarray:
         """Incremental NSW insertion: out-edges = beam-search kNN over the
         pre-insert graph + random shortcut edges; `_REV_LINKS` neighbours
-        each donate one edge slot back so the new nodes become reachable."""
-        vecs = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        each donate one edge slot back so the new nodes become reachable.
+
+        Device-resident fast path: the pre-insert kNN query runs on the
+        width-padded batch (fixed shapes, no per-batch-size retrace), the
+        new out-rows are assembled on the host and land in the (cap, deg)
+        edge table via a donated contiguous row write, and the reverse
+        links via one donated flat scatter — no numpy graph master."""
+        vec_np = np.atleast_2d(np.asarray(vectors, np.float32))
         live_before = self.live_rows()
         # neighbours from the *current* structures (the classic sequential
         # insertion queries the graph as built so far; querying once for
         # the whole batch keeps in-batch nodes unlinked to each other)
         knn = min(self.degree - 2, max(len(live_before) - 1, 1))
-        _, nbr = self.query(vecs, knn)
-        nbr = np.asarray(nbr)                                 # (B, knn)
-        ids = self._append_rows(vecs)
-        if self._graph_np.shape[0] < self.capacity:           # slab grew
-            self._graph_np = np.pad(
-                self._graph_np,
-                ((0, self.capacity - self._graph_np.shape[0]), (0, 0)))
+        b = vec_np.shape[0]
+        qpad = pad_rows(vec_np)
+        _, nbr = self.query(qpad, knn)
+        nbr = np.asarray(nbr)[:b]                             # (B, knn)
+        ids = self._append_rows(vec_np)
+        if self.graph.shape[0] < self.capacity:               # slab grew
+            self.graph = jnp.pad(
+                self.graph,
+                ((0, self.capacity - self.graph.shape[0]), (0, 0)))
+        # padded lanes land on unused slots past the append (the slab
+        # keeps a full write window of headroom); zeros are unreachable
+        rows = np.zeros((qpad.shape[0], self.degree), np.int32)
+        rev_flat: list[int] = []            # reverse-link scatter entries
+        rev_vals: list[int] = []
         for row, (i, nb) in enumerate(zip(ids, nbr)):
             nb = nb[nb >= 0]
             if len(nb) == 0:  # first-ever node: all self-loops
-                self._graph_np[i] = i
+                rows[row] = i
                 continue
             out = np.full((self.degree,), i, np.int32)        # self-loop pad
             out[:len(nb)] = nb
@@ -204,18 +224,21 @@ class NSWIndex(MutableRows):
             n_short = self.degree - len(nb)
             if n_short > 0 and len(live_before):
                 out[len(nb):] = self._rng.choice(live_before, size=n_short)
-            self._graph_np[i] = out
+            rows[row] = out
             # reverse half: a few neighbours each give one slot back
             for j in nb[:self._REV_LINKS]:
                 slot = int(self._rng.integers(self.degree))
-                self._graph_np[j, slot] = i
-        self.graph = jnp.asarray(self._graph_np)
+                rev_flat.append(int(j) * self.degree + slot)
+                rev_vals.append(int(i))
+        self.graph = run_device(_rows_write, self.graph, jnp.asarray(rows),
+                                np.int32(ids[0]))
+        if rev_flat:
+            oob = self.graph.size
+            self.graph = run_device(
+                _flat_set, self.graph,
+                pad_ids(np.asarray(rev_flat, np.int32), oob),
+                pad_ids(np.asarray(rev_vals, np.int32), -1))
         return ids
-
-    def refresh(self) -> None:
-        """Rebuild graph + entry points over the live rows (restores the
-        build-quality kNN graph after incremental drift / deletions)."""
-        self._build_structures()
 
     # -- queries ------------------------------------------------------------
 

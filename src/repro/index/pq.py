@@ -25,12 +25,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import MutableRows, arrays_bytes, check_finite_queries
-from repro.index.ivf import build_invlists, invlist_append
+from repro.index.base import (MutableRows, _rows_write, arrays_bytes,
+                              check_finite_queries, pad_rows, run_device,
+                              track_jit)
+from repro.index.ivf import (_assign_lists, build_invlists,
+                             invlist_device_append)
 from repro.index.kmeans import kmeans
 from repro.kernels import ops
 
 
+@track_jit("pq_encode")
 @jax.jit
 def _pq_encode(data: jax.Array, codebooks: jax.Array) -> jax.Array:
     """(n, d) x (m, ksub, dsub) codebooks -> (n, m) int32 codes.
@@ -103,6 +107,7 @@ class PQCodec:
         return self is other
 
 
+@track_jit("pq_query")
 @partial(jax.jit, static_argnames=("k", "nprobe", "refine", "masked"))
 def _ivfpq_query(q, emb, centroids, invlists, codes, codebooks, valid,
                  k: int, nprobe: int, refine: int, masked: bool):
@@ -158,52 +163,61 @@ class IVFPQIndex(MutableRows):
         self.exact_distances = bool(refine and refine > 1)
         self._build_structures()
 
-    def _build_structures(self) -> None:
+    def _compute_structures(self):
         """(Re-)train quantizer + codebooks and (re-)encode the live rows;
-        ids are stable (local build ids remap to slab rows)."""
+        ids are stable (local build ids remap to slab rows).  Pure — the
+        live structures keep serving until `_install_structures`."""
         live = self.live_rows()
         n_live = len(live)
         emb_live = (self.embeddings if n_live == self.capacity
                     else self.embeddings[jnp.asarray(live)])
         nlist = min(self.nlist, max(n_live, 1))
         key = jax.random.PRNGKey(self.seed)
-        self.centroids, assign = kmeans(key, emb_live, nlist)
+        centroids, assign = kmeans(key, emb_live, nlist)
         table = build_invlists(np.asarray(assign), nlist)
         if n_live != self.capacity:
             table = np.where(table >= 0, live[np.clip(table, 0, None)], -1)
-        self._inv_np = table
-        self._cursor = (table >= 0).sum(axis=1).astype(np.int32)
-        self.invlists = jnp.asarray(table, jnp.int32)
-        self.codec = PQCodec(emb_live, m=self.m, seed=self.seed + 1)
-        codes_live = self.codec.encode(emb_live)         # (n_live, m)
+        cursor = (table >= 0).sum(axis=1).astype(np.int32)
+        codec = PQCodec(emb_live, m=self.m, seed=self.seed + 1)
+        codes_live = codec.encode(emb_live)              # (n_live, m)
         codes = np.zeros((self.capacity, self.m), np.int32)
         codes[live] = np.asarray(codes_live)
-        self._codes_np = codes
-        self.codes = jnp.asarray(codes)
+        return (centroids, jnp.asarray(table, jnp.int32), cursor, codec,
+                jnp.asarray(codes))
+
+    def _install_structures(self, structures) -> None:
+        (self.centroids, self.invlists, self._cursor, self.codec,
+         self.codes) = structures
 
     # -- mutation -----------------------------------------------------------
 
     def add(self, vectors) -> np.ndarray:
         """Encode-on-insert: PQ-code the new rows with the frozen codebooks
-        and append to the (stale-centroid) inverted lists."""
-        ids = self._append_rows(vectors)
-        if self._codes_np.shape[0] < self.capacity:     # slab grew
-            self._codes_np = np.pad(
-                self._codes_np,
-                ((0, self.capacity - self._codes_np.shape[0]), (0, 0)))
-        vecs = self.embeddings[jnp.asarray(ids)]
-        self._codes_np[ids] = np.asarray(self.codec.encode(vecs))
-        self.codes = jnp.asarray(self._codes_np)
-        assign = np.asarray(
-            jnp.argmin(ops.pairwise_l2_xla(vecs, self.centroids), axis=1))
-        self._inv_np = invlist_append(self._inv_np, self._cursor, assign, ids)
-        self.invlists = jnp.asarray(self._inv_np, jnp.int32)
-        return ids
+        and append to the (stale-centroid) inverted lists.
 
-    def refresh(self) -> None:
-        """Full re-train + re-encode over the live rows (restores both
-        quantizer binning and codebook accuracy after churn)."""
-        self._build_structures()
+        Device-resident fast path: the incoming batch is width-padded once,
+        encoded and assigned by tracked jits, the codes land in the
+        (cap, m) slab via a donated contiguous row write (appended ids are
+        consecutive), and the list ids via a donated flat scatter — no
+        numpy masters, no full re-uploads."""
+        vec_np = np.asarray(vectors, np.float32)
+        ids = self._append_rows(vec_np)
+        b = ids.shape[0]
+        if self.codes.shape[0] < self.capacity:  # slab grew (rare)
+            self.codes = jnp.pad(
+                self.codes, ((0, self.capacity - self.codes.shape[0]),
+                             (0, 0)))
+        vecs = pad_rows(vec_np)
+        codes_new = run_device(_pq_encode, vecs, self.codec.codebooks)
+        # appended ids are consecutive and the slab keeps a full write
+        # window of headroom, so the padded lanes land on unused slots
+        self.codes = run_device(_rows_write, self.codes, codes_new,
+                                np.int32(ids[0]))
+        assign = np.asarray(run_device(
+            _assign_lists, vecs, self.centroids))[:b]
+        self.invlists = invlist_device_append(self.invlists, self._cursor,
+                                              assign, ids)
+        return ids
 
     # -- queries ------------------------------------------------------------
 

@@ -291,3 +291,23 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                                     written_upto=written_upto,
                                     bq=bq, bk=bk, interpret=interp)
     return out[:, :s]
+
+
+def register_tracked_jits() -> None:
+    """Register the module-level jits with the mutation path's compile
+    tracker (repro.index.base.track_jit), so the churn no-retrace guard
+    also covers the masked scans that serve over swapped slab buffers.
+    Called from repro.index's package init — a lazy hook rather than a
+    top-level import to keep kernels free of an index-package cycle."""
+    from repro.index.base import track_jit
+
+    for name, fn in (("ops_pairwise_l2", pairwise_l2),
+                     ("ops_pq_adc", pq_adc),
+                     ("ops_topk_l2", topk_l2),
+                     ("ops_topk_l2_chunked", topk_l2_chunked),
+                     ("ops_ivf_scan_topk", ivf_scan_topk),
+                     ("ops_pairwise_l2_xla", pairwise_l2_xla),
+                     ("ops_pq_adc_xla", pq_adc_xla),
+                     ("ops_topk_l2_xla", topk_l2_xla),
+                     ("ops_ivf_scan_xla", ivf_scan_xla)):
+        track_jit(name, fn)

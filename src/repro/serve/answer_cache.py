@@ -302,6 +302,31 @@ class AnswerCache:
             self._drop(key)
         return self._book_invalidations(int(hit.sum()), "add")
 
+    def remap_ids(self, remap: np.ndarray) -> None:
+        """Rewrite every stored answer's object ids through a compaction
+        remap (DESIGN.md §14) and rebuild the inverted id→keys map in the
+        new id space.  Entries never reference dead rows
+        (`invalidate_removed` is precise), so every stored id must land
+        on a new row; -1 underflow slots pass through.  The request-key
+        namespace (`_qkeys`) is untouched — rids key *queries*, not
+        objects — and the answers stay bitwise valid: compaction's remap
+        is order-preserving and moves rows without changing distances."""
+        remap = np.asarray(remap, np.int32)
+        inv: dict[int, set] = {}
+        for key, e in self._store.items():
+            ok = e.ids >= 0
+            if ok.any() and (remap[e.ids[ok]] < 0).any():
+                raise ValueError(
+                    "remap_ids: stored answer references a dead row — "
+                    "invalidate_removed must run before compaction")
+            new_ids = np.where(ok, remap[np.clip(e.ids, 0, None)],
+                               -1).astype(np.int32)
+            self._store[key] = e._replace(ids=new_ids)
+            for oid in new_ids[new_ids >= 0].tolist():
+                inv.setdefault(int(oid), set()).add(key)
+        self._inv = inv
+        self.epoch += 1  # the id space changed, the entries survived
+
     def flush(self, reason: str = "refresh") -> int:
         """Drop everything (epoch bump): `refresh()` rebuilds quantizer
         structures, and unstable-mutation backends route add/remove
@@ -482,6 +507,42 @@ class CachedIndex:
         self._ensure_loaded()
         self.inner.refresh()
         self.cache.flush("refresh")
+
+    def refresh_start(self) -> None:
+        """Phase 1 of the double-buffered refresh (DESIGN.md §14): shadow
+        rebuild in the inner index.  The stale structures — and the
+        answers memoized over them — keep serving; no flush until the
+        swap actually changes what the index would answer."""
+        self._ensure_loaded()
+        self.inner.refresh_start()
+
+    def refresh_swap(self) -> None:
+        """Phase 2: install the shadow, then flush (the store memoized
+        the stale structure's answers)."""
+        self.inner.refresh_swap()
+        self.cache.flush("refresh")
+
+    @property
+    def refresh_pending(self) -> bool:
+        return bool(getattr(self.inner, "refresh_pending", False))
+
+    def compact(self) -> np.ndarray:
+        """Epoch compaction pass-through: compact the inner index and
+        push the id remap into the stored answers.  The remap is safe for
+        stable, exact-distance backends (it is order-preserving, so even
+        top-k tie-breaks survive renumbering); backends with unstable
+        mutations or approximate reported distances flush conservatively
+        — their structures rebuild over the renumbered slab and the drift
+        cannot be bounded entry by entry."""
+        self._ensure_loaded()
+        remap = self.inner.compact()
+        if (getattr(self.inner, "answer_unstable_add", False)
+                or getattr(self.inner, "answer_unstable_remove", False)
+                or not self.exact_distances):
+            self.cache.flush("compact")
+        else:
+            self.cache.remap_ids(remap)
+        return remap
 
     # -- idle unload (virtual clock) ----------------------------------------
 

@@ -196,10 +196,23 @@ class SemanticCachedLM:
     def remove_documents(self, ids) -> None:
         """Expire documents online: tombstoned in the policy (they can
         never be served again, and any cached copy is dropped at once);
-        their payload slots are cleared but never reused."""
+        their payload slots are cleared but never reused — until an
+        epoch compaction (`compact`) renumbers the table."""
         self.policy.remove_objects(ids)
         for i in ids:
             self.payloads[int(i)] = None
+
+    def compact(self) -> None:
+        """Epoch compaction (DESIGN.md §14): the policy drops tombstoned
+        slab rows and renumbers the survivors; the payload table follows
+        the same remap, so document handles returned before the
+        compaction are invalidated (the id space restarts dense)."""
+        remap = self.policy.compact()
+        new = [None] * int((remap >= 0).sum())
+        for old_id, new_id in enumerate(remap):
+            if new_id >= 0 and old_id < len(self.payloads):
+                new[int(new_id)] = self.payloads[old_id]
+        self.payloads = new
 
     @property
     def nag(self) -> float:

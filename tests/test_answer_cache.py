@@ -153,6 +153,38 @@ def test_invalidate_added_radius(setup):
     assert cache.invalidate_added(far[None]) == 1
 
 
+def test_remap_ids_rewrites_entries_and_inverted_map(setup):
+    """Compaction seam (DESIGN.md §14): an id-shifting remap rewrites
+    every stored answer in place, passes -1 underflow through, rebuilds
+    the inverted id→keys map in the new id space, and refuses to remap
+    an answer onto a dead row."""
+    catalog, _, _ = setup
+    cache = AnswerCache(AnswerCacheSpec(capacity=8))
+    rs = np.asarray(catalog[:2], np.float32)
+    d = np.array([[0.1, 0.2, np.inf], [0.3, 0.4, 0.5]], np.float32)
+    ids = np.array([[5, 9, -1], [2, 9, 11]], np.int32)
+    cache.store_batch(rs, 3, d, ids)
+    remap = np.full(16, -1, np.int32)
+    for new, old in enumerate((2, 5, 9, 11)):  # order-preserving
+        remap[old] = new
+    cache.remap_ids(remap)
+    assert cache.epoch == 1 and cache.invalidations == 0
+    entries, mask = cache.lookup_batch(rs, 3)
+    assert mask.all()
+    np.testing.assert_array_equal(entries[0].ids, [1, 2, -1])
+    np.testing.assert_array_equal(entries[1].ids, [0, 2, 3])
+    np.testing.assert_array_equal(entries[1].d, d[1])  # answers untouched
+    # inverted map lives in the new id space: dropping new id 2 (old 9)
+    # kills exactly the two entries that contain it
+    assert cache.invalidate_removed([2]) == 2 and len(cache) == 0
+    # remapping a stored id onto a dead row is a loud contract violation
+    cache.store_batch(rs[:1], 3, d[:1], np.array([[0, 1, -1]], np.int32))
+    bad = np.full(16, -1, np.int32)
+    bad[0] = 0
+    with pytest.raises(ValueError, match="dead row"):
+        cache.remap_ids(bad)
+
+
 def test_flush_and_step_stats(setup):
     catalog, _, _ = setup
     cache = AnswerCache(AnswerCacheSpec(capacity=16))
@@ -243,6 +275,58 @@ def test_bitwise_parity_under_churn(setup, backend):
     st = pol_on.answer_cache.stats()
     assert st["hits"] > 0, f"{backend}: repeat batch never hit"
     assert st["invalidations"] > 0, f"{backend}: churn invalidated nothing"
+
+
+@pytest.mark.parametrize("backend", ["flat", "nsw"])
+def test_bitwise_parity_under_compaction(setup, backend):
+    """Epoch compaction keeps the cache-on arm bitwise (DESIGN.md §14):
+    stable exact-distance backends remap their stored answers in place —
+    the remap is order-preserving, so even top-k tie-breaks survive and
+    the entries keep hitting — while unstable/approximate backends flush
+    conservatively.  Either way gains, policy state and served ids match
+    the cache-off arm exactly through remove → compact → serve."""
+    catalog, reqs, newv = setup
+    ispec = IndexSpec(backend, TINY[backend])
+    # the added rows sit far outside the catalog's ball, and the removes
+    # target only them: the precise invalidation rules (radius check on
+    # add, inverted-map walk on remove) leave the memoized entries alone,
+    # so what happens to the store at compaction is compaction's doing
+    far = newv + 8.0
+    arms = {}
+    for cap in (64, 0):
+        pol = _policy(catalog, ispec, cap)
+        served, gains = [], []
+        _served_recorder(pol, served)
+        for rs in (reqs[:8], reqs[:8]):
+            gains.append(np.asarray(pol.serve_update_batch(rs).gain_int))
+        added = np.asarray(pol.add_objects(far))
+        pol.remove_objects(added[:4])
+        remap = np.asarray(pol.compact())
+        entries_after_compact = len(pol.answer_cache.cache) if cap else 0
+        hits_before = pol.answer_cache.cache.hits if cap else 0
+        # the repeated batch right after compaction: on the stable arm it
+        # must hit the remapped entries, on both arms serve identically
+        gains.append(np.asarray(pol.serve_update_batch(reqs[:8]).gain_int))
+        gains.append(np.asarray(pol.serve_update_batch(reqs[8:16]).gain_int))
+        hits_delta = (pol.answer_cache.cache.hits - hits_before) if cap else 0
+        arms[cap] = (np.concatenate(gains), np.asarray(pol.cache.state.y),
+                     np.concatenate([s.ravel() for s in served]), remap,
+                     entries_after_compact, hits_delta, pol)
+    g_on, y_on, ids_on, remap_on, entries_on, hits_on, pol_on = arms[64]
+    g_off, y_off, ids_off, remap_off, _, _, _ = arms[0]
+    np.testing.assert_array_equal(remap_on, remap_off)
+    assert np.array_equal(g_on, g_off), f"{backend}: gain diverged"
+    assert np.array_equal(y_on, y_off), f"{backend}: state.y diverged"
+    assert np.array_equal(ids_on, ids_off), f"{backend}: served ids diverged"
+    st = pol_on.answer_cache.stats()
+    if backend == "flat":
+        # stable + exact: the store survived compaction via the id remap
+        assert entries_on > 0, "flat compaction flushed instead of remapping"
+        assert hits_on > 0, "remapped entries never hit again"
+    else:
+        # nsw mutations are answer-unstable: compaction flushed
+        assert entries_on == 0, "unstable backend kept entries past compact"
+    assert st["epoch"] >= 1
 
 
 def test_replay_parity_and_metrics(setup):

@@ -290,6 +290,168 @@ def test_churn_replay_baseline_policy():
 
 
 # ---------------------------------------------------------------------------
+# double-buffered refresh (DESIGN.md §14): stale serves bitwise until the
+# swap; after the swap the index answers like a blocking refresh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", sorted(TINY))
+def test_two_phase_refresh_stale_then_fresh(setup, backend):
+    cat, rq, newv = setup
+    idx = build_index(IndexSpec(backend, TINY[backend]), cat)
+    ref = build_index(IndexSpec(backend, TINY[backend]), cat)
+    rng = np.random.default_rng(5)
+    doomed = rng.choice(300, size=40, replace=False)
+    for i in (idx, ref):
+        i.add(newv)
+        i.remove(doomed)
+
+    assert not idx.refresh_pending
+    idx.refresh_start()
+    # between start and swap the *stale* structures serve, bitwise equal
+    # to a twin that never started a refresh
+    d_s, i_s = idx.query(rq[:16], 5)
+    d_r, i_r = ref.query(rq[:16], 5)
+    np.testing.assert_array_equal(np.asarray(i_s), np.asarray(i_r))
+    np.testing.assert_array_equal(np.asarray(d_s), np.asarray(d_r))
+
+    idx.refresh_swap()
+    assert not idx.refresh_pending
+    ref.refresh()  # blocking = start + swap back to back
+    d_a, i_a = idx.query(rq[:16], 5)
+    d_b, i_b = ref.query(rq[:16], 5)
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+
+
+def test_shadow_discarded_on_interleaved_mutation(setup):
+    """A mutation between start and swap invalidates the shadow (it was
+    computed over rows that no longer reflect the slab); the swap then
+    installs nothing and the stale structures keep serving."""
+    cat, rq, newv = setup
+    spec = IndexSpec("ivf", TINY["ivf"])
+    idx = build_index(spec, cat)
+    twin = build_index(spec, cat)
+    idx.refresh_start()
+    assert idx.refresh_pending
+    for i in (idx, twin):
+        i.add(newv[:8])
+    assert not idx.refresh_pending
+    idx.refresh_swap()  # no-op: the shadow was discarded
+    d_a, i_a = idx.query(rq[:8], 5)
+    d_b, i_b = twin.query(rq[:8], 5)
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+
+
+# ---------------------------------------------------------------------------
+# epoch compaction (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", sorted(TINY))
+def test_compact_matches_fresh_build(setup, backend):
+    """After compaction the index answers like a fresh build over the
+    live rows: the remap is order-preserving, so even index-order
+    tie-breaks survive the renumbering."""
+    cat, rq, newv = setup
+    idx = build_index(IndexSpec(backend, TINY[backend]), cat)
+    idx.add(newv)
+    rng = np.random.default_rng(13)
+    idx.remove(rng.choice(360, size=100, replace=False))
+
+    live = idx.live_rows()
+    emb_live = idx.embeddings[jnp.asarray(live)]
+    old_cap = idx.capacity
+    remap = np.asarray(idx.compact())
+    assert remap.shape == (old_cap,)
+    # order-preserving: live rows land densely at [0, n_live) in order
+    np.testing.assert_array_equal(remap[live], np.arange(len(live)))
+    dead = np.setdiff1d(np.arange(old_cap), live)
+    assert (remap[dead] == -1).all()
+    assert idx.n == idx.n_slots == len(live)
+
+    fresh = build_index(IndexSpec(backend, TINY[backend]), emb_live)
+    d_a, i_a = idx.query(rq[:16], 5)
+    d_b, i_b = fresh.query(rq[:16], 5)
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+    np.testing.assert_allclose(np.asarray(d_a), np.asarray(d_b), atol=1e-4)
+
+    # the id space restarts dense: post-compaction adds continue from
+    # n_live, and the new rows are immediately retrievable
+    ids = idx.add(newv[:4])
+    np.testing.assert_array_equal(ids, np.arange(len(live), len(live) + 4))
+    _, got = idx.query(newv[:4], 3)
+    hits = [int(ids[j]) in set(np.asarray(got)[j]) for j in range(4)]
+    assert sum(hits) >= 3, f"{backend}: rows added after compact not found"
+
+
+def test_churn_compaction_parity():
+    """Compaction is behavior-neutral for exact candidates: the driver's
+    id translation routes the schedule through the remap, and the replay
+    matches the compaction-free run on gain/served/occupancy bitwise —
+    only the slab capacity (and wall time) changes.  Re-rounding is
+    frozen past the initial draw (`round_every` > trace length):
+    randomized rounding consumes one uniform per slab *position*, so no
+    renumbering can keep its stream aligned — the deterministic pipeline
+    (candidates, distances, OMA y, gains given x) is the compaction
+    contract, and that is what this pins bitwise."""
+    cfg = policy.AcaiConfig(
+        h=24, k=4, c_f=1.0, c_remote=16, c_local=8,
+        oma=oma.OMAConfig(eta=0.05, rounding="depround",
+                          round_every=1_000_000))
+    params = dict(trace.TINY_TRACE_KWARGS["rolling_catalog"])
+    catalog, reqs, _ = trace.build_trace("rolling_catalog", **params)
+    events = trace.rolling_catalog_events(**params)
+    assert len(events) > 0
+    n0 = churn.warm_size(params["n"], params["warm"])
+    runs = {}
+    for every in (0, 24):
+        cache = policy.AcaiCache(jnp.asarray(catalog[:n0]), cfg, seed=0)
+        runs[every] = (churn.replay_with_churn(
+            cache, catalog, reqs, events, batch=8, compact_every=every),
+            cache)
+    (r0, c0), (r1, c1) = runs[0], runs[24]
+    assert r0["compactions"] == 0 and r1["compactions"] >= 1
+    np.testing.assert_array_equal(r0["gain"], r1["gain"])
+    np.testing.assert_array_equal(r0["served_local"], r1["served_local"])
+    np.testing.assert_array_equal(r0["occupancy"], r1["occupancy"])
+    # compaction reclaimed the tombstoned rows: the compacted slab is no
+    # bigger, and the live mass is identical
+    assert c1.catalog.shape[0] <= c0.catalog.shape[0]
+    assert c1.live_count == c0.live_count
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(c1.state.y)[np.asarray(c1.state.y) != 0]),
+        np.sort(np.asarray(c0.state.y)[np.asarray(c0.state.y) != 0]))
+
+
+# ---------------------------------------------------------------------------
+# no-retrace guard: churn at warmed shapes compiles nothing new
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_after_warmup(cache_cfg):
+    """The donated-update mutation path keys its jits on (capacity,
+    pow2-bucketed batch width): replaying the same churn schedule a
+    second time — fresh policy, same shapes — must add zero compiled
+    traces across every tracked entry point (DESIGN.md §14)."""
+    from repro.index.base import tracked_compiles
+
+    params = dict(trace.TINY_TRACE_KWARGS["rolling_catalog"])
+    catalog, reqs, _ = trace.build_trace("rolling_catalog", **params)
+    events = trace.rolling_catalog_events(**params)
+    assert len(events) > 0
+    n0 = churn.warm_size(params["n"], params["warm"])
+    for attempt in ("warmup", "pinned"):
+        cache = policy.AcaiCache(jnp.asarray(catalog[:n0]), cache_cfg,
+                                 seed=0)
+        before = tracked_compiles()
+        churn.replay_with_churn(cache, catalog, reqs, events, batch=8,
+                                refresh_every=32)
+        grew = tracked_compiles() - before
+        if attempt == "pinned":
+            assert grew == 0, (
+                f"churn retraced {grew} tracked jits after warmup")
+
+
+# ---------------------------------------------------------------------------
 # ServerOracle mutation semantics
 # ---------------------------------------------------------------------------
 
