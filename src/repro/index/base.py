@@ -469,6 +469,19 @@ class MutableRows:
 
     # -- epoch compaction (DESIGN.md §14) -----------------------------------
 
+    @property
+    def answer_stable_compact(self) -> bool:
+        """True when `compact()` changes nothing but row numbering, so an
+        answer cache may remap its stored ids instead of flushing.  Only
+        structure-free backends qualify: any backend that overrides
+        `_compute_structures` re-derives its auxiliaries over the live
+        set at compaction (IVF re-trains k-means, LSH re-draws bucket
+        membership under truncation caps), which can change answers
+        beyond the id remap — the same answer-changing rebuild that
+        forces a flush on refresh."""
+        return (type(self)._compute_structures
+                is MutableRows._compute_structures)
+
     def compact(self) -> np.ndarray:
         """Epoch compaction: rebuild the slab over the live rows only, in
         ascending slab order, and rebuild the auxiliary structures on the

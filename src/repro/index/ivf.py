@@ -73,8 +73,9 @@ def invlist_device_append(invlists: jax.Array, cursor: np.ndarray,
                            ((0, 0), (0, cols - invlists.shape[1])),
                            constant_values=-1)
     pos = invlist_positions(cursor, assign)
-    flat = (assign.astype(np.int64) * cols + pos).astype(np.int32)
     oob = invlists.size
+    assert oob < np.iinfo(np.int32).max, "invlist tensor exceeds int32"
+    flat = (assign.astype(np.int64) * cols + pos).astype(np.int32)
     return run_device(_flat_set, invlists, pad_ids(flat, oob),
                       pad_ids(ids, -1))
 

@@ -312,6 +312,11 @@ class AnswerCache:
         objects — and the answers stay bitwise valid: compaction's remap
         is order-preserving and moves rows without changing distances."""
         remap = np.asarray(remap, np.int32)
+        # build the remapped store + inverted map fully before committing,
+        # so the dead-row error below leaves the cache untouched (a
+        # half-remapped store with a stale inverted map would corrupt
+        # every later invalidate_removed)
+        store: "OrderedDict[tuple, _Entry]" = OrderedDict()
         inv: dict[int, set] = {}
         for key, e in self._store.items():
             ok = e.ids >= 0
@@ -321,9 +326,10 @@ class AnswerCache:
                     "invalidate_removed must run before compaction")
             new_ids = np.where(ok, remap[np.clip(e.ids, 0, None)],
                                -1).astype(np.int32)
-            self._store[key] = e._replace(ids=new_ids)
+            store[key] = e._replace(ids=new_ids)
             for oid in new_ids[new_ids >= 0].tolist():
                 inv.setdefault(int(oid), set()).add(key)
+        self._store = store
         self._inv = inv
         self.epoch += 1  # the id space changed, the entries survived
 
@@ -518,7 +524,12 @@ class CachedIndex:
 
     def refresh_swap(self) -> None:
         """Phase 2: install the shadow, then flush (the store memoized
-        the stale structure's answers)."""
+        the stale structure's answers).  A swap with no pending shadow
+        (discarded by an interleaved mutation, or never started) installs
+        nothing — the index is unchanged, so the store stays."""
+        if not self.refresh_pending:
+            self.inner.refresh_swap()  # inner no-op, kept for symmetry
+            return
         self.inner.refresh_swap()
         self.cache.flush("refresh")
 
@@ -528,20 +539,22 @@ class CachedIndex:
 
     def compact(self) -> np.ndarray:
         """Epoch compaction pass-through: compact the inner index and
-        push the id remap into the stored answers.  The remap is safe for
-        stable, exact-distance backends (it is order-preserving, so even
-        top-k tie-breaks survive renumbering); backends with unstable
-        mutations or approximate reported distances flush conservatively
-        — their structures rebuild over the renumbered slab and the drift
-        cannot be bounded entry by entry."""
+        push the id remap into the stored answers.  The remap-and-keep
+        path is safe only for structure-free exact backends
+        (`answer_stable_compact`, today just flat): the remap is
+        order-preserving, so even top-k tie-breaks survive renumbering.
+        Every backend with auxiliary structures flushes — compaction
+        rebuilds them over the live set (IVF re-trains its quantizer,
+        LSH re-draws truncation-capped buckets), the same
+        answer-changing rebuild for which `refresh()` flushes, so stored
+        answers could diverge from the post-compaction index."""
         self._ensure_loaded()
         remap = self.inner.compact()
-        if (getattr(self.inner, "answer_unstable_add", False)
-                or getattr(self.inner, "answer_unstable_remove", False)
-                or not self.exact_distances):
-            self.cache.flush("compact")
-        else:
+        if (getattr(self.inner, "answer_stable_compact", False)
+                and self.exact_distances):
             self.cache.remap_ids(remap)
+        else:
+            self.cache.flush("compact")
         return remap
 
     # -- idle unload (virtual clock) ----------------------------------------
