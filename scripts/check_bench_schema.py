@@ -9,7 +9,11 @@ committed at the repo root:
 * every field occurring in the file's `rows` must be documented in the
   README table (no silently-added columns), and
 * every documented field must occur in at least one row (no stale docs
-  for removed columns).
+  for removed columns), and
+* the load-bearing columns in REQUIRED_COLUMNS must be present — those
+  carry the analysis a suite exists for (e.g. the distributed suite
+  without `collectives_per_step`/`n` can't locate break-even), so a
+  refactor that drops one fails here even if it also updates the README.
 
 A BENCH file with no README section at all, or a file whose top level
 has no `rows` list, is an error too.  Exits non-zero with a per-file
@@ -27,6 +31,14 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 README = ROOT / "README.md"
+
+# per-file columns that must appear in the rows (checked against the
+# union of row keys, like the README comparison)
+REQUIRED_COLUMNS: dict[str, set[str]] = {
+    "BENCH_distributed.json": {"n", "shards", "collectives_per_step",
+                               "bit_consistent", "requests_per_s"},
+    "BENCH_churn.json": {"shards", "compactions", "mutation_ms"},
+}
 
 # a schema section opens with the bold filename marker ...
 _SECTION = re.compile(r"\*\*`(BENCH_[a-z_]+\.json)`\*\*")
@@ -95,6 +107,11 @@ def main() -> int:
             continue
         undocumented = sorted(present - documented)
         stale = sorted(documented - present)
+        missing = sorted(REQUIRED_COLUMNS.get(name, set()) - present)
+        if missing:
+            print(f"FAIL {name}: required columns absent from every row: "
+                  f"{missing}")
+            failures += 1
         if undocumented:
             print(f"FAIL {name}: fields in rows but not in the README "
                   f"table: {undocumented}")

@@ -35,6 +35,13 @@ At churn_rate = 0 the schedule is empty: the policy never leaves its
 static jitted path, and an AÇAI replay is bit-consistent with
 `make_replay_batched` on the same trace (pinned by
 tests/test_mutable_index.py).
+
+The driver is mesh-agnostic (DESIGN.md §15): an `AcaiCache(mesh=...)`
+routes the same `add_objects`/`remove_objects`/`compact` calls to owner
+shards by global-id arithmetic and serves through
+`make_mutable_step_sharded`, so sharded churn needs no driver changes —
+on a 1-device mesh the whole replay is bitwise identical to the plain
+cache (pinned by tests/test_sharded_churn.py).
 """
 
 from __future__ import annotations

@@ -537,8 +537,14 @@ class AcaiCache:
     `make_mutable_step` tail — which never retraces under churn at fixed
     capacity and enforces the invalidation invariant (tombstoned rows
     carry zero y/x mass forever, so a removed object can neither be served
-    nor re-fetched).  Not yet supported with `mesh` or with explicit
-    `candidate_fn*` escape hatches."""
+    nor re-fetched).  On a mesh with `index=None` mutation is fully
+    supported (DESIGN.md §15): slab appends and tombstones route to the
+    owning shard by global-id arithmetic, serving flips to
+    `repro.core.distributed.make_mutable_step_sharded` (candidates + live-
+    mask projection inside shard_map, bitwise the single-device mutable
+    path on a 1-device mesh), and compaction keeps the slab mesh-aligned.
+    Not supported with sharded *index backends* ("ivf_sharded") or with
+    explicit `candidate_fn*` escape hatches."""
 
     def __init__(self, catalog: jax.Array, cfg: "AcaiConfig", candidate_fn=None,
                  candidate_fn_batched=None, seed=0, mesh=None,
@@ -712,6 +718,19 @@ class AcaiCache:
         return make_step_sharded(self.cfg, self.mesh, self.catalog, batch,
                                  **self._sharded_kwargs)
 
+    def _mesh_model_size(self) -> int:
+        from repro.core.distributed import _axis_size
+
+        return _axis_size(self.mesh,
+                          self._sharded_kwargs.get("model_axis", "model"))
+
+    def _sharded_mutable_step(self, batch: int) -> Callable:
+        from repro.core.distributed import make_mutable_step_sharded
+
+        kw = {k: v for k, v in self._sharded_kwargs.items()
+              if k in ("eta_scale", "model_axis", "batch_axes", "top_a")}
+        return make_mutable_step_sharded(self.cfg, self.mesh, batch, **kw)
+
     def serve_update(self, r: jax.Array) -> StepMetrics:
         if self._res is not None or self._mutated:
             # B = 1 view of the resilient / mutable batch step
@@ -753,6 +772,19 @@ class AcaiCache:
         rs = jnp.atleast_2d(rs)
         b = rs.shape[0]
         if self._mutated:
+            if self.mesh is not None:
+                # sharded mutable serving: candidates, OMA and the live-
+                # mask projection all run inside the shard_map step; the
+                # (fixed-capacity) slab + mask are runtime args, so churn
+                # reuses the cached jit per batch size
+                step = self._mut_steps.get(b)
+                if step is None:
+                    step = self._sharded_mutable_step(b)
+                    self._mut_steps[b] = step
+                self.state, metrics = step(
+                    self.state, rs, jnp.asarray(self.catalog, jnp.float32),
+                    self.valid)
+                return metrics
             ids, d, valid = self._mut_fn(rs, self.state.x)
             step = self._mut_steps.get(b)
             if step is None:
@@ -790,10 +822,23 @@ class AcaiCache:
         if self._mutated:
             return
         if self.mesh is not None:
-            raise NotImplementedError(
-                "online catalog mutation on a sharded mesh is not "
-                "implemented yet (ROADMAP open item) — churn the "
-                "single-device cache or rebuild the sharded one")
+            if self.index is not None or "ivf" in self._sharded_kwargs:
+                raise NotImplementedError(
+                    "online catalog mutation on a sharded index backend is "
+                    "not implemented — the sharded mutable path serves "
+                    "through the exact masked scan; build the mesh cache "
+                    "with index=None (or rebuild the sharded index)")
+            if self._sharded_kwargs.get("scan_chunk"):
+                raise NotImplementedError(
+                    "online catalog mutation on a sharded mesh serves "
+                    "through the exact masked scan — drop "
+                    "sharded_kwargs['scan_chunk']")
+            cap = self.catalog.shape[0]
+            n_model = self._mesh_model_size()
+            if cap % n_model:
+                raise ValueError(
+                    f"slab capacity {cap} must divide by the mesh's "
+                    f"{n_model} model shards before mutation")
         if self._custom_fn:
             raise ValueError(
                 "AcaiCache was built with an explicit candidate_fn*: the "
@@ -805,6 +850,13 @@ class AcaiCache:
         after a successful first mutation (the static path's traced
         constants would serve the pre-mutation catalog forever)."""
         if self._mutated:
+            return
+        if self.mesh is not None:
+            # the sharded mutable step owns candidate generation inside
+            # shard_map (catalog + liveness as runtime args); there is no
+            # eager host-side candidate stage to build
+            self._mut_fn = None
+            self._mutated = True
             return
         if self.index is not None:
             from repro.index.candidates import mutable_index_candidate_fn
@@ -857,8 +909,18 @@ class AcaiCache:
             from repro.index.base import slab_append
 
             self.catalog = jnp.asarray(self.catalog, jnp.float32)
-            self.catalog, self.valid, ids = slab_append(
-                self.catalog, self.valid, self._n_slots, vectors)
+            if self.mesh is not None:
+                # owner-shard routing (DESIGN.md §15): the append splits at
+                # shard-block boundaries and each run's donated write goes
+                # to the owning shard's slice; growth stays mesh-aligned
+                from repro.core.distributed import sharded_slab_append
+
+                self.catalog, self.valid, ids = sharded_slab_append(
+                    self.catalog, self.valid, self._n_slots, vectors,
+                    self._mesh_model_size())
+            else:
+                self.catalog, self.valid, ids = slab_append(
+                    self.catalog, self.valid, self._n_slots, vectors)
         self._n_slots += len(ids)
         self._live += len(ids)
         self._sync_capacity(ids)
@@ -898,18 +960,38 @@ class AcaiCache:
                     f"remove_objects: rows {ids[~alive].tolist()} are "
                     f"already dead")
             self.catalog = jnp.asarray(self.catalog, jnp.float32)
-            self.valid = run_device(_mask_clear, self.valid,
-                                    pad_ids(ids, cap))
+            if self.mesh is not None:
+                # tombstone writes routed to the owning shard by global-id
+                # arithmetic (one donated scatter per shard touched; the
+                # P = 1 grouping is the single-device call, bitwise)
+                from repro.core.distributed import route_ids_by_owner
+
+                for _, gids in route_ids_by_owner(
+                        ids, cap, self._mesh_model_size()):
+                    self.valid = run_device(_mask_clear, self.valid,
+                                            pad_ids(gids, cap))
+            else:
+                self.valid = run_device(_mask_clear, self.valid,
+                                        pad_ids(ids, cap))
         self._live -= len(ids)
         self._enter_mutable()
         # zero the removed rows' fractional + physical mass via donated
-        # padded scatters (the invalidation invariant)
+        # padded scatters (the invalidation invariant), routed per owning
+        # shard on a mesh
         scap = self.state.y.shape[0]
-        jid = pad_ids(ids, scap)
-        self.state = CacheState(
-            run_device(_flat_set, self.state.y, jid, jnp.float32(0.0)),
-            run_device(_flat_set, self.state.x, jid, jnp.float32(0.0)),
-            self.state.t, self.state.key)
+        if self.mesh is not None:
+            from repro.core.distributed import route_ids_by_owner
+
+            groups = [g for _, g in route_ids_by_owner(
+                ids, scap, self._mesh_model_size())]
+        else:
+            groups = [ids]
+        y, x = self.state.y, self.state.x
+        for gids in groups:
+            jid = pad_ids(gids, scap)
+            y = run_device(_flat_set, y, jid, jnp.float32(0.0))
+            x = run_device(_flat_set, x, jid, jnp.float32(0.0))
+        self.state = CacheState(y, x, self.state.t, self.state.key)
 
     def refresh(self) -> None:
         """Rebuild the remote index's structures over the live rows
@@ -954,6 +1036,11 @@ class AcaiCache:
             remap = np.full(old_cap, -1, np.int32)
             remap[live] = np.arange(n_live, dtype=np.int32)
             cap = grow_capacity(0, n_live + MIN_WRITE, 1)
+            if self.mesh is not None:
+                # keep the compacted slab mesh-aligned so owner-shard
+                # arithmetic survives (a no-op for power-of-two meshes:
+                # the doubling schedule already lands on a multiple)
+                cap += (-cap) % self._mesh_model_size()
             emb_live = jnp.asarray(self.catalog,
                                    jnp.float32)[jnp.asarray(live)]
             self.catalog = jnp.pad(emb_live, ((0, cap - n_live), (0, 0)))

@@ -66,7 +66,12 @@ def capped_simplex_negentropy_topk(z: jax.Array, h, a: int) -> jax.Array:
     ztop, idx = jax.lax.top_k(z, a)
     # sum the non-top tail directly (no total-minus-top cancellation)
     tail = jnp.sum(z.at[idx].set(0.0))
-    s, _ = _negentropy_scale_from_sorted(ztop, tail, h)
+    s, ok = _negentropy_scale_from_sorted(ztop, tail, h)
+    # degenerate z (e.g. heavy churn removal leaving < h live mass splits)
+    # can leave no feasible water level; fall back to scale 1 rather than
+    # garbage — mirrored by the distributed projection so the sharded
+    # twin stays bitwise on a 1-device mesh
+    s = jnp.where(ok, s, 1.0)
     return jnp.minimum(1.0, z * s)
 
 

@@ -13,6 +13,14 @@ validity mask; `refresh` re-trains the coarse quantizer and rebuilds the
 lists over the live rows only (row ids stay stable).  The quantizer drifts
 between refreshes (new objects are binned by stale centroids), which is
 exactly the recall-vs-refresh-cost trade-off the churn bench measures.
+
+Sharded serving (DESIGN.md §15): `ivf_sharded` splits the slab row-wise
+over the mesh's `model` axis and each shard scans its own probed lists
+inside the fused sharded step.  That sharded *structure* is still
+immutable — online mutation on a mesh serves through the exact masked
+scan instead (`AcaiCache(mesh=...)` with `index=None`); teaching the
+sharded inverted lists to accept owner-routed appends is the remaining
+ROADMAP item, not a driver or policy limitation.
 """
 
 from __future__ import annotations

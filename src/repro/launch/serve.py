@@ -37,7 +37,13 @@ remove_documents), for any policy and index backend:
 multi-device path (catalog + cache state sharded over a (1, P) mesh,
 repro.core.distributed) — on hosts without accelerators it forces P
 host-platform placeholder devices, so the XLA flag must be set before any
-jax import (same discipline as launch/dryrun.py).
+jax import (same discipline as launch/dryrun.py).  Churn composes with
+the mesh (DESIGN.md §15): mutation is routed to owner shards and serving
+goes through the sharded exact masked scan, so `--churn-rate` on a mesh
+only rejects `--remote-index` (sharded index backends don't mutate
+online yet):
+
+  ... --mesh-shards 2 --churn-rate 0.2 --catalog 512
 
 The `--remote-fault-*` flags inject a deterministic fault schedule into
 the remote tier and route every request through the resilient serving
@@ -273,10 +279,11 @@ def main():
 
     if args.churn_rate < 0 or not 0.0 < args.churn_warm <= 1.0:
         raise SystemExit("--churn-rate must be >= 0 and --churn-warm in (0, 1]")
-    if args.churn_rate > 0 and args.mesh_shards > 1:
+    if args.churn_rate > 0 and args.mesh_shards > 1 and index_spec is not None:
         raise SystemExit(
-            "--churn-rate needs the single-device cache (online mutation "
-            "on a sharded mesh is a ROADMAP open item)")
+            "--churn-rate on a sharded mesh serves through the exact "
+            "masked scan (DESIGN.md §15): drop --remote-index (mutating a "
+            "sharded index backend online is a ROADMAP open item)")
 
     # resilient remote tier (DESIGN.md §11): any fault/deadline/hedge flag
     # switches the semantic-cache tier onto the resilient serving path
@@ -359,6 +366,11 @@ def main():
     # window, the mutable-catalog regime of DESIGN.md §10)
     n_warm = (max(int(round(args.churn_warm * args.catalog)), 1)
               if args.churn_rate > 0 else args.catalog)
+    if mesh is not None and n_warm % args.mesh_shards:
+        # the sharded slab keeps its capacity a multiple of the mesh
+        # (owner-shard routing is block arithmetic); round the warm
+        # window up — --catalog already divides by --mesh-shards
+        n_warm += args.mesh_shards - n_warm % args.mesh_shards
     lm = SemanticCachedLM(params, cfg, catalog[:n_warm], payloads[:n_warm],
                           gen_fn, h=args.cache_size, k=4, mesh=mesh,
                           index_spec=index_spec, policy_spec=policy_spec,

@@ -186,10 +186,16 @@ def test_acai_cache_mutation_guards(setup, cache_cfg):
     cache = policy.AcaiCache(cat, cache_cfg, candidate_fn_batched=fn, seed=0)
     with pytest.raises(ValueError, match="explicit candidate_fn"):
         cache.add_objects(newv[:2])
+    # exact sharded mutation is supported (tests/test_sharded_churn.py);
+    # only configurations the exact masked scan cannot honor still reject:
+    # approximate sharded structures (ivf / scan_chunk) have no mutable
+    # sharded serving path
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    sharded = policy.AcaiCache(cat, cache_cfg, mesh=mesh, seed=0)
+    sharded = policy.AcaiCache(cat, cache_cfg, mesh=mesh, seed=0,
+                               sharded_kwargs={"scan_chunk": 64})
     with pytest.raises(NotImplementedError, match="sharded"):
         sharded.remove_objects([0])
+    assert not sharded._mutated  # rejected mutation leaves the static path
 
     # a rejected mutation leaves the cache on the static path with its
     # live-count intact (exact path validates duplicates/range/aliveness
